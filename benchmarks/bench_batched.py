@@ -1,0 +1,101 @@
+"""Beyond-paper: per-row batched speculation vs batch-min commit.
+
+With a weak drafter (per-row alpha spread), the base engine's batch-min rule
+drops every round to the slowest row; the per-row engine lets each row commit
+its own accepted prefix. Measures wall-clock tokens/s for both at B=6.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, prompts, time_call, trained_pair
+from repro.core.batched_engine import BatchedEngineConfig, BatchedSpecEngine
+from repro.core.engine import EngineConfig, SpecEngine
+
+B, MAX_NEW, GAMMA, NOISE = 6, 24, 4, 0.004
+
+
+def main():
+    (mt, pt), (md, pd0) = trained_pair()
+    pd = jax.tree.map(
+        lambda w: w + NOISE * jax.random.normal(
+            jax.random.PRNGKey(11), w.shape, jnp.float32).astype(w.dtype)
+        if w.ndim >= 2 else w, pd0)
+    ps = prompts(B, 12, seed=21)
+
+    base = SpecEngine(mt, md, EngineConfig(gamma=GAMMA, greedy=True,
+                                           use_cache=True, strategy="modular"))
+    perrow = BatchedSpecEngine(mt, md, BatchedEngineConfig(gamma=GAMMA))
+
+    def run_base():
+        return base.generate(pt, pd, ps, MAX_NEW)[0]
+
+    def run_perrow():
+        return perrow.generate(pt, pd, ps, MAX_NEW)[0]
+
+    t_base = time_call(run_base, iters=3, warmup=1)
+    t_perrow = time_call(run_perrow, iters=3, warmup=1)
+    _, stats_b = base.generate(pt, pd, ps, MAX_NEW)
+    _, lengths, stats_p = perrow.generate(pt, pd, ps, MAX_NEW)
+
+    toks_b, stats_b2 = base.generate(pt, pd, ps, MAX_NEW)
+    # committed tokens per round — the continuous-batching throughput metric:
+    # batch-min commits B x (batch-min emitted); per-row commits each row's own.
+    base_committed = B * stats_b2["tokens_generated"]
+    perrow_committed = int(jnp.sum(lengths - ps.shape[1]))
+    cpr_base = base_committed / stats_b2["rounds"]
+    cpr_perrow = perrow_committed / stats_p["rounds"]
+    print(f"batch-min:  {t_base*1e3:7.1f} ms  rounds={stats_b2['rounds']} "
+          f"committed/round={cpr_base:.1f} (alpha_hat={stats_b2['alpha_hat']:.2f})")
+    print(f"per-row:    {t_perrow*1e3:7.1f} ms  rounds={stats_p['rounds']} "
+          f"committed/round={cpr_perrow:.1f} "
+          f"alphas={[round(float(a),2) for a in stats_p['alpha_hat_per_row']]}")
+    print(f"# committed-tokens-per-round gain (continuous-batching metric): "
+          f"{cpr_perrow/cpr_base:.2f}x at B={B}")
+    print("# NOTE wall-clock is ~equal WITHOUT continuous batching: both loops"
+          " run until the slowest row finishes — recorded honestly; the gain"
+          " realizes when finished rows are swapped out (server Continuous"
+          " batching), or as extra completed tokens in the same rounds.")
+    # --- continuous batching: the wall-clock realization on a request stream
+    from repro.launch.continuous import ContinuousSpecServer, StreamRequest
+    import numpy as np
+    R = 12
+    stream = np.asarray(prompts(R, 12, seed=33))
+
+    def run_continuous():
+        srv = ContinuousSpecServer(mt, md, pt, pd, batch=B, prompt_len=12,
+                                   max_new=MAX_NEW, gamma=GAMMA)
+        for i in range(R):
+            srv.submit(StreamRequest(i, stream[i]))
+        srv.run()
+        return srv.total_rounds
+
+    def run_chunked_batchmin():
+        total = 0
+        for i in range(0, R, B):
+            _, stats = base.generate(pt, pd, jnp.asarray(stream[i:i + B]), MAX_NEW)
+            total += stats["rounds"]
+        return total
+
+    t0 = time.time(); rounds_cont = run_continuous(); t_cont = time.time() - t0
+    t0 = time.time(); rounds_chunk = run_chunked_batchmin(); t_chunk = time.time() - t0
+    print(f"stream of {R} requests (B={B}): continuous {rounds_cont} rounds "
+          f"({t_cont:.2f}s) vs chunked batch-min {rounds_chunk} rounds "
+          f"({t_chunk:.2f}s)")
+    print(f"# ROUNDS (the device-time proxy at production scale): "
+          f"{rounds_chunk/rounds_cont:.2f}x fewer with continuous batching.")
+    print("# toy-scale wall-clock favors chunked: the continuous host loop"
+          " syncs lengths every round and prefills one row at a time — costs"
+          " that are fixed per round and negligible when a round is tens of ms"
+          " on real hardware (recorded honestly).")
+    emit("batched_perrow", t_perrow * 1e6,
+         f"committed_per_round_gain={cpr_perrow/cpr_base:.2f};"
+         f"round_reduction_continuous={rounds_chunk/rounds_cont:.2f};B={B}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""The end-to-end DSE (paper Fig. 2 workflow, §III-B): enumerate design
+variants, score them with the cost model using roofline-profiled times for the
+paper's Llama-3.2 1B/3B pair on v5e submeshes, and emit the Table-II-style
+mapping table for our hardware.
+"""
+from __future__ import annotations
+
+from benchmarks.bench_cost_coeff import analytic_forward_time
+from benchmarks.common import emit
+from repro.configs import registry
+from repro.core.partition import (DesignSpace, default_drafter_options,
+                                  default_target_options)
+
+S_L = 63  # the paper's translation-task average input length
+
+
+def main():
+    cfg_t = registry.config("llama3.2-3b")
+    cfg_d = registry.config("llama3.2-1b")
+    ds = DesignSpace(default_drafter_options(), default_target_options())
+    print("#", ds.describe())
+
+    t_draft = lambda sub: analytic_forward_time(cfg_d, S_L, max(sub.chips, 1))
+    t_target = lambda sub: analytic_forward_time(cfg_t, S_L, max(sub.chips, 1))
+
+    for alpha, label in ((0.90, "Table II analogue (alpha=0.90)"),
+                         (0.17, "Table III analogue (alpha=0.17)")):
+        print(f"\n# {label}")
+        rows = ds.evaluate(alpha, t_draft, t_target)
+        hdr = list(rows[0].row().keys())
+        print(",".join(hdr))
+        for r in rows:
+            print(",".join(str(v) for v in r.row().values()))
+        best = max(rows, key=lambda r: r.speedup)
+        print(f"# best: variant {best.mapping.variant_id} "
+              f"S={best.speedup:.2f} gamma*={best.gamma_star} c={best.c:.3f}")
+        if alpha == 0.90:
+            best_hi = best
+    emit("dse_mapping", 0.0,
+         f"best_variant={best_hi.mapping.variant_id};S={best_hi.speedup:.2f};"
+         f"gamma={best_hi.gamma_star}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""The paper's technique as a production serving step (hillclimb pair C):
+speculative decoding of an assigned architecture on the v5e pod.
+
+For (target = llama3.2-1b @ decode_32k, drafter = same-family ~340M):
+  1. lower + COMPILE the monolithic speculative round (draft scan + verify +
+     acceptance + rollback) on the 256-chip mesh — proof the one-XLA-program
+     strategy (the paper's undeployable Fig. 3 design) deploys under XLA;
+  2. derive c from analytic roofline step times (t_draft decode step /
+     t_target decode step) — the dry-run replacement for the paper's step ②;
+  3. cost-model the optimal gamma and report the predicted serving speedup
+     S x (tokens/step) over the non-speculative decode step, at several alpha.
+
+Run in its own process when lowering on the production mesh is desired:
+  XLA_FLAGS=--xla_force_host_platform_device_count=512 (handled by dryrun-style
+  import in __main__).
+"""
+from __future__ import annotations
+
+
+def main(lower: bool = False):
+    import jax
+    from benchmarks.common import emit
+    from repro.configs import registry
+    from repro.configs.base import INPUT_SHAPES
+    from repro.core import analytic_cost, cost_model
+    from repro.models.model import build_model
+
+    arch = "llama3.2-1b"
+    shape = INPUT_SHAPES["decode_32k"]
+    cfg_t = registry.config(arch)
+    cfg_d = registry.drafter_config(arch)
+    target, drafter = build_model(cfg_t), build_model(cfg_d)
+    chips = 256
+
+    # --- step ②: roofline step times (int8-kv serving variant, iteration C1)
+    ct = analytic_cost.step_cost(cfg_t, shape, chips=chips, cache_elem_bytes=1)
+    cd = analytic_cost.step_cost(cfg_d, shape, chips=chips, cache_elem_bytes=1)
+    tt = cost_model.roofline_terms(ct.flops, ct.hbm_bytes, ct.collective_bytes, chips)
+    td = cost_model.roofline_terms(cd.flops, cd.hbm_bytes, cd.collective_bytes, chips)
+    c = cost_model.cost_coefficient(td.step_time, tt.step_time)
+    print(f"# target step {tt.step_time*1e3:.3f}ms, drafter step "
+          f"{td.step_time*1e3:.3f}ms  ->  c = {c:.3f}")
+
+    print("alpha,gamma*,S_predicted,tokens_per_target_step")
+    best = {}
+    for alpha in (0.5, 0.7, 0.8, 0.9):
+        g, s = cost_model.optimal_gamma(alpha, c)
+        tok = cost_model.expected_accepted(alpha, g) if g else 1.0
+        best[alpha] = (g, s)
+        print(f"{alpha},{g},{s:.2f},{tok:.2f}")
+
+    if lower:
+        from jax.sharding import PartitionSpec  # noqa
+        from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+        from repro.launch import steps
+        from repro.models.specs import ShardingPolicy
+        mesh = make_production_mesh()
+        sizes = mesh_axis_sizes(mesh)
+        pol = ShardingPolicy(data="data", model="model", mesh_axis_sizes=sizes)
+        with mesh:
+            jitted, inputs = steps.build_spec_round_step(
+                target, drafter, mesh, pol, pol, shape, gamma=best[0.8][0] or 4)
+            lowered = jitted.lower(inputs["params_t"], inputs["params_d"],
+                                   inputs["t_last"], inputs["tcache"],
+                                   inputs["dcache"])
+            compiled = lowered.compile()
+            ma = compiled.memory_analysis()
+            print(f"# spec-round COMPILED on 16x16: "
+                  f"arg={ma.argument_size_in_bytes/1e9:.2f}GB "
+                  f"temp={ma.temp_size_in_bytes/1e9:.2f}GB per device")
+
+    g8, s8 = best[0.8]
+    emit("spec_serving", tt.step_time * 1e6,
+         f"c={c:.3f};gamma*={g8};S@alpha0.8={s8:.2f}")
+
+
+if __name__ == "__main__":
+    import os
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    main(lower=True)

@@ -1,0 +1,70 @@
+"""Paper Tables II & III: cost-model speedup estimates per design variant.
+
+Reproduces both tables exactly from Eq. (1). The paper gives alpha (0.90 p90 /
+0.17 median) and reports (speedup, gamma) per variant; variant-1's cost
+coefficient is quoted as ~0.41 (Fig. 6b, S_L=63) with homogeneous 1-core c~0.80
+(Fig. 6a). The remaining variants' c values are recovered by inverting Eq. (1)
+against the reported speedups — the bench then checks our implementation emits
+the paper's rows (speedup to 2 decimals, same use/skip decisions).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import cost_model as cm
+
+# paper Table II rows: (variant, gamma_paper, speedup_paper, heterogeneous)
+TABLE2 = [(1, 5, 1.68, True), (2, 2, 1.10, True), (3, 0, 1.00, None),
+          (4, 0, 1.00, None), (5, 1, 1.02, False), (6, 0, 1.00, None)]
+ALPHA_HI, ALPHA_LO = 0.90, 0.17
+
+
+def invert_c(alpha, gamma, speedup):
+    """c such that S(alpha, gamma, c) == speedup."""
+    if gamma == 0:
+        return None
+    num = (1 - alpha ** (gamma + 1)) / (1 - alpha)
+    return (num / speedup - 1.0) / gamma
+
+
+def main():
+    print("# Table II reproduction (alpha=0.90, S_L=63)")
+    print("variant,gamma_paper,c_inverted,S_ours,S_paper,match")
+    all_match = True
+    cs = {}
+    for var, g, s_paper, het in TABLE2:
+        if g == 0:
+            # 'No speculation' rows: any c >= alpha reproduces S=1
+            c = 1.2
+            cs[var] = c
+            g_star, s_ours = cm.optimal_gamma(ALPHA_HI, c)
+            ok = g_star == 0 and abs(s_ours - 1.0) < 1e-9
+        else:
+            c = invert_c(ALPHA_HI, g, s_paper)
+            cs[var] = c
+            s_ours = cm.speedup(ALPHA_HI, g, c)
+            ok = abs(s_ours - s_paper) < 5e-3
+            # the paper's gamma must be (near-)optimal under Eq 1
+            g_star, s_star = cm.optimal_gamma(ALPHA_HI, c)
+            ok = ok and (s_star - s_ours) / s_ours < 0.02
+        all_match &= ok
+        print(f"{var},{g},{'' if c is None else round(c,3)},{s_ours:.2f},{s_paper:.2f},{ok}")
+
+    print("\n# Table III reproduction (alpha=0.17)")
+    print("variant,use_speculation,S")
+    t3_ok = True
+    for var, c in cs.items():
+        g_star, s = cm.optimal_gamma(ALPHA_LO, c)
+        # paper: NO variant benefits at alpha=0.17
+        row_ok = (g_star == 0 and s == 1.0) if c >= ALPHA_LO else True
+        t3_ok &= row_ok
+        print(f"{var},{'No' if g_star == 0 else f'Yes(g={g_star})'},{s:.2f}")
+
+    us = time_call(lambda: cm.optimal_gamma(0.9, 0.35), iters=50) * 1e6
+    emit("speedup_tables", us, f"table2_match={all_match};table3_all_no={t3_ok}")
+    assert all_match and t3_ok
+
+
+if __name__ == "__main__":
+    main()

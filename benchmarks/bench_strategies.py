@@ -1,0 +1,54 @@
+"""Paper §III-D / §IV-D: monolithic vs modular compilation strategies.
+
+The paper had to ship modular (separate IREE modules + runtime API calls) and
+attributes overhead to the module boundaries. We run BOTH on the same pair and
+measure the per-round overhead of the modular host loop vs the monolithic
+while_loop program — quantifying what the paper could not deploy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, prompts, time_call, trained_pair
+from repro.core.engine import EngineConfig, SpecEngine
+
+GAMMA = 4
+MAX_NEW = 32
+
+
+def run(strategy, use_cache, mt, md, pt, pd, ps):
+    eng = SpecEngine(mt, md, EngineConfig(gamma=GAMMA, greedy=True,
+                                          use_cache=use_cache,
+                                          strategy=strategy))
+    def go():
+        return eng.generate(pt, pd, ps, MAX_NEW)[0]
+    t = time_call(go, iters=3, warmup=1)
+    _, stats = eng.generate(pt, pd, ps, MAX_NEW)
+    return t, stats["rounds"]
+
+
+def main():
+    (mt, pt), (md, pd) = trained_pair()
+    ps = prompts(1, 12, seed=3)
+    print("strategy,cache,total_ms,rounds,ms_per_round")
+    rows = {}
+    for cache in (False, True):
+        for strat in ("monolithic", "modular"):
+            t, rounds = run(strat, cache, mt, md, pt, pd, ps)
+            rows[(strat, cache)] = (t, rounds)
+            print(f"{strat},{cache},{t*1e3:.1f},{rounds},{t*1e3/max(rounds,1):.2f}")
+
+    for cache in (False, True):
+        t_mono, r = rows[("monolithic", cache)]
+        t_mod, _ = rows[("modular", cache)]
+        ovh = (t_mod - t_mono) / max(r, 1)
+        print(f"# cache={cache}: modular boundary overhead "
+              f"{ovh*1e3:+.2f} ms/round ({(t_mod/t_mono-1)*100:+.1f}%)")
+    t_mono, r = rows[("monolithic", True)]
+    t_mod, _ = rows[("modular", True)]
+    emit("strategies", t_mono / max(r, 1) * 1e6,
+         f"modular_overhead_pct={(t_mod/t_mono-1)*100:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Paper Fig. 7: predicted vs MEASURED acceleration as a function of alpha,
+for several draft lengths gamma — the paper's silicon-validation experiment,
+run on this host's real silicon (CPU) with the trained pair.
+
+alpha is swept by injecting weight noise into the drafter (distributional
+mismatch knob, standing in for the paper's quantization sweep). For each point:
+  * measured S  = wall-clock(autoregressive target) / wall-clock(speculative)
+  * predicted S = Eq. (1) with the MEASURED c (single-forward profiling, step ②)
+and we report the mean |deviation| — the paper's headline validation number
+was 4% on the i.MX95.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, prompts, time_call, trained_pair
+from repro.core import cost_model as cm
+from repro.core.engine import EngineConfig, SpecEngine, autoregressive_generate
+
+GAMMAS = (2, 5)
+NOISE = (0.0, 0.002, 0.004, 0.008, 0.015, 0.05)
+MAX_NEW = 32
+PROMPT_LEN = 12
+
+
+def noisy(params, sigma, seed=11):
+    if sigma == 0:
+        return params
+    return jax.tree.map(
+        lambda w: w + sigma * jax.random.normal(
+            jax.random.PRNGKey(seed), w.shape, jnp.float32).astype(w.dtype)
+        if w.ndim >= 2 else w, params)
+
+
+def main():
+    (mt, pt), (md, pd0) = trained_pair()
+    ps = prompts(1, PROMPT_LEN, seed=7)
+
+    # step ②: profile c — one DEPLOYED draft/verify step each (forward +
+    # argmax/sampling) at the engine's ACTUAL buffer length (the paper profiles
+    # at fixed S_L and attributes the residual to deployment overhead; we
+    # profile the deployed shape directly)
+    S_work = PROMPT_LEN + MAX_NEW + max(GAMMAS) + 2
+    toks = prompts(1, S_work)
+    f_t = jax.jit(lambda p, t: jnp.argmax(mt.apply(p, t)[0][:, -1], -1))
+    f_d = jax.jit(lambda p, t: jnp.argmax(md.apply(p, t)[0][:, -1], -1))
+    t_target = time_call(f_t, pt, toks, iters=10)
+    t_draft = time_call(f_d, pd0, toks, iters=10)
+    c = cm.cost_coefficient(t_draft, t_target)
+    print(f"# profiled: t_target={t_target*1e3:.2f}ms t_draft={t_draft*1e3:.2f}ms c={c:.3f}")
+
+    # autoregressive baseline (target-only, no cache — paper mode)
+    def ar():
+        return autoregressive_generate(mt, pt, ps, MAX_NEW)
+    t_ar = time_call(ar, iters=5, warmup=2)
+
+    print("gamma,noise,alpha_hat,S_measured,S_predicted,deviation,alpha_shift")
+    devs = []
+    shifts = []
+    for gamma in GAMMAS:
+        for sigma in NOISE:
+            pd = noisy(pd0, sigma)
+            # modular strategy — the paper's deployed configuration (its 4%
+            # number was measured on the modular pipeline); on XLA-CPU the
+            # monolithic while_loop adds ~3ms/round (see bench_strategies)
+            eng = SpecEngine(mt, md, EngineConfig(gamma=gamma, greedy=True,
+                                                  use_cache=False,
+                                                  strategy="modular"))
+            # measure
+            def spec():
+                return eng.generate(pt, pd, ps, MAX_NEW)[0]
+            t_spec = time_call(spec, iters=5, warmup=2)
+            _, stats = eng.generate(pt, pd, ps, MAX_NEW)
+            alpha = stats["alpha_hat"]
+            s_meas = t_ar / t_spec
+            s_pred = cm.speedup(alpha, gamma, c)
+            dev = abs(s_meas - s_pred) / s_pred
+            devs.append(dev)
+            # the paper's Fig-7 metric: horizontal alpha-shift — what alpha'
+            # would Eq (1) need to predict the MEASURED S? (paper: ~4%)
+            grid = np.linspace(0.0, 1.0, 2001)
+            s_grid = np.array([cm.speedup(a, gamma, c) for a in grid])
+            a_prime = float(grid[np.argmin(np.abs(s_grid - s_meas))])
+            shift = abs(a_prime - alpha)
+            shifts.append(shift)
+            print(f"{gamma},{sigma},{alpha:.2f},{s_meas:.2f},{s_pred:.2f},"
+                  f"{dev*100:.1f}%,{shift*100:.1f}%")
+
+    mean_dev = float(np.mean(devs))
+    mean_shift = float(np.mean(shifts))
+    emit("fig7_validation", t_ar * 1e6,
+         f"c={c:.3f};mean_S_deviation={mean_dev*100:.1f}%;"
+         f"alpha_shift={mean_shift*100:.1f}%;paper_alpha_shift=4%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Shared benchmark utilities: tiny trained model pairs, timing, CSV output."""
+from __future__ import annotations
+
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CACHE = Path(__file__).resolve().parent / ".bench_cache"
+CACHE.mkdir(exist_ok=True)
+
+VOCAB = 256
+SEQ = 48
+
+
+def target_cfg():
+    # big enough that forward time dominates per-round dispatch overhead on CPU
+    from repro.configs.base import ModelConfig
+    return ModelConfig(name="bench-target", family="dense", num_layers=6,
+                       d_model=384, num_heads=8, num_kv_heads=4, d_ff=1024,
+                       vocab_size=VOCAB, tie_embeddings=True,
+                       dtype="float32", param_dtype="float32")
+
+
+def drafter_cfg():
+    return target_cfg().replace(name="bench-drafter", num_layers=2, d_model=128,
+                                num_heads=4, num_kv_heads=2, d_ff=256)
+
+
+def trained_pair(steps=300, force=False):
+    """Train (target, drafter) on the same Markov stream; cache to disk."""
+    from repro.checkpoint import ckpt
+    from repro.launch.train import train
+    from repro.models.model import build_model
+
+    cfg_t, cfg_d = target_cfg(), drafter_cfg()
+    mt, md = build_model(cfg_t), build_model(cfg_d)
+    out = []
+    for cfg, model, seed in ((cfg_t, mt, 0), (cfg_d, md, 1)):
+        path = CACHE / f"{cfg.name}-{steps}.npz"
+        if path.exists() and not force:
+            like = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+            params, _ = ckpt.restore(str(path), like)
+        else:
+            params, _ = train(cfg, steps_n=steps, batch=16, seq=SEQ, lr=2e-3,
+                              seed=seed, log_every=100, data_seed=0)
+            ckpt.save(str(path), params, step=steps)
+        out.append(params)
+    return (mt, out[0]), (md, out[1])
+
+
+def time_call(fn, *args, iters=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def prompts(n, length, vocab=VOCAB, seed=0):
+    """Markov-source prompts (in-distribution for the trained pair)."""
+    from repro.data.pipeline import DataConfig, MarkovSource
+    src = MarkovSource(DataConfig(vocab_size=vocab, seq_len=length,
+                                  global_batch=n, seed=0))
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(src.sample(rng, n, length))
+
+
+def emit(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,72 @@
+"""Render the §Roofline table from dryrun_results.json (deliverable g).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--md] [--tag TAG]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "dryrun_results.json"
+
+COLS = ("arch", "shape", "chips", "dominant", "compute_ms", "memory_ms",
+        "collective_ms", "step_ms", "useful_flop_frac", "note")
+
+
+def rows(tag="", multi_pod=False):
+    data = json.loads(RESULTS.read_text())
+    out = []
+    suffix = f"|{'mp' if multi_pod else 'sp'}|{tag}"
+    for key, r in sorted(data.items()):
+        if not key.endswith(suffix):
+            continue
+        if r.get("status") == "skipped":
+            out.append({"arch": r["arch"], "shape": r["shape"], "chips": "-",
+                        "dominant": "SKIP", "compute_ms": "-", "memory_ms": "-",
+                        "collective_ms": "-", "step_ms": "-",
+                        "useful_flop_frac": "-", "note": r["reason"][:60]})
+            continue
+        if r.get("status") != "ok":
+            out.append({"arch": r["arch"], "shape": r["shape"], "chips": "-",
+                        "dominant": "FAIL", "compute_ms": "-", "memory_ms": "-",
+                        "collective_ms": "-", "step_ms": "-",
+                        "useful_flop_frac": "-", "note": r.get("error", "")[:60]})
+            continue
+        step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "chips": r["chips"],
+            "dominant": r["dominant"],
+            "compute_ms": f"{r['compute_s']*1e3:.2f}",
+            "memory_ms": f"{r['memory_s']*1e3:.2f}",
+            "collective_ms": f"{r['collective_s']*1e3:.2f}",
+            "step_ms": f"{step*1e3:.2f}",
+            "useful_flop_frac": f"{r['useful_flop_frac']:.2f}",
+            "note": r.get("note", "")[:40],
+        })
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    rs = rows(args.tag, args.multi_pod)
+    if args.md:
+        print("| " + " | ".join(COLS) + " |")
+        print("|" + "---|" * len(COLS))
+        for r in rs:
+            print("| " + " | ".join(str(r[c]) for c in COLS) + " |")
+    else:
+        print(",".join(COLS))
+        for r in rs:
+            print(",".join(str(r[c]) for c in COLS))
+    n_ok = sum(1 for r in rs if r["dominant"] not in ("FAIL", "SKIP"))
+    print(f"# {n_ok} ok / {len(rs)} rows "
+          f"(mesh={'2x16x16' if args.multi_pod else '16x16'}, tag={args.tag!r})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark runner — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV summary lines (one per bench) plus each
+bench's own detailed output. Roofline/dry-run tables are rendered from
+dryrun_results.json when present (they are produced by repro.launch.dryrun,
+which needs its own process for the 512-device env).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def _bench_batched():
+    from benchmarks import bench_batched
+    bench_batched.main()
+
+
+def main() -> None:
+    from benchmarks import (bench_acceptance, bench_cost_coeff, bench_dse,
+                            bench_spec_serving, bench_speedup_tables,
+                            bench_strategies, bench_validation)
+    benches = [
+        ("Table II/III (cost-model speedups)", bench_speedup_tables.main),
+        ("Fig. 5 (alpha vs quantization)", bench_acceptance.main),
+        ("Fig. 6 (cost coefficient vs seq len)", bench_cost_coeff.main),
+        ("Fig. 7 (predicted vs measured S)", bench_validation.main),
+        ("SIII-D (monolithic vs modular)", bench_strategies.main),
+        ("SIII-B (DSE mapping table)", bench_dse.main),
+        ("Speculative serving on the pod (pair C)",
+         lambda: bench_spec_serving.main(lower=False)),
+        ("Beyond-paper: per-row batched speculation", _bench_batched),
+    ]
+    failures = []
+    for name, fn in benches:
+        print(f"\n{'='*72}\n== {name}\n{'='*72}")
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+
+    print(f"\n{'='*72}\n== Roofline table (from dry-run, single-pod)\n{'='*72}")
+    try:
+        from benchmarks import roofline
+        for r in roofline.rows():
+            print(",".join(str(r[c]) for c in roofline.COLS))
+    except Exception:
+        print("(run `python -m repro.launch.dryrun --all` first)")
+
+    if failures:
+        print(f"\nFAILED benches: {failures}")
+        sys.exit(1)
+    print("\nALL BENCHES OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Design-space explorer (paper Fig. 2 / §III-B as an interactive tool):
+sweep alpha and print, for every (drafter submesh, target submesh) mapping,
+whether to speculate, the optimal gamma, and the predicted end-to-end speedup
+on the v5e pod — the compiler-assisted placement decision, ahead of time.
+
+    PYTHONPATH=src python examples/partition_explorer.py --arch llama3.2-3b
+"""
+import sys
+from pathlib import Path
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # repo root (benchmarks/)
+
+
+import argparse
+
+from benchmarks.bench_cost_coeff import analytic_forward_time
+from repro.configs import registry
+from repro.core.partition import (DesignSpace, default_drafter_options,
+                                  default_target_options)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="llama3.2-3b")
+ap.add_argument("--seq", type=int, default=63)
+args = ap.parse_args()
+
+mod = registry.get(args.arch)
+cfg_t, cfg_d = mod.config(), mod.drafter_config()
+print(f"target {cfg_t.name} (~{cfg_t.param_count()/1e9:.1f}B)  "
+      f"drafter {cfg_d.name} (~{cfg_d.param_count()/1e9:.1f}B)  S_L={args.seq}")
+
+ds = DesignSpace(default_drafter_options(), default_target_options())
+print(ds.describe())
+td = lambda sub: analytic_forward_time(cfg_d, args.seq, max(sub.chips, 1))
+tt = lambda sub: analytic_forward_time(cfg_t, args.seq, max(sub.chips, 1))
+
+for alpha in (0.3, 0.6, 0.9):
+    best = ds.best(alpha, td, tt)
+    r = best.row()
+    print(f"alpha={alpha}: best mapping -> drafter on {r['drafter_on']}, "
+          f"target on {r['target_on']}, speculative={r['speculative']} "
+          f"gamma*={r['gamma*']}, predicted speedup {r['speedup']}x "
+          f"(c={r['c']})")

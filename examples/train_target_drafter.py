@@ -1,0 +1,48 @@
+"""End-to-end training driver (deliverable b): train a ~small target for a few
+hundred steps on the synthetic Markov stream, train an aligned drafter, then
+measure the acceptance rate between them — the paper's 'training-data
+alignment benefits drafting' premise (§IV), reproduced from scratch.
+
+    PYTHONPATH=src python examples/train_target_drafter.py [--steps 300]
+"""
+import sys
+from pathlib import Path
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # repo root (benchmarks/)
+
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import drafter_cfg, prompts, target_cfg
+from repro.core.engine import EngineConfig, SpecEngine
+from repro.launch.train import train
+from repro.models.model import build_model
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+args = ap.parse_args()
+
+cfg_t, cfg_d = target_cfg(), drafter_cfg()
+print(f"target  {cfg_t.name}: ~{cfg_t.param_count():,} params")
+print(f"drafter {cfg_d.name}: ~{cfg_d.param_count():,} params")
+
+params_t, losses_t = train(cfg_t, steps_n=args.steps, batch=16, seq=48,
+                           lr=2e-3, seed=0, log_every=100)
+params_d, losses_d = train(cfg_d, steps_n=args.steps, batch=16, seq=48,
+                           lr=2e-3, seed=1, log_every=100)
+assert losses_t[-1] < losses_t[0] * 0.5, "target did not learn"
+assert losses_d[-1] < losses_d[0] * 0.5, "drafter did not learn"
+
+target, drafter = build_model(cfg_t), build_model(cfg_d)
+eng = SpecEngine(target, drafter, EngineConfig(gamma=4, greedy=True,
+                                               use_cache=False))
+alphas = []
+ps = prompts(6, 12, seed=9)
+for i in range(6):
+    _, stats = eng.generate(params_t, params_d, ps[i:i + 1], 24)
+    alphas.append(stats["alpha_hat"])
+print(f"final losses: target {losses_t[-1]:.3f}, drafter {losses_d[-1]:.3f}")
+print(f"acceptance rate over 6 prompts: median {np.median(alphas):.2f} "
+      f"(aligned training data -> usable alpha, as §IV argues)")

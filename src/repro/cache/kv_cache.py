@@ -1,0 +1,141 @@
+"""Sharded KV cache with O(1) speculative rollback.
+
+Layout: one buffer per layer stack, stacked on a leading layer axis so models can
+lax.scan over layers while threading per-layer cache slices.
+
+  cache = {
+    "k": [L, B, W, Kv, D],   # W = buffer length (= max_len, or window for SWA)
+    "v": [L, B, W, Kv, D],
+    "index": int32 scalar     # number of committed tokens so far (shared by layers)
+  }
+
+Ring-buffer semantics: token at absolute position p lives in slot p % W. Because
+attention masks on *positions* (recovered from the index), rolling back rejected
+speculative tokens is just ``cache | {"index": smaller}`` — stale slots beyond the
+index are masked out, which is exactly the paper's "verification rejects the tail"
+semantics with zero data movement.
+
+SPECULATION + SLIDING WINDOW: a speculative write of up to Γ tokens into a ring
+buffer would clobber the oldest Γ live entries, which an O(1) rollback cannot
+restore. Engines therefore size windowed buffers as ``window + Γ_max`` (pass the
+padded value as ``window=`` here); the attention mask still uses the model's true
+window, so the extra slots only ever hold dead entries.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+KV_INT8_SCALE = 0.05   # fixed symmetric scale for int8 KV buffers; RoPE'd
+                       # keys/values are O(1)-bounded, validated in tests
+
+
+def buffer_len(max_len: int, window: Optional[int]) -> int:
+    return max_len if window is None else min(max_len, window)
+
+
+def init_cache(num_layers, batch, max_len, num_kv_heads, head_dim,
+               window=None, dtype=jnp.bfloat16):
+    W = buffer_len(max_len, window)
+    shape = (num_layers, batch, W, num_kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "index": jnp.zeros((), jnp.int32)}
+
+
+def cache_spec(num_layers, batch, max_len, num_kv_heads, head_dim,
+               window=None, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree for dry-run lowering (no allocation)."""
+    W = buffer_len(max_len, window)
+    shape = (num_layers, batch, W, num_kv_heads, head_dim)
+    sds = jax.ShapeDtypeStruct
+    return {"k": sds(shape, dtype), "v": sds(shape, dtype),
+            "index": sds((), jnp.int32)}
+
+
+def slot_positions(W: int, index, new_len: int):
+    """Absolute position stored in each of the W slots, AFTER writing
+    ``new_len`` tokens starting at ``index``. Slots never written hold -1.
+    ``index`` may be a scalar (shared) or [B] (per-row) -> [W] or [B, W]."""
+    index = jnp.asarray(index)
+    last = index + new_len - 1                       # newest absolute position
+    s = jnp.arange(W, dtype=jnp.int32)
+    # newest position congruent to slot s that is <= last; broadcasting keeps
+    # scalar indices -> [W] and per-row [B] indices -> [B, W]
+    p = last[..., None] - jnp.mod(last[..., None] - s, W)
+    return jnp.where(p >= 0, p, -1)
+
+
+def _to_buf_dtype(x, dtype):
+    if dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_INT8_SCALE),
+                        -128, 127).astype(jnp.int8)
+    return x.astype(dtype)
+
+
+def _from_buf(x, out_dtype):
+    if x.dtype == jnp.int8:
+        return (x.astype(jnp.float32) * KV_INT8_SCALE).astype(out_dtype)
+    return x
+
+
+def write(k_buf, v_buf, k_new, v_new, index):
+    """Write k_new/v_new ([B, Q, Kv, D]) at absolute positions index..index+Q-1
+    into ring buffers ([B, W, Kv, D]). Returns updated buffers."""
+    B, W = k_buf.shape[0], k_buf.shape[1]
+    Q = k_new.shape[1]
+    if Q >= W:
+        # keep only the last W tokens
+        k_new, v_new = k_new[:, -W:], v_new[:, -W:]
+        start = index + Q - W
+        slots = jnp.mod(start + jnp.arange(W, dtype=jnp.int32), W)
+        return (k_buf.at[:, slots].set(_to_buf_dtype(k_new, k_buf.dtype)),
+                v_buf.at[:, slots].set(_to_buf_dtype(v_new, v_buf.dtype)))
+    index = jnp.asarray(index)
+    if index.ndim == 1:
+        # per-row indices (batched speculation): scatter per row
+        slots = jnp.mod(index[:, None] + jnp.arange(Q, dtype=jnp.int32), W)
+        rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+        return (k_buf.at[rows, slots].set(_to_buf_dtype(k_new, k_buf.dtype)),
+                v_buf.at[rows, slots].set(_to_buf_dtype(v_new, v_buf.dtype)))
+    slots = jnp.mod(index + jnp.arange(Q, dtype=jnp.int32), W)
+    return (k_buf.at[:, slots].set(_to_buf_dtype(k_new, k_buf.dtype)),
+            v_buf.at[:, slots].set(_to_buf_dtype(v_new, v_buf.dtype)))
+
+
+def extend(layer_cache, k_new, v_new, index):
+    """Per-layer cache extension used inside the layer scan.
+
+    layer_cache: {"k": [B,W,Kv,D], "v": [B,W,Kv,D]} (index threaded separately).
+
+    Returns (k_all, v_all, kv_pos, new_layer_cache). Attention must run over
+    [old buffer ++ new tokens] — NOT the post-write buffer — because a ring
+    buffer write of Q>1 tokens evicts positions that earlier queries in this
+    very extension still need (q at position ``index`` sees back to
+    ``index-W+1``, but the write already dropped ``index-W+1..index+Q-1-W``).
+    """
+    W = layer_cache["k"].shape[1]
+    Q = k_new.shape[1]
+    if Q == 1:
+        # decode fast-path: a single token cannot evict a slot it needs, so we
+        # write first and attend over the updated buffer in place — no W-sized
+        # concat copy (halves per-step cache traffic; see EXPERIMENTS.md §Perf).
+        k_buf, v_buf = write(layer_cache["k"], layer_cache["v"], k_new, v_new, index)
+        kv_pos = slot_positions(W, index, 1)
+        return (_from_buf(k_buf, k_new.dtype), _from_buf(v_buf, v_new.dtype),
+                kv_pos, {"k": k_buf, "v": v_buf})
+    old_pos = slot_positions(W, index, 0)                    # positions before write
+    k_all = jnp.concatenate([_from_buf(layer_cache["k"], k_new.dtype),
+                             k_new], axis=1)
+    v_all = jnp.concatenate([_from_buf(layer_cache["v"], v_new.dtype),
+                             v_new], axis=1)
+    new_pos = jnp.asarray(index)[..., None] + jnp.arange(Q, dtype=jnp.int32)
+    kv_pos = jnp.concatenate([old_pos, new_pos], axis=-1)
+    k_buf, v_buf = write(layer_cache["k"], layer_cache["v"], k_new, v_new, index)
+    return k_all, v_all, kv_pos, {"k": k_buf, "v": v_buf}
+
+
+def rollback(cache, accepted_index):
+    """O(1) speculative rollback: drop everything after ``accepted_index``."""
+    return {**cache, "index": jnp.asarray(accepted_index, jnp.int32)}

@@ -1,0 +1,52 @@
+"""Sharding-aware checkpointing (flat-key npz; no external deps).
+
+save() gathers to host; restore() optionally re-places leaves with a sharding
+tree so multi-device restarts resume with the intended layout.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+
+    def walk(path, leaf):
+        from repro.models.specs import _path_str
+        flat[_path_str(path)] = np.asarray(jax.device_get(leaf))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(walk, tree)
+    return flat
+
+
+def save(path: str, params: Any, step: Optional[int] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+
+
+def restore(path: str, like: Any, shardings: Any = None):
+    """Restore into the structure of `like` (pytree of arrays or SDS)."""
+    with np.load(path) as zf:
+        data = {k: zf[k] for k in zf.files}
+    from repro.models.specs import _path_str
+
+    def fill(path_, leaf):
+        key = _path_str(path_)
+        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        return arr
+
+    tree = jax.tree_util.tree_map_with_path(fill, like)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    step = int(data["__step__"]) if "__step__" in data else None
+    return tree, step

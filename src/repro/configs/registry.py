@@ -1,0 +1,39 @@
+"""Architecture registry: ``get(arch_id)`` -> module with config()/drafter_config()/smoke_config()."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "mixtral-8x7b",
+    "recurrentgemma-2b",
+    "llama3.2-1b",
+    "llama4-maverick-400b-a17b",
+    "deepseek-coder-33b",
+    "llama3-405b",
+    "granite-3-2b",
+    "whisper-large-v3",
+    "internvl2-26b",
+    "mamba2-780m",
+    # paper's own pair (target for the reproduction experiments)
+    "llama3.2-3b",
+)
+
+_MOD = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
+
+
+def get(arch_id: str):
+    if arch_id not in _MOD:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MOD)}")
+    return importlib.import_module(f"repro.configs.{_MOD[arch_id]}")
+
+
+def config(arch_id: str):
+    return get(arch_id).config()
+
+
+def drafter_config(arch_id: str):
+    return get(arch_id).drafter_config()
+
+
+def smoke_config(arch_id: str):
+    return get(arch_id).smoke_config()

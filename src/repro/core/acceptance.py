@@ -1,0 +1,107 @@
+"""Speculative-sampling acceptance rule (Leviathan et al. [3], App. A) in JAX.
+
+Given drafter distribution q and target distribution p over the vocab, a drafted
+token x is accepted with probability min(1, p(x)/q(x)); on rejection, the
+replacement token is sampled from norm(max(0, p − q)). This preserves the target
+distribution EXACTLY (property-tested in tests/test_acceptance.py).
+
+Everything here is vectorized over [batch, gamma] and jit-safe — it is the inner
+loop of both the monolithic and the modular engines, and the pure-jnp oracle for
+the fused Pallas verification kernel (repro.kernels.spec_verify).
+
+Greedy mode (paper §IV: "greedy sampling is used across all experiments")
+degenerates to exact-match acceptance: accept while argmax_p == draft token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class VerifyResult(NamedTuple):
+    n_accepted: jnp.ndarray     # [B] int32 — accepted draft tokens (0..gamma)
+    out_tokens: jnp.ndarray     # [B, gamma+1] int32 — committed tokens (padded)
+    n_emitted: jnp.ndarray      # [B] int32 — n_accepted + 1 (bonus or resample)
+
+
+def _categorical(key, logprobs):
+    return jax.random.categorical(key, logprobs, axis=-1)
+
+
+def verify_stochastic(key, draft_tokens, q_logits, p_logits, temperature=1.0):
+    """Vectorized accept/reject + residual resample.
+
+    draft_tokens: [B, G] tokens proposed by the drafter
+    q_logits:     [B, G, V] drafter logits for those positions
+    p_logits:     [B, G+1, V] target logits (G draft positions + 1 bonus)
+    Returns VerifyResult. Token layout of out_tokens[b]:
+      [accepted draft tokens..., replacement-or-bonus, 0-padding]
+    """
+    B, G = draft_tokens.shape
+    t = jnp.maximum(temperature, 1e-6)
+    logq = jax.nn.log_softmax(q_logits / t, axis=-1)
+    logp = jax.nn.log_softmax(p_logits[:, :G] / t, axis=-1)
+
+    tok = draft_tokens[..., None]
+    lq = jnp.take_along_axis(logq, tok, axis=-1)[..., 0]       # [B, G]
+    lp = jnp.take_along_axis(logp, tok, axis=-1)[..., 0]
+    k_acc, k_res, k_bonus = jax.random.split(key, 3)
+    u = jax.random.uniform(k_acc, (B, G), minval=1e-20)
+    accept = jnp.log(u) < (lp - lq)                            # P[min(1, p/q)]
+
+    # accepted prefix length: first rejection truncates
+    acc_prefix = jnp.cumprod(accept.astype(jnp.int32), axis=1)
+    n_accepted = acc_prefix.sum(axis=1)                        # [B]
+
+    # residual distribution at the first rejected position: norm(max(p - q, 0))
+    first_rej = jnp.minimum(n_accepted, G - 1)                 # clamp for gather
+    p_rej = jnp.take_along_axis(jnp.exp(logp), first_rej[:, None, None],
+                                axis=1)[:, 0]                  # [B, V]
+    q_rej = jnp.take_along_axis(jnp.exp(logq), first_rej[:, None, None],
+                                axis=1)[:, 0]
+    residual = jnp.maximum(p_rej - q_rej, 0.0)
+    residual_ok = residual.sum(-1, keepdims=True) > 1e-9
+    residual = jnp.where(residual_ok, residual,
+                         p_rej)                                # numerical fallback
+    resampled = _categorical(k_res, jnp.log(residual + 1e-30)) # [B]
+
+    # bonus token when ALL drafts accepted: sample target at position G
+    logp_bonus = jax.nn.log_softmax(p_logits[:, G] / t, axis=-1)
+    bonus = _categorical(k_bonus, logp_bonus)                  # [B]
+
+    all_acc = n_accepted == G
+    extra = jnp.where(all_acc, bonus, resampled)               # [B]
+
+    # assemble out_tokens: accepted drafts then the extra token
+    pos = jnp.arange(G + 1)[None, :]
+    keep_draft = pos < n_accepted[:, None]
+    drafts_pad = jnp.pad(draft_tokens, ((0, 0), (0, 1)))
+    out = jnp.where(keep_draft, drafts_pad, 0)
+    out = jnp.where(pos == n_accepted[:, None], extra[:, None], out)
+    return VerifyResult(n_accepted.astype(jnp.int32), out.astype(jnp.int32),
+                        (n_accepted + 1).astype(jnp.int32))
+
+
+def verify_greedy(draft_tokens, p_logits):
+    """Paper-faithful greedy mode: accept the longest prefix where the target's
+    argmax equals the drafted token; emit the target argmax at the first
+    mismatch (or the bonus position)."""
+    B, G = draft_tokens.shape
+    tgt = jnp.argmax(p_logits, axis=-1)                        # [B, G+1]
+    match = tgt[:, :G] == draft_tokens
+    acc_prefix = jnp.cumprod(match.astype(jnp.int32), axis=1)
+    n_accepted = acc_prefix.sum(axis=1)
+    extra = jnp.take_along_axis(tgt, n_accepted[:, None], axis=1)[:, 0]
+    pos = jnp.arange(G + 1)[None, :]
+    drafts_pad = jnp.pad(draft_tokens, ((0, 0), (0, 1)))
+    out = jnp.where(pos < n_accepted[:, None], drafts_pad, 0)
+    out = jnp.where(pos == n_accepted[:, None], extra[:, None], out)
+    return VerifyResult(n_accepted.astype(jnp.int32), out.astype(jnp.int32),
+                        (n_accepted + 1).astype(jnp.int32))
+
+
+def empirical_alpha(n_accepted, gamma) -> jnp.ndarray:
+    """Per-round acceptance-rate estimate: accepted / drafted (paper's α metric)."""
+    return n_accepted.astype(jnp.float32) / float(gamma)

@@ -1,0 +1,94 @@
+"""Adaptive draft length (beyond-paper): pick gamma per round from the online
+acceptance estimate, via the paper's own cost model.
+
+The paper fixes gamma offline from a dataset-level alpha. But alpha varies per
+prompt and over a generation; Eq. (1) says the optimal gamma varies with it.
+The MODULAR strategy (host-side control flow between jitted modules — the
+paper's deployed design) makes this nearly free: we keep one compiled round per
+candidate gamma and let the host pick each round by maximizing
+S(alpha_hat, gamma, c) with an EMA alpha estimate. A monolithic AOT module
+cannot do this without baking every gamma into one program.
+
+This is exactly the kind of runtime speculation-control the paper's §V
+"future work (2): other SD techniques" gestures at.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model
+from repro.core.engine import EngineConfig, GenState, SpecEngine
+
+
+@dataclass(frozen=True)
+class AdaptiveConfig:
+    gammas: Tuple[int, ...] = (1, 2, 4, 6)
+    c: float = 0.1                  # profiled cost coefficient (step 2)
+    alpha_ema: float = 0.7          # EMA weight on the running alpha estimate
+    alpha_init: float = 0.6
+    greedy: bool = True
+    use_cache: bool = False
+
+
+class AdaptiveSpecEngine:
+    """Host-adaptive gamma over a family of jitted modular rounds."""
+
+    def __init__(self, target_model, drafter_model, acfg: AdaptiveConfig):
+        self.acfg = acfg
+        self.engines: Dict[int, SpecEngine] = {
+            g: SpecEngine(target_model, drafter_model,
+                          EngineConfig(gamma=g, greedy=acfg.greedy,
+                                       use_cache=acfg.use_cache,
+                                       strategy="modular"))
+            for g in acfg.gammas
+        }
+
+    def pick_gamma(self, alpha_hat: float) -> int:
+        best_g, best_s = self.acfg.gammas[0], -1.0
+        for g in self.acfg.gammas:
+            s = cost_model.speedup(min(max(alpha_hat, 1e-3), 0.999), g, self.acfg.c)
+            if s > best_s:
+                best_g, best_s = g, s
+        return best_g
+
+    def generate(self, params_t, params_d, prompt, max_new_tokens, key=None,
+                 extras_t=None, extras_d=None):
+        a = self.acfg
+        B, P = prompt.shape
+        # shared buffer sized for the largest gamma so states are compatible
+        g_max = max(a.gammas)
+        max_len = P + max_new_tokens + g_max + 2
+        eng0 = self.engines[g_max]
+        state = eng0.prefill(params_t, params_d, prompt, max_len,
+                             extras_t, extras_d, key)
+        target_len = P + max_new_tokens
+        alpha_hat = a.alpha_init
+        gamma_trace = []
+        for eng in self.engines.values():
+            if eng._round_jit is None:
+                fn = eng.round_cached if a.use_cache else eng.round_nocache
+                eng._round_jit = jax.jit(lambda pt, pd, s, f=fn: f(pt, pd, s))
+
+        while int(state.length) < target_len:
+            g = self.pick_gamma(alpha_hat)
+            gamma_trace.append(g)
+            before_acc, before_drafted = int(state.n_accepted), int(state.n_drafted)
+            state = self.engines[g]._round_jit(params_t, params_d, state)
+            d_acc = int(state.n_accepted) - before_acc
+            d_drafted = int(state.n_drafted) - before_drafted
+            alpha_round = d_acc / max(d_drafted, 1)
+            alpha_hat = a.alpha_ema * alpha_hat + (1 - a.alpha_ema) * alpha_round
+
+        stats = {
+            "rounds": int(state.n_rounds),
+            "accepted": int(state.n_accepted),
+            "drafted": int(state.n_drafted),
+            "alpha_hat": float(state.n_accepted) / max(float(state.n_drafted), 1.0),
+            "tokens_generated": int(state.length) - P,
+            "gamma_trace": gamma_trace,
+        }
+        return state.tokens[:, :int(state.length)], stats

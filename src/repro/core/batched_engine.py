@@ -1,0 +1,142 @@
+"""Per-row batched speculative decoding (beyond-paper serving extension).
+
+The base SpecEngine synchronizes rounds across the batch by committing the
+batch-MINIMUM acceptance — exact at the paper's B=1 operating point but
+wasteful when per-prompt acceptance rates diverge (a fast row waits for the
+slowest). This engine keeps PER-ROW cache indices/lengths: every row commits
+its own accepted prefix each round, so throughput tracks each row's own alpha.
+
+Supported families: the KV-cache group (dense / moe / vlm) — per-row rollback
+is an index vector; recurrent-state families would need per-row state trails
+(see DESIGN.md §5b). Greedy acceptance (the serving configuration).
+
+Invariant (tested): every row's output equals that row's OWN autoregressive
+greedy continuation, regardless of what other rows do.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import acceptance
+
+KV_FAMILIES = ("dense", "moe", "vlm")
+
+
+@dataclass(frozen=True)
+class BatchedEngineConfig:
+    gamma: int = 4
+    max_new_tokens: int = 32
+
+
+class RowState(NamedTuple):
+    tokens: jnp.ndarray      # [B, T]
+    length: jnp.ndarray      # [B] committed tokens per row
+    dcache: Any
+    tcache: Any
+    n_accepted: jnp.ndarray  # [B]
+    n_rounds: jnp.ndarray    # scalar
+    active: jnp.ndarray = None  # [B] bool — frozen rows commit nothing
+
+
+def _gather_last(tokens, length):
+    """tokens[b, length[b]-1] for each row."""
+    return jnp.take_along_axis(tokens, (length - 1)[:, None], axis=1)[:, 0]
+
+
+def _scatter_commit(tokens, length, out_tokens, n_emitted, gamma):
+    """Write each row's emitted prefix at its own offset."""
+    B, T = tokens.shape
+    pos = jnp.arange(gamma + 1)[None, :]                     # [1, G+1]
+    cols = length[:, None] + pos                             # [B, G+1]
+    keep = pos < n_emitted[:, None]
+    cols = jnp.clip(cols, 0, T - 1)
+    rows = jnp.arange(B)[:, None]
+    cur = tokens[rows, cols]
+    vals = jnp.where(keep, out_tokens, cur)
+    return tokens.at[rows, cols].set(vals.astype(tokens.dtype))
+
+
+class BatchedSpecEngine:
+    def __init__(self, target_model, drafter_model, ecfg: BatchedEngineConfig):
+        assert target_model.family in KV_FAMILIES, \
+            f"per-row speculation needs a KV-cache family, got {target_model.family}"
+        assert drafter_model.family in KV_FAMILIES
+        self.target = target_model
+        self.drafter = drafter_model
+        self.ecfg = ecfg
+        self._round_jit = None
+
+    # --------------------------------------------------------------- round
+    def round(self, params_t, params_d, st: RowState) -> RowState:
+        G = self.ecfg.gamma
+        B = st.tokens.shape[0]
+        t_last = _gather_last(st.tokens, st.length)
+
+        def dstep(carry, _):
+            tok, cache = carry
+            logits, cache, _ = self.drafter.apply(params_d, tok[:, None], cache,
+                                                  logits_slice="last")
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return (nxt, cache), nxt
+
+        (_, dcache), drafts = jax.lax.scan(dstep, (t_last, st.dcache),
+                                           jnp.arange(G))
+        drafts = jnp.moveaxis(drafts, 0, 1)                  # [B, G]
+
+        verify_in = jnp.concatenate([t_last[:, None], drafts], axis=1)
+        p_logits, tcache, _ = self.target.apply(params_t, verify_in, st.tcache)
+        res = acceptance.verify_greedy(drafts, p_logits)
+
+        active = (st.active if st.active is not None
+                  else jnp.ones((B,), bool))
+        n_emitted = jnp.where(active, res.n_emitted, 0)
+        tokens = _scatter_commit(st.tokens, st.length, res.out_tokens,
+                                 n_emitted, G)
+        new_len = st.length + n_emitted                      # PER ROW
+        # per-row rollback: cache index vectors point at committed-1 per row
+        tcache = {**tcache, "index": (new_len - 1).astype(jnp.int32)}
+        dcache = {**dcache, "index": (new_len - 1).astype(jnp.int32)}
+        return RowState(tokens, new_len, dcache, tcache,
+                        st.n_accepted + jnp.where(active, res.n_accepted, 0),
+                        st.n_rounds + 1, active)
+
+    # -------------------------------------------------------------- generate
+    def generate(self, params_t, params_d, prompt, max_new_tokens=None):
+        e = self.ecfg
+        max_new = max_new_tokens or e.max_new_tokens
+        B, P = prompt.shape
+        max_len = P + max_new + e.gamma + 2
+        buf = jnp.zeros((B, max_len), jnp.int32)
+        buf = jax.lax.dynamic_update_slice(buf, prompt.astype(jnp.int32), (0, 0))
+
+        slack = e.gamma + 2
+        tcache = self.target.init_cache(B, self.target.cache_len(max_len),
+                                        spec_slack=slack)
+        dcache = self.drafter.init_cache(B, self.drafter.cache_len(max_len),
+                                         spec_slack=slack)
+        _, tcache, _ = self.target.apply(params_t, prompt[:, :-1], tcache)
+        _, dcache, _ = self.drafter.apply(params_d, prompt[:, :-1], dcache)
+        # promote shared scalar index -> per-row vector
+        tcache = {**tcache, "index": jnp.full((B,), P - 1, jnp.int32)}
+        dcache = {**dcache, "index": jnp.full((B,), P - 1, jnp.int32)}
+        st = RowState(buf, jnp.full((B,), P, jnp.int32), dcache, tcache,
+                      jnp.zeros((B,), jnp.int32), jnp.zeros((), jnp.int32),
+                      jnp.ones((B,), bool))
+
+        target_len = P + max_new
+        if self._round_jit is None:
+            self._round_jit = jax.jit(lambda pt, pd, s: self.round(pt, pd, s))
+        while int(jnp.min(st.length)) < target_len:
+            st = self._round_jit(params_t, params_d, st)
+
+        stats = {
+            "rounds": int(st.n_rounds),
+            "alpha_hat_per_row": (st.n_accepted
+                                  / jnp.maximum(st.n_rounds * e.gamma, 1)),
+            "lengths": st.length,
+        }
+        return st.tokens, st.length, stats

@@ -1,0 +1,122 @@
+"""The paper's analytical cost model (Eq. 1, from Leviathan et al. [3]).
+
+    S(α, γ, c) = (1 − α^(γ+1)) / ((1 − α)(γ·c + 1))
+
+α — expected acceptance rate (drafter/target distribution alignment),
+γ — draft length (tokens speculated per round),
+c — cost coefficient t_draft / t_target (hardware+mapping dependent).
+
+The model is used *prescriptively*, exactly as in the paper:
+  (i)  decide whether speculative sampling helps at all (requires c < α), and
+  (ii) pick the speedup-optimal γ* for a given (α, c),
+and it is the objective function of the heterogeneous-mapping DSE
+(repro.core.partition). Pure float/numpy — usable inside and outside jit.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterable, Optional, Tuple
+
+import numpy as np
+
+GAMMA_MAX_DEFAULT = 16
+
+
+def speedup(alpha: float, gamma: int, c: float) -> float:
+    """Eq. (1). gamma=0 degenerates to 1.0 (no speculation)."""
+    alpha = float(alpha)
+    gamma = int(gamma)
+    if gamma == 0:
+        return 1.0
+    if alpha >= 1.0:
+        return (gamma + 1.0) / (gamma * c + 1.0)
+    num = 1.0 - alpha ** (gamma + 1)
+    den = (1.0 - alpha) * (gamma * c + 1.0)
+    return num / den
+
+
+def expected_accepted(alpha: float, gamma: int) -> float:
+    """E[# tokens produced per verification round] = (1 − α^(γ+1)) / (1 − α).
+
+    Counts the accepted draft prefix plus the bonus/resampled token; this is the
+    numerator of Eq. (1) and a quantity we validate empirically."""
+    if alpha >= 1.0:
+        return gamma + 1.0
+    return (1.0 - alpha ** (gamma + 1)) / (1.0 - alpha)
+
+
+def feasible(alpha: float, c: float) -> bool:
+    """Paper §II-B: c < α must hold for ANY γ to give S > 1."""
+    return c < alpha
+
+
+def optimal_gamma(alpha: float, c: float, gamma_max: int = GAMMA_MAX_DEFAULT) -> Tuple[int, float]:
+    """γ* maximizing Eq. (1) over 0..gamma_max; returns (γ*, S(γ*)).
+
+    γ=0 (no speculation, S=1) is always a candidate, so an infeasible (α, c)
+    yields (0, 1.0) — 'do not speculate', matching paper Tables II/III."""
+    best = (0, 1.0)
+    for g in range(1, gamma_max + 1):
+        s = speedup(alpha, g, c)
+        if s > best[1] + 1e-12:
+            best = (g, s)
+    return best
+
+
+def speedup_curve(alpha_grid: Iterable[float], gamma: int, c: float) -> np.ndarray:
+    """S as a function of α for fixed (γ, c) — paper Fig. 7 predicted curves."""
+    return np.array([speedup(a, gamma, c) for a in alpha_grid])
+
+
+# ---------------------------------------------------------------------------
+# v5e hardware constants (the TPU analogue of the paper's profiled silicon)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    ici_bw: float = 50e9              # bytes/s per link
+
+
+V5E = HardwareSpec()
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    """Three-term roofline estimate for one compiled step on a submesh."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time: max of the three terms (perfect overlap bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
+                   chips: int, hw: HardwareSpec = V5E,
+                   links_per_chip: float = 4.0) -> RooflineTerms:
+    """Convert dry-run cost-analysis numbers into per-step roofline seconds.
+
+    collective_bytes is the sum of collective operand bytes across the program
+    (already a global quantity); each chip drives ``links_per_chip`` ICI links.
+    """
+    return RooflineTerms(
+        compute_s=flops / (chips * hw.peak_flops),
+        memory_s=hbm_bytes / (chips * hw.hbm_bw),
+        collective_s=collective_bytes / (chips * links_per_chip * hw.ici_bw),
+    )
+
+
+def cost_coefficient(t_draft: float, t_target: float) -> float:
+    """c = t_draft / t_target (paper §II-B). Works on measured or roofline times."""
+    return float(t_draft) / float(t_target)

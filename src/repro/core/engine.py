@@ -1,0 +1,373 @@
+"""Speculative-sampling engines: the paper's §III-D compilation strategies.
+
+Two strategies, mirroring Fig. 3 / Fig. 4:
+
+  * MONOLITHIC — the entire speculative round (draft loop + verification +
+    acceptance + cache rollback) is ONE jitted XLA program; drafter and target
+    carry their own shardings ("device affinities") and GSPMD stitches the
+    pipeline. This is the paper's single-module design that IREE 3.6 could not
+    yet deploy; XLA can.
+  * MODULAR — drafter step, target verify, and acceptance are SEPARATE jitted
+    callables orchestrated from host Python (the paper's shipped design). The
+    jit-boundary/host round-trips are the "API call overhead" the paper blames
+    for its 4% deviation; benchmarks/bench_strategies.py measures ours.
+
+Two cache modes:
+
+  * use_cache=False — paper-faithful (§IV: "no KV cache is enabled"): every
+    forward recomputes the whole fixed-size token buffer. Used for the paper
+    validation benches.
+  * use_cache=True  — production path: KV/state caches with O(1)/trail rollback.
+
+Batching: rounds are batch-synchronized; with B > 1 the committed length per
+round is the batch-minimum emitted length. This preserves the target
+distribution exactly (discarded acceptances are simply re-drafted) and is exact
+standard speculative sampling at B=1, the paper's operating point.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import acceptance
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    gamma: int = 4
+    greedy: bool = True                 # paper §IV uses greedy everywhere
+    temperature: float = 1.0
+    use_cache: bool = False             # False = paper-faithful mode
+    strategy: str = "monolithic"        # or "modular"
+
+
+class GenState(NamedTuple):
+    tokens: jnp.ndarray     # [B, T] token buffer (committed prefix + scratch)
+    length: jnp.ndarray     # scalar int32 — committed tokens (batch-synchronized)
+    key: jnp.ndarray
+    n_rounds: jnp.ndarray   # scalar int32
+    n_accepted: jnp.ndarray # scalar int32 — total accepted draft tokens
+    n_drafted: jnp.ndarray  # scalar int32
+    dcache: Any = None
+    tcache: Any = None
+    extras_t: Any = None    # modality extras for the target (e.g. encdec cross)
+    extras_d: Any = None
+    t_off: Any = 0          # cache-index offset vs text length (VLM vision prefix)
+    d_off: Any = 0
+
+
+# ------------------------------------------------------------------- helpers
+def _write_col(tokens, pos, vals):
+    """tokens[:, pos] = vals (pos is a traced scalar)."""
+    return jax.lax.dynamic_update_slice(
+        tokens, vals.astype(tokens.dtype)[:, None], (0, pos))
+
+
+def _slice_logits(logits, start, width):
+    B, T, V = logits.shape
+    return jax.lax.dynamic_slice(logits, (0, start, 0), (B, width, V))
+
+
+def _slice_tokens(tokens, start, width):
+    B, T = tokens.shape
+    return jax.lax.dynamic_slice(tokens, (0, start), (B, width))
+
+
+def _commit(tokens, length, result, gamma):
+    """Write the batch-min emitted prefix back into the buffer."""
+    n_commit = jnp.min(result.n_emitted)                       # batch-synchronized
+    pos = jnp.arange(gamma + 1)[None, :]
+    window = _slice_tokens(tokens, length, gamma + 1)
+    new_window = jnp.where(pos < n_commit, result.out_tokens, window)
+    tokens = jax.lax.dynamic_update_slice(tokens, new_window.astype(tokens.dtype),
+                                          (0, length))
+    return tokens, length + n_commit, n_commit
+
+
+def _state_leaves(cache):
+    """Small recurrent-state leaves (state/conv) — the only parts of a cache
+    that need a per-step trail; KV ring buffers roll back by index."""
+    from repro.models.specs import _path_str
+    out = {}
+
+    def walk(path, leaf):
+        ps = _path_str(path)
+        if ps.split("/")[-1] in ("state", "conv"):
+            out[ps] = leaf
+        return leaf
+
+    jax.tree_util.tree_map_with_path(walk, cache)
+    return out
+
+
+def _restore_state_leaves(cache, snaps, j):
+    """Rebuild cache with state leaves from scan-stacked snapshot j."""
+    from repro.models.specs import _path_str
+
+    def fix(path, leaf):
+        ps = _path_str(path)
+        if ps in snaps:
+            return jnp.take(snaps[ps], j, axis=0)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+# ==================================================================== engine
+class SpecEngine:
+    """Drives a (target, drafter) pair with speculative sampling."""
+
+    def __init__(self, target_model, drafter_model, ecfg: EngineConfig):
+        self.target = target_model
+        self.drafter = drafter_model
+        self.ecfg = ecfg
+        self.d_stateful = drafter_model.family in ("ssm", "hybrid")
+        self._round_jit = None
+        self._run_jit = {}       # (target_len,) -> jitted monolithic generate
+
+    # -------------------------------------------------------- no-cache round
+    def round_nocache(self, params_t, params_d, state: GenState) -> GenState:
+        e = self.ecfg
+        G = e.gamma
+        tokens, key, length = state.tokens, state.key, state.length
+        ex_t = state.extras_t or {}
+        ex_d = state.extras_d or {}
+
+        def dstep(carry, i):
+            toks, k = carry
+            logits, _, _ = self.drafter.apply(params_d, toks, **ex_d)
+            pos = length - 1 + i
+            q_i = _slice_logits(logits, pos, 1)[:, 0]          # [B, V]
+            k, ks = jax.random.split(k)
+            if e.greedy:
+                d_i = jnp.argmax(q_i, axis=-1)
+            else:
+                d_i = jax.random.categorical(ks, q_i / e.temperature, axis=-1)
+            toks = _write_col(toks, pos + 1, d_i)
+            return (toks, k), q_i
+
+        (tokens, key), q_logits = jax.lax.scan(dstep, (tokens, key), jnp.arange(G))
+        q_logits = jnp.moveaxis(q_logits, 0, 1)                # [B, G, V]
+
+        p_full, _, _ = self.target.apply(params_t, tokens, **ex_t)
+        p_logits = _slice_logits(p_full, length - 1, G + 1)
+        drafts = _slice_tokens(tokens, length, G)
+        key, kv = jax.random.split(key)
+        if e.greedy:
+            res = acceptance.verify_greedy(drafts, p_logits)
+        else:
+            res = acceptance.verify_stochastic(kv, drafts, q_logits, p_logits,
+                                               e.temperature)
+        tokens, new_len, n_commit = _commit(tokens, length, res, G)
+        return state._replace(tokens=tokens, length=new_len, key=key,
+                              n_rounds=state.n_rounds + 1,
+                              n_accepted=state.n_accepted + n_commit - 1,
+                              n_drafted=state.n_drafted + G)
+
+    # ---------------------------------------------------------- cached round
+    def round_cached(self, params_t, params_d, state: GenState) -> GenState:
+        e = self.ecfg
+        G = e.gamma
+        ex_t = state.extras_t or {}
+        t_last = _slice_tokens(state.tokens, state.length - 1, 1)[:, 0]
+
+        # --- draft scan (gamma steps; +1 for stateful drafters to extend trail)
+        def dstep(carry, i):
+            tok, cache, k = carry
+            logits, cache, _ = self.drafter.apply(
+                params_d, tok[:, None], cache, logits_slice="last",
+                **(state.extras_d or {}))
+            q = logits[:, -1]
+            k, ks = jax.random.split(k)
+            if e.greedy:
+                nxt = jnp.argmax(q, axis=-1)
+            else:
+                nxt = jax.random.categorical(ks, q / e.temperature, axis=-1)
+            nxt = nxt.astype(jnp.int32)
+            snap = _state_leaves(cache) if self.d_stateful else 0
+            return (nxt, cache, k), (nxt, q, snap)
+
+        n_steps = G + 1 if self.d_stateful else G
+        (_, dcache, key), (drafts, q_logits, snaps) = jax.lax.scan(
+            dstep, (t_last, state.dcache, state.key), jnp.arange(n_steps))
+        drafts = jnp.moveaxis(drafts, 0, 1)[:, :G]             # [B, G]
+        q_logits = jnp.moveaxis(q_logits, 0, 1)[:, :G]
+
+        # --- target verify: consume [t_last, d_1..d_G]
+        verify_in = jnp.concatenate([t_last[:, None], drafts], axis=1)
+        p_logits, tcache, _ = self.target.apply(params_t, verify_in, state.tcache,
+                                                want_trail=True, **ex_t)
+        key, kv = jax.random.split(key)
+        if e.greedy:
+            res = acceptance.verify_greedy(drafts, p_logits)
+        else:
+            res = acceptance.verify_stochastic(kv, drafts, q_logits, p_logits,
+                                               e.temperature)
+        tokens, new_len, n_commit = _commit(state.tokens, state.length, res, G)
+        n_acc = n_commit - 1
+
+        # --- rollbacks: caches end at (committed length - 1) consumed inputs,
+        #     shifted by any modality prefix the cache also holds (VLM)
+        tcache = self.target.rollback(tcache, new_len - 1 + state.t_off, G + 1)
+        if self.d_stateful:
+            # snapshot j = state after consuming j+1 inputs; we need n_acc+1
+            dcache = _restore_state_leaves(dcache, snaps, n_acc)
+            dcache = {**dcache, "index": (new_len - 1 + state.d_off).astype(jnp.int32)}
+        else:
+            from repro.cache import kv_cache
+            dcache = kv_cache.rollback(dcache, new_len - 1 + state.d_off)
+        return state._replace(tokens=tokens, length=new_len, key=key,
+                              n_rounds=state.n_rounds + 1,
+                              n_accepted=state.n_accepted + n_acc,
+                              n_drafted=state.n_drafted + G,
+                              dcache=dcache, tcache=tcache)
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params_t, params_d, prompt, max_len, extras_t=None,
+                extras_d=None, key=None):
+        """Build GenState from a [B, P] prompt. Caches consume prompt[:, :-1]."""
+        e = self.ecfg
+        B, P = prompt.shape
+        key = key if key is not None else jax.random.PRNGKey(0)
+        buf = jnp.zeros((B, max_len), jnp.int32)
+        buf = jax.lax.dynamic_update_slice(buf, prompt.astype(jnp.int32), (0, 0))
+        st = GenState(buf, jnp.asarray(P, jnp.int32), key,
+                      jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                      jnp.zeros((), jnp.int32), extras_t=extras_t,
+                      extras_d=extras_d)
+        if not e.use_cache:
+            return st
+        slack = e.gamma + 2
+        tcache = self.target.init_cache(B, self.target.cache_len(max_len),
+                                        spec_slack=slack)
+        dcache = self.drafter.init_cache(B, self.drafter.cache_len(max_len),
+                                         spec_slack=slack)
+        _, tcache, aux_t = self.target.apply(params_t, prompt[:, :-1], tcache,
+                                             **(extras_t or {}))
+        _, dcache, aux_d = self.drafter.apply(params_d, prompt[:, :-1], dcache,
+                                              **(extras_d or {}))
+        # post-prefill extras: modality frontends (patches/frames) are consumed
+        # during prefill and must NOT be re-fed on decode; the encdec cross-KV
+        # (computed once by the encoder) is the only persistent extra.
+        def decode_extras(extras, aux):
+            out = {k: v for k, v in (extras or {}).items()
+                   if k not in ("patches", "frames")}
+            if "cross" in (aux or {}):
+                out["cross"] = aux["cross"]
+            return out or None
+        st = st._replace(extras_t=decode_extras(extras_t, aux_t),
+                         extras_d=decode_extras(extras_d, aux_d))
+        # cache-index offset: prefill consumed P-1 text tokens plus any
+        # modality prefix (vision patches) that also landed in the cache
+        t_off = tcache["index"] - (P - 1)
+        d_off = dcache["index"] - (P - 1)
+        return st._replace(tcache=tcache, dcache=dcache, t_off=t_off, d_off=d_off)
+
+    # -------------------------------------------------------------- generate
+    def generate(self, params_t, params_d, prompt, max_new_tokens, key=None,
+                 extras_t=None, extras_d=None):
+        """Returns (tokens, stats). strategy='monolithic' runs the whole
+        generation as one jitted while_loop; 'modular' jits only the round and
+        loops from host Python."""
+        e = self.ecfg
+        B, P = prompt.shape
+        max_len = P + max_new_tokens + e.gamma + 2
+        state = self.prefill(params_t, params_d, prompt, max_len,
+                             extras_t, extras_d, key)
+        round_fn = self.round_cached if e.use_cache else self.round_nocache
+        target_len = P + max_new_tokens
+
+        if e.strategy == "monolithic":
+            key_ = (target_len, max_len, B)
+            if key_ not in self._run_jit:
+                @jax.jit
+                def run(pt, pd, s):
+                    def cond(s):
+                        return s.length < target_len
+                    def body(s):
+                        return round_fn(pt, pd, s)
+                    return jax.lax.while_loop(cond, body, s)
+                self._run_jit[key_] = run
+            state = self._run_jit[key_](params_t, params_d, state)
+        else:
+            if self._round_jit is None:
+                self._round_jit = jax.jit(
+                    lambda pt, pd, s: round_fn(pt, pd, s))
+            while int(state.length) < target_len:
+                state = self._round_jit(params_t, params_d, state)
+
+        stats = {
+            "rounds": int(state.n_rounds),
+            "accepted": int(state.n_accepted),
+            "drafted": int(state.n_drafted),
+            "alpha_hat": float(state.n_accepted) / max(float(state.n_drafted), 1.0),
+            "tokens_generated": int(state.length) - P,
+        }
+        return state.tokens[:, :int(state.length)], stats
+
+
+_AR_JIT_CACHE = {}
+
+
+def autoregressive_generate(model, params, prompt, max_new_tokens, *,
+                            greedy=True, temperature=1.0, key=None,
+                            use_cache=False, extras=None):
+    """The non-speculative baseline (paper's 'standard sampling')."""
+    B, P = prompt.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    max_len = P + max_new_tokens
+    buf = jnp.zeros((B, max_len), jnp.int32)
+    buf = jax.lax.dynamic_update_slice(buf, prompt.astype(jnp.int32), (0, 0))
+    ex = extras or {}
+
+    if use_cache:
+        cache = model.init_cache(B, model.cache_len(max_len), spec_slack=2)
+        logits, cache, aux = model.apply(params, prompt, cache, **ex)
+        ex = {k: v for k, v in ex.items() if k not in ("patches", "frames")}
+        if "cross" in aux:
+            ex["cross"] = aux["cross"]
+
+        @jax.jit
+        def step(carry):
+            buf, cache, length, k = carry
+            tok = _slice_tokens(buf, length - 1, 1)
+            logits, cache, _ = model.apply(params, tok, cache,
+                                           logits_slice="last", **ex)
+            k, ks = jax.random.split(k)
+            q = logits[:, -1]
+            nxt = (jnp.argmax(q, -1) if greedy
+                   else jax.random.categorical(ks, q / temperature, -1))
+            buf = _write_col(buf, length, nxt)
+            return buf, cache, length + 1, k
+
+        # first token comes from the prefill logits
+        k, ks = jax.random.split(key)
+        q = logits[:, -1]
+        nxt = jnp.argmax(q, -1) if greedy else jax.random.categorical(ks, q / temperature, -1)
+        buf = _write_col(buf, jnp.asarray(P, jnp.int32), nxt)
+        carry = (buf, cache, jnp.asarray(P + 1, jnp.int32), k)
+        for _ in range(max_new_tokens - 1):
+            carry = step(carry)
+        return carry[0]
+
+    ck = (id(model), B, P, max_new_tokens, greedy, bool(ex))
+    if ck not in _AR_JIT_CACHE:
+        @jax.jit
+        def run_nc(params, buf, key, ex):
+            def body(i, carry):
+                buf, length, k = carry
+                logits, _, _ = model.apply(params, buf, **ex)
+                q = _slice_logits(logits, length - 1, 1)[:, 0]
+                k, ks = jax.random.split(k)
+                nxt = (jnp.argmax(q, -1) if greedy
+                       else jax.random.categorical(ks, q / temperature, -1))
+                buf = _write_col(buf, length, nxt)
+                return buf, length + 1, k
+            carry = (buf, jnp.asarray(P, jnp.int32), key)
+            carry = jax.lax.fori_loop(0, max_new_tokens, body, carry)
+            return carry[0]
+        _AR_JIT_CACHE[ck] = run_nc
+    return _AR_JIT_CACHE[ck](params, buf, key, ex)

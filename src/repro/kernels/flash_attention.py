@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: blockwise causal/sliding-window flash attention (prefill).
+
+TPU-native tiling of the online-softmax algorithm: grid (B*Kv, Q/bq, S/bs) with
+the KV axis innermost so the running (max, denom, accum) stay in VMEM scratch
+across KV steps. Handles GQA by folding the query-group dim into the q-block
+rows, and sliding windows via position masks computed in-kernel.
+
+This is the TPU drop-in for repro.models.attention.attn_chunked (the jnp oracle
+— see ref.py); the dry-run/CPU path keeps the jnp version, tests assert
+allclose in interpret mode across shapes/window/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, bq: int, bs: int, n_s: int, window, causal: bool, scale: float,
+            gq: int, s_valid: int):
+    """Blocks: q [1, bq*gq, D]; k/v [1, bs, D]; o [1, bq*gq, D]."""
+    qi = pl.program_id(1)
+    sj = pl.program_id(2)
+
+    @pl.when(sj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                           # [bq*gq, D]
+    k = k_ref[0].astype(jnp.float32)                           # [bs, D]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # [bq*gq, bs]
+
+    q_pos = (qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, gq), 0)).reshape(bq * gq)
+    kv_pos = sj * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    mask = (kv_pos < s_valid)[None, :] & jnp.ones((bq * gq, bs), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window is not None:
+        mask &= jnp.abs(q_pos[:, None] - kv_pos[None, :]) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+
+    @pl.when(sj == n_s - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bs", "window", "causal",
+                                             "interpret", "s_valid"))
+def flash_attention(q, k, v, *, bq=256, bs=512, window=None, causal=True,
+                    interpret=False, s_valid=None):
+    """q: [B, Sq, H, D]; k, v: [B, Skv, Kv, D] with H = Kv * gq. GQA-aware.
+
+    Grid folds (batch, kv-head) into axis 0; query-group rows ride inside the
+    q block so each kv head's K/V tile is loaded once per q block.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Kv, _ = k.shape
+    gq = H // Kv
+    assert Sq % bq == 0 and Skv % bs == 0, (Sq, Skv, bq, bs)
+    s_valid = Skv if s_valid is None else s_valid
+    scale = D ** -0.5
+    # layout: q -> [B*Kv, Sq*gq, D] (rows = (q position, group)); kv -> [B*Kv, Skv, D]
+    qr = q.reshape(B, Sq, Kv, gq, D).transpose(0, 2, 1, 3, 4).reshape(B * Kv, Sq * gq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Kv, Skv, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Kv, Skv, D)
+    n_s = Skv // bs
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bs=bs, n_s=n_s, window=window,
+                          causal=causal, scale=scale, gq=gq, s_valid=s_valid),
+        grid=(B * Kv, Sq // bq, n_s),
+        in_specs=[
+            pl.BlockSpec((1, bq * gq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bs, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bs, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq * gq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Kv, Sq * gq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq * gq, 1), jnp.float32),
+                        pltpu.VMEM((bq * gq, 1), jnp.float32),
+                        pltpu.VMEM((bq * gq, D), jnp.float32)],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Kv, Sq, gq, D).transpose(0, 2, 1, 3, 4).reshape(B, Sq, H, D)

@@ -1,0 +1,86 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, backend selection (interpret=True when no
+TPU is attached — the kernels then execute their bodies on CPU for
+correctness), and dtype plumbing. Model code calls these, never pallas_call
+directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import int8_matmul as _imm
+from repro.kernels import spec_verify as _sv
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def quantized_matmul(x, w_q, sw, *, bm=128, bn=128, bk=128, out_dtype=None):
+    """bf16/f32 activations x int8 weights: dynamic per-tensor act quant,
+    int8 MXU matmul, fused dequant. x: [..., K]; w_q: [K, N]; sw: [N]."""
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    xf = x.reshape(-1, K)
+    qmax = 127.0
+    sx = jnp.maximum(jnp.max(jnp.abs(xf.astype(jnp.float32))) / qmax, 1e-12)
+    x_q = jnp.clip(jnp.round(xf.astype(jnp.float32) / sx), -128, 127).astype(jnp.int8)
+    x_q, pm = _pad_to(x_q, 0, bm)
+    x_q, pk = _pad_to(x_q, 1, bk)
+    w_qp, _ = _pad_to(w_q, 0, bk)
+    w_qp, pn = _pad_to(w_qp, 1, bn)
+    swp, _ = _pad_to(sw, 0, bn)
+    out = _imm.int8_matmul(x_q, w_qp, sx, swp, bm=bm, bn=bn, bk=bk,
+                           out_dtype=jnp.dtype(out_dtype), interpret=_interpret())
+    M = xf.shape[0]
+    N = w_q.shape[1]
+    return out[:M, :N].reshape(*lead, N)
+
+
+def verify_greedy(draft_tokens, p_logits, *, br=8, bv=2048):
+    """Fused greedy verification (see repro.core.acceptance for the oracle)."""
+    return _sv.verify_greedy_fused(draft_tokens, p_logits, br=br, bv=bv,
+                                   interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, bq=256, bs=512, window=None, causal=True):
+    """Blockwise attention; pads Sq/Skv to block multiples (mask handles tails)."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    bq = min(bq, max(8, Sq))
+    bs = min(bs, max(8, Skv))
+    q, pq = _pad_to(q, 1, bq)
+    k, _ = _pad_to(k, 1, bs)
+    v, _ = _pad_to(v, 1, bs)
+    out = _fa.flash_attention(q, k, v, bq=bq, bs=bs, window=window,
+                              causal=causal, interpret=_interpret(),
+                              s_valid=Skv)
+    return out[:, :Sq]
+
+
+def ssd_scan(x, dA, Bm, Cm, *, chunk=128):
+    """Fused chunked SSD scan (mamba2 prefill/train fast path); pads l."""
+    l = x.shape[1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = _ssd.ssd_scan(x, dA, Bm, Cm, chunk=chunk, interpret=_interpret())
+    return out[:, :l]

@@ -1,0 +1,158 @@
+"""Continuous-batching speculative server (beyond-paper serving layer).
+
+Per-row speculation (core/batched_engine.py) lets rows advance independently,
+but a fixed batch still waits for its slowest member. This server closes the
+loop: when a row finishes, its slot is immediately REFILLED from the request
+queue — one-row prefill, scatter into the live batch caches — so the batch
+stays full and the 3.1x committed-tokens/round advantage becomes wall-clock
+throughput (vLLM-style continuous batching, driven by the speculative round).
+
+Constraints: KV-cache families; uniform (prompt_len, max_new) per server
+instance (fixed XLA shapes); greedy acceptance.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batched_engine import (BatchedEngineConfig, BatchedSpecEngine,
+                                       RowState)
+
+
+@dataclass
+class StreamRequest:
+    rid: int
+    prompt: np.ndarray
+    tokens: Optional[np.ndarray] = None
+    rounds_in_flight: int = 0
+
+
+class ContinuousSpecServer:
+    def __init__(self, target, drafter, params_t, params_d, *,
+                 batch: int = 4, prompt_len: int = 12, max_new: int = 24,
+                 gamma: int = 4):
+        self.engine = BatchedSpecEngine(target, drafter,
+                                        BatchedEngineConfig(gamma=gamma))
+        self.params_t, self.params_d = params_t, params_d
+        self.B, self.P, self.max_new, self.gamma = batch, prompt_len, max_new, gamma
+        self.max_len = prompt_len + max_new + gamma + 2
+        self.queue: List[StreamRequest] = []
+        self.done: List[StreamRequest] = []
+        self._slots: List[Optional[StreamRequest]] = [None] * batch
+        self._state: Optional[RowState] = None
+        self._prefill_jit = None
+        self._insert_jit = None
+
+    # ------------------------------------------------------------ plumbing
+    def _prefill_one(self, prompt):
+        """B=1 prefill -> (buf_row [T], dcache1, tcache1) with per-row index."""
+        if self._prefill_jit is None:
+            eng = self.engine
+
+            def prefill(pt, pd, prompt):
+                buf = jnp.zeros((1, self.max_len), jnp.int32)
+                buf = jax.lax.dynamic_update_slice(buf, prompt, (0, 0))
+                slack = self.gamma + 2
+                tc = eng.target.init_cache(1, eng.target.cache_len(self.max_len),
+                                           spec_slack=slack)
+                dc = eng.drafter.init_cache(1, eng.drafter.cache_len(self.max_len),
+                                            spec_slack=slack)
+                _, tc, _ = eng.target.apply(pt, prompt[:, :-1], tc)
+                _, dc, _ = eng.drafter.apply(pd, prompt[:, :-1], dc)
+                return buf, dc, tc
+
+            self._prefill_jit = jax.jit(prefill)
+        return self._prefill_jit(self.params_t, self.params_d,
+                                 jnp.asarray(prompt[None], jnp.int32))
+
+    def _insert_row(self, state: RowState, b: int, buf1, dc1, tc1):
+        """Scatter a one-row prefill into live batch state at slot b.
+        Structural rule: KV caches are [L, B, ...] -> batch axis 1; per-row
+        index vectors are [B] -> axis 0."""
+        def put_cache(batched, one):
+            if batched.ndim >= 2 and one.ndim == batched.ndim \
+                    and one.shape[1] == 1 and batched.shape[0] == one.shape[0]:
+                return batched.at[:, b].set(one[:, 0])
+            if batched.ndim == 1 and one.ndim == 0:
+                return batched.at[b].set(one)
+            if batched.ndim == 1 and one.ndim == 1 and one.shape[0] == 1:
+                return batched.at[b].set(one[0])
+            return batched
+
+        new_tc = jax.tree.map(put_cache, state.tcache,
+                              {**tc1, "index": jnp.full((1,), self.P - 1, jnp.int32)})
+        new_dc = jax.tree.map(put_cache, state.dcache,
+                              {**dc1, "index": jnp.full((1,), self.P - 1, jnp.int32)})
+        tokens = state.tokens.at[b].set(buf1[0])
+        length = state.length.at[b].set(self.P)
+        active = state.active.at[b].set(True)
+        return state._replace(tokens=tokens, length=length, active=active,
+                              tcache=new_tc, dcache=new_dc)
+
+    # -------------------------------------------------------------- serving
+    def submit(self, req: StreamRequest):
+        assert len(req.prompt) == self.P
+        self.queue.append(req)
+
+    def _bootstrap(self):
+        first = [self.queue.pop(0) for _ in range(min(self.B, len(self.queue)))]
+        prompts = np.stack([r.prompt for r in first])
+        while len(first) < self.B:          # pad with copies of the last
+            first.append(StreamRequest(-1, first[-1].prompt))
+            prompts = np.vstack([prompts, first[-1].prompt[None]])
+        eng = self.engine
+        B, P = self.B, self.P
+        buf = jnp.zeros((B, self.max_len), jnp.int32)
+        buf = jax.lax.dynamic_update_slice(
+            buf, jnp.asarray(prompts, jnp.int32), (0, 0))
+        slack = self.gamma + 2
+        tc = eng.target.init_cache(B, eng.target.cache_len(self.max_len), spec_slack=slack)
+        dc = eng.drafter.init_cache(B, eng.drafter.cache_len(self.max_len), spec_slack=slack)
+        _, tc, _ = eng.target.apply(self.params_t, jnp.asarray(prompts[:, :-1]), tc)
+        _, dc, _ = eng.drafter.apply(self.params_d, jnp.asarray(prompts[:, :-1]), dc)
+        tc = {**tc, "index": jnp.full((B,), P - 1, jnp.int32)}
+        dc = {**dc, "index": jnp.full((B,), P - 1, jnp.int32)}
+        self._state = RowState(buf, jnp.full((B,), P, jnp.int32), dc, tc,
+                               jnp.zeros((B,), jnp.int32), jnp.zeros((), jnp.int32),
+                               jnp.ones((B,), bool))
+        self._slots = first
+
+    def run(self):
+        """Drain the queue; returns completed requests. Rounds touch the WHOLE
+        batch; finished rows are emitted and hot-swapped without a barrier."""
+        if self._state is None:
+            self._bootstrap()
+        eng = self.engine
+        if eng._round_jit is None:
+            eng._round_jit = jax.jit(lambda pt, pd, s: eng.round(pt, pd, s))
+        target_len = self.P + self.max_new
+        n_rounds = 0
+        while any(r is not None and r.rid >= 0 for r in self._slots):
+            self._state = eng._round_jit(self.params_t, self.params_d, self._state)
+            n_rounds += 1
+            lengths = np.asarray(self._state.length)
+            for b in range(self.B):
+                req = self._slots[b]
+                if req is None or req.rid < 0:
+                    continue
+                req.rounds_in_flight += 1
+                if lengths[b] >= target_len:
+                    req.tokens = np.asarray(self._state.tokens[b, :target_len])
+                    self.done.append(req)
+                    if self.queue:
+                        nxt = self.queue.pop(0)
+                        buf1, dc1, tc1 = self._prefill_one(nxt.prompt)
+                        self._state = self._insert_row(self._state, b, buf1, dc1, tc1)
+                        self._slots[b] = nxt
+                    else:
+                        # freeze the slot: no more commits, no buffer overflow
+                        self._state = self._state._replace(
+                            active=self._state.active.at[b].set(False))
+                        self._slots[b] = StreamRequest(-1, req.prompt)
+        self.total_rounds = n_rounds
+        return self.done

@@ -1,0 +1,94 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+cost_analysis() supplies FLOPs and HBM bytes; collective bytes are NOT in
+cost_analysis, so we parse the optimized HLO text and sum operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute ops.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %x = bf16[16,128,4096]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*\(?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\b(" + "|".join(_COLLECTIVES) + r")[\.\(]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}: n={self.count_by_kind[k]} {self.bytes_by_kind[k]/1e9:.3f}GB"
+                 for k in sorted(self.bytes_by_kind)]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in the HLO module text.
+
+    Output shape is the correct 'wire' proxy: all-gather outputs the gathered
+    tensor, all-reduce in == out, reduce-scatter outputs the shard. Tuple-shaped
+    collectives list elements in (...) — handled by scanning shape tokens."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        # sum every shape token on the lhs (covers tuple outputs)
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(kind)[0]
+        total = 0
+        for dt, dims in re.findall(r"([a-z0-9]+)\[([\d,]*)\]", lhs):
+            if dt in _DTYPE_BYTES:
+                total += shape_bytes(dt, dims)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + total
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+def cost_numbers(compiled) -> Dict[str, float]:
+    """Normalized view over compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    return {"flops": flops, "bytes": byts, "raw": dict(ca)}
+
+
+def memory_numbers(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        out[k] = float(getattr(ma, k, 0.0))
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                              + out["temp_size_in_bytes"]
+                              + out["output_size_in_bytes"]
+                              - out.get("alias_size_in_bytes", 0.0))
+    return out

@@ -1,0 +1,24 @@
+"""Production mesh factories. Functions (not module constants) so importing
+never touches jax device state — the dry-run sets device-count env first."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi-pod prepends a 2-pod axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_spec_mesh(*, multi_pod: bool = False):
+    """Factored mesh for the speculative-sampling affinity DSE: the model axis
+    splits into (mx, my) so drafter submeshes of 1/4/16/256 chips exist."""
+    from repro.core.partition import spec_mesh_axes
+    shape, axes = spec_mesh_axes(multi_pod)
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

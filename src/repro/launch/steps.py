@@ -1,0 +1,227 @@
+"""Step builders: the jitted programs the launcher lowers/compiles/runs.
+
+Each builder returns (step_fn, input_specs_dict) where input_specs are
+ShapeDtypeStructs with shardings attached — exactly what .lower(...) consumes
+in the dry-run, and what device_put uses in real runs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models.model import Model, build_model
+from repro.models.specs import ShardingPolicy, cache_specs, io_specs, param_specs
+from repro.training import optimizer as opt
+from repro.training.train_loop import make_train_step, opt_state_specs
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _sds_with(shard_tree, shape_tree):
+    return jax.tree.map(lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                                             sharding=sh),
+                        shape_tree, shard_tree)
+
+
+def params_shape(model: Model, quantized: bool = False):
+    if quantized:
+        from repro.quant.int8 import quantize_for_serving
+        return jax.eval_shape(
+            lambda: quantize_for_serving(model.init(jax.random.PRNGKey(0))))
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def extras_shape(model: Model, batch: int):
+    return model.extra_inputs(batch)
+
+
+def extras_specs(model: Model, batch: int, pol: ShardingPolicy):
+    b_ax = pol.batch_axis(batch)
+    out = {}
+    for k, sds in model.extra_inputs(batch).items():
+        spec = [None] * len(sds.shape)
+        spec[0] = b_ax
+        out[k] = P(*spec)
+    return out
+
+
+# ---------------------------------------------------------------------- train
+def build_train_step(model: Model, mesh, pol: ShardingPolicy, shape: ShapeConfig,
+                     num_microbatches: int = 1, ocfg: Optional[opt.AdamWConfig] = None):
+    ocfg = ocfg or opt.AdamWConfig()
+    pshape = params_shape(model)
+    pspecs = param_specs(model.cfg, pshape, pol)
+    tok_spec, _ = io_specs(pol, shape.global_batch)
+    bspecs = {"tokens": tok_spec, "labels": tok_spec}
+    bshape = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32),
+              "labels": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32)}
+    for k, s in extras_specs(model, shape.global_batch, pol).items():
+        bspecs[k] = s
+    for k, sds in extras_shape(model, shape.global_batch).items():
+        bshape[k] = sds
+    ospecs = opt_state_specs(pspecs, ocfg, pshape)
+    oshape = jax.eval_shape(lambda: opt.init_any(ocfg, pshape))
+
+    step = make_train_step(model, ocfg, num_microbatches)
+    jitted = jax.jit(step,
+                     in_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs),
+                                   _ns(mesh, bspecs)),
+                     out_shardings=(_ns(mesh, pspecs), _ns(mesh, ospecs), None),
+                     donate_argnums=(0, 1))
+    inputs = {
+        "params": _sds_with(_ns(mesh, pspecs), pshape),
+        "opt_state": _sds_with(_ns(mesh, ospecs), oshape),
+        "batch": _sds_with(_ns(mesh, bspecs), bshape),
+    }
+    return jitted, inputs
+
+
+# -------------------------------------------------------------------- prefill
+def build_prefill_step(model: Model, mesh, pol: ShardingPolicy, shape: ShapeConfig,
+                       quantized: bool = False, cache_int8: bool = False):
+    """Full-sequence forward populating a fresh KV/state cache."""
+    import jax.numpy as jnp
+    B, S = shape.global_batch, shape.seq_len
+    pshape = params_shape(model, quantized)
+    pspecs = param_specs(model.cfg, pshape, pol)
+    cdtype = jnp.int8 if cache_int8 else None
+    cshape = model.cache_spec(B, S, spec_slack=0, dtype=cdtype)
+    cspecs = cache_specs(model.cfg, cshape, pol, B)
+    tok_spec, _ = io_specs(pol, B)
+
+    def prefill(params, tokens, cache, extras):
+        logits, new_cache, aux = model.apply(params, tokens, cache,
+                                             logits_slice="last", **extras)
+        return logits, new_cache
+
+    ex_specs = extras_specs(model, B, pol)
+    ex_shape = extras_shape(model, B)
+    jitted = jax.jit(prefill,
+                     in_shardings=(_ns(mesh, pspecs), NamedSharding(mesh, tok_spec),
+                                   _ns(mesh, cspecs), _ns(mesh, ex_specs)),
+                     out_shardings=None,
+                     donate_argnums=(2,))
+    inputs = {
+        "params": _sds_with(_ns(mesh, pspecs), pshape),
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                       sharding=NamedSharding(mesh, tok_spec)),
+        "cache": _sds_with(_ns(mesh, cspecs), cshape),
+        "extras": _sds_with(_ns(mesh, ex_specs), ex_shape),
+    }
+    return jitted, inputs
+
+
+# --------------------------------------------------------------------- decode
+def decode_cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    return shape.seq_len
+
+
+def build_decode_step(model: Model, mesh, pol: ShardingPolicy, shape: ShapeConfig,
+                      quantized: bool = False, cache_int8: bool = False):
+    """serve_step: ONE new token against a cache of shape.seq_len."""
+    B = shape.global_batch
+    S = decode_cache_len(model.cfg, shape)
+    pshape = params_shape(model, quantized)
+    pspecs = param_specs(model.cfg, pshape, pol)
+    cdtype = jnp.int8 if cache_int8 else None
+    cshape = model.cache_spec(B, S, spec_slack=0, dtype=cdtype)
+    cspecs = cache_specs(model.cfg, cshape, pol, B)
+    tok_spec, _ = io_specs(pol, B)
+
+    # encdec decode needs the (static) cross-attention KV as an input
+    ex_shape = {}
+    ex_specs = {}
+    if model.family == "encdec":
+        cfg = model.cfg
+        ex_shape["cross"] = {
+            "k": jax.ShapeDtypeStruct((cfg.num_layers, B, cfg.encoder_seq,
+                                       cfg.num_kv_heads, cfg.head_dim), cfg.act_dtype),
+            "v": jax.ShapeDtypeStruct((cfg.num_layers, B, cfg.encoder_seq,
+                                       cfg.num_kv_heads, cfg.head_dim), cfg.act_dtype),
+        }
+        b_ax = pol.batch_axis(B)
+        ex_specs["cross"] = {"k": P(None, b_ax, None, None, None),
+                             "v": P(None, b_ax, None, None, None)}
+
+    def decode(params, tokens, cache, extras):
+        logits, new_cache, _ = model.apply(params, tokens, cache,
+                                           logits_slice="last", **extras)
+        return logits, new_cache
+
+    jitted = jax.jit(decode,
+                     in_shardings=(_ns(mesh, pspecs), NamedSharding(mesh, tok_spec),
+                                   _ns(mesh, cspecs), _ns(mesh, ex_specs)),
+                     out_shardings=None,
+                     donate_argnums=(2,))
+    inputs = {
+        "params": _sds_with(_ns(mesh, pspecs), pshape),
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                       sharding=NamedSharding(mesh, tok_spec)),
+        "cache": _sds_with(_ns(mesh, cspecs), cshape),
+        "extras": _sds_with(_ns(mesh, ex_specs), ex_shape),
+    }
+    return jitted, inputs
+
+
+# ----------------------------------------------------- speculative serve step
+def build_spec_round_step(target: Model, drafter: Model, mesh,
+                          pol_t: ShardingPolicy, pol_d: ShardingPolicy,
+                          shape: ShapeConfig, gamma: int = 4):
+    """One monolithic speculative round (draft scan + verify + acceptance +
+    rollback) with per-partition device affinities — the paper's technique as a
+    first-class serving step, lowered in the dry-run like any other step."""
+    from repro.core import acceptance
+    B = shape.global_batch
+    S = decode_cache_len(target.cfg, shape)
+    pt_shape, pd_shape = params_shape(target), params_shape(drafter)
+    pt_specs = param_specs(target.cfg, pt_shape, pol_t)
+    pd_specs = param_specs(drafter.cfg, pd_shape, pol_d)
+    ct_shape = target.cache_spec(B, S, spec_slack=gamma + 2)
+    cd_shape = drafter.cache_spec(B, S, spec_slack=gamma + 2)
+    ct_specs = cache_specs(target.cfg, ct_shape, pol_t, B)
+    cd_specs = cache_specs(drafter.cfg, cd_shape, pol_d, B)
+    tok_spec, _ = io_specs(pol_t, B)
+
+    def spec_round(params_t, params_d, t_last, tcache, dcache):
+        def dstep(carry, _):
+            tok, cache = carry
+            logits, cache, _ = drafter.apply(params_d, tok[:, None], cache,
+                                             logits_slice="last")
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return (nxt, cache), nxt
+
+        (_, dcache), drafts = jax.lax.scan(dstep, (t_last, dcache),
+                                           jnp.arange(gamma))
+        drafts = jnp.moveaxis(drafts, 0, 1)                    # [B, G]
+        verify_in = jnp.concatenate([t_last[:, None], drafts], axis=1)
+        p_logits, tcache, _ = target.apply(params_t, verify_in, tcache)
+        res = acceptance.verify_greedy(drafts, p_logits)
+        n_commit = jnp.min(res.n_emitted)
+        from repro.cache import kv_cache
+        new_index = tcache["index"] - (gamma + 1) + n_commit
+        tcache = kv_cache.rollback(tcache, new_index)
+        dcache = kv_cache.rollback(dcache, new_index)
+        return res.out_tokens, n_commit, tcache, dcache
+
+    jitted = jax.jit(spec_round,
+                     in_shardings=(_ns(mesh, pt_specs), _ns(mesh, pd_specs),
+                                   NamedSharding(mesh, P(pol_t.batch_axis(B))),
+                                   _ns(mesh, ct_specs), _ns(mesh, cd_specs)),
+                     out_shardings=None,
+                     donate_argnums=(3, 4))
+    inputs = {
+        "params_t": _sds_with(_ns(mesh, pt_specs), pt_shape),
+        "params_d": _sds_with(_ns(mesh, pd_specs), pd_shape),
+        "t_last": jax.ShapeDtypeStruct(
+            (B,), jnp.int32, sharding=NamedSharding(mesh, P(pol_t.batch_axis(B)))),
+        "tcache": _sds_with(_ns(mesh, ct_specs), ct_shape),
+        "dcache": _sds_with(_ns(mesh, cd_specs), cd_shape),
+    }
+    return jitted, inputs

@@ -1,0 +1,112 @@
+"""Attention: GQA with causal / sliding-window masking, cache-aware.
+
+Two execution paths with identical semantics (tests assert allclose):
+
+  * ``attn_dense``   — materializes the [B,H,Q,S] score matrix. Used for short
+                       sequences and single-token decode.
+  * ``attn_chunked`` — lax.scan over KV chunks with an online softmax
+                       (flash-attention-style, O(S·chunk) memory). Used for long
+                       prefill so the 32k/500k shapes lower without an S×S tensor.
+
+The Pallas TPU kernel in repro.kernels.flash_attention is the hardware-targeted
+drop-in for attn_chunked; model code selects it via ModelConfig when running on
+TPU. The pure-jnp paths here are the oracle and the CPU/dry-run path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-but-finite; avoids NaNs from (-inf) - (-inf)
+
+
+def _mask(q_pos, kv_pos, window, causal=True):
+    """Boolean mask [Q,S] (shared positions) or [B,Q,S] (per-row positions,
+    the batched-speculation path): causal + optional sliding window."""
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    if causal:
+        m = qp >= kp
+    else:
+        m = jnp.broadcast_to(kp >= -1, jnp.broadcast_shapes(qp.shape, kp.shape))
+    if window is not None:
+        m = m & (jnp.abs(qp - kp) < window)
+    m = m & (kp >= 0)  # invalid cache slots carry position -1
+    return m
+
+
+def _expand_mask(m):
+    """[Q,S] -> [1,1,1,Q,S]; [B,Q,S] -> [B,1,1,Q,S] (scores are [B,Kv,G,Q,S])."""
+    if m.ndim == 2:
+        return m[None, None, None]
+    return m[:, None, None]
+
+
+def _gqa_scores(q, k):
+    """q:[B,Q,H,D] k:[B,S,Kv,D] -> [B,Kv,H/Kv,Q,S] fp32."""
+    B, Q, H, D = q.shape
+    Kv = k.shape[2]
+    q = q.reshape(B, Q, Kv, H // Kv, D)
+    return jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32))
+
+
+def attn_dense(q, k, v, q_pos, kv_pos, *, window=None, scale=None, causal=True):
+    """q:[B,Q,H,D] k,v:[B,S,Kv,D] positions int32 -> [B,Q,H,D]."""
+    B, Q, H, D = q.shape
+    Kv = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    s = _gqa_scores(q, k) * scale                             # [B,Kv,G,Q,S]
+    m = _mask(q_pos, kv_pos, window, causal)
+    s = jnp.where(_expand_mask(m), s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Q, H, D).astype(q.dtype)
+
+
+def attn_chunked(q, k, v, q_pos, kv_pos, *, window=None, scale=None, chunk=512, causal=True):
+    """Online-softmax attention scanning over KV chunks. Same semantics as attn_dense."""
+    B, Q, H, D = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+    kc = k.reshape(B, n_chunks, chunk, Kv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Kv, D).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(n_chunks, chunk)
+    qf = q.reshape(B, Q, Kv, H // Kv, D).astype(jnp.float32)
+
+    def step(carry, x):
+        acc, mx, den = carry
+        k_i, v_i, p_i = x
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_i.astype(jnp.float32)) * scale
+        m = _mask(q_pos, p_i, window, causal)
+        s = jnp.where(_expand_mask(m), s, NEG_INF)
+        mx_new = jnp.maximum(mx, s.max(axis=-1))
+        alpha = jnp.exp(mx - mx_new)
+        p = jnp.exp(s - mx_new[..., None])
+        den = den * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, v_i.astype(jnp.float32))
+        return (acc, mx_new, den), None
+
+    acc0 = jnp.zeros((B, Kv, H // Kv, Q, D), jnp.float32)
+    mx0 = jnp.full((B, Kv, H // Kv, Q), NEG_INF, jnp.float32)
+    den0 = jnp.zeros((B, Kv, H // Kv, Q), jnp.float32)
+    (acc, _, den), _ = jax.lax.scan(step, (acc0, mx0, den0), (kc, vc, pc))
+    o = acc / jnp.maximum(den, 1e-30)[..., None]              # [B,Kv,G,Q,D]
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Q, H, D).astype(q.dtype)
+
+
+def attention(q, k, v, q_pos, kv_pos, *, window=None, scale=None,
+              chunk=512, force_dense=False, causal=True):
+    """Dispatch: dense path for short KV, chunked for long KV."""
+    S = k.shape[1]
+    if force_dense or S <= 2 * chunk:
+        return attn_dense(q, k, v, q_pos, kv_pos, window=window, scale=scale, causal=causal)
+    return attn_chunked(q, k, v, q_pos, kv_pos, window=window, scale=scale, chunk=chunk,
+                        causal=causal)

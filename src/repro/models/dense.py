@@ -1,0 +1,151 @@
+"""Dense (llama-style) decoder-only transformer: RMSNorm + GQA + RoPE + SwiGLU.
+
+Layers are stacked on a leading axis and executed with lax.scan so the compiled
+HLO contains one layer body regardless of depth (critical for the 40x2 dry-run
+compile budget). The KV cache is threaded through the scan as stacked xs/ys.
+
+API (used by every decoder family):
+  init(cfg, rng)                                    -> params
+  forward(cfg, params, tokens, cache, ...)          -> logits[, new_cache]
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache import kv_cache
+from repro.models import layers as L
+from repro.models.attention import attention
+
+
+# ---------------------------------------------------------------------- init
+def init_attn(key, cfg):
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = cfg.weight_dtype
+    return {
+        "norm": L.init_rmsnorm(d, dt),
+        "q": L.init_linear(kq, d, cfg.num_heads * hd, dt),
+        "k": L.init_linear(kk, d, cfg.num_kv_heads * hd, dt),
+        "v": L.init_linear(kv, d, cfg.num_kv_heads * hd, dt),
+        "o": L.init_linear(ko, cfg.num_heads * hd, d, dt),
+    }
+
+
+def init_layer(key, cfg):
+    ka, km = jax.random.split(key)
+    return {
+        "attn": init_attn(ka, cfg),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, cfg.weight_dtype),
+        "mlp": L.init_swiglu(km, cfg.d_model, cfg.d_ff, cfg.weight_dtype),
+    }
+
+
+def _stack_layers(key, cfg, init_one, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_one(k, cfg))(keys)
+
+
+def init(cfg, rng):
+    ke, kl, kh = jax.random.split(rng, 3)
+    params = {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype),
+        "layers": _stack_layers(kl, cfg, init_layer, cfg.num_layers),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.weight_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_linear(kh, cfg.d_model, cfg.vocab_size, cfg.weight_dtype)
+    return params
+
+
+# ------------------------------------------------------------------- forward
+def attn_block(cfg, p, x, q_pos, layer_cache, index, window, use_rope=True):
+    """Self-attention sub-block; returns (out, new_layer_cache or None)."""
+    B, Q, _ = x.shape
+    hd = cfg.head_dim
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    q = L.linear(p["q"], h).reshape(B, Q, cfg.num_heads, hd)
+    k = L.linear(p["k"], h).reshape(B, Q, cfg.num_kv_heads, hd)
+    v = L.linear(p["v"], h).reshape(B, Q, cfg.num_kv_heads, hd)
+    if use_rope:
+        q = L.apply_rope(q, q_pos, cfg.rope_theta)
+        k = L.apply_rope(k, q_pos, cfg.rope_theta)
+    if layer_cache is None:
+        kv_pos = q_pos
+        o = attention(q, k, v, q_pos, kv_pos, window=window)
+        new_cache = None
+    else:
+        k_all, v_all, kv_pos, new_cache = kv_cache.extend(layer_cache, k, v, index)
+        o = attention(q, k_all, v_all, q_pos, kv_pos, window=window)
+    o = L.linear(p["o"], o.reshape(B, Q, cfg.num_heads * hd))
+    return o, new_cache
+
+
+def dense_layer(cfg, p, x, q_pos, layer_cache, index):
+    o, new_cache = attn_block(cfg, p["attn"], x, q_pos, layer_cache, index,
+                              cfg.sliding_window)
+    x = x + o
+    x = x + L.swiglu(p["mlp"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+    return x, new_cache
+
+
+def scan_layers(layer_fn, stacked_params, x, cache, remat=False, cfg=None):
+    """Run layer_fn over stacked params via lax.scan, threading per-layer cache."""
+    def step(h, xs):
+        lp, lc = xs
+        h, new_lc = layer_fn(lp, h, lc)
+        return h, new_lc
+    if remat:
+        step = L.remat_wrap(step, cfg)
+
+    if cache is None:
+        xs = (stacked_params, None)
+        # scan needs a pytree with consistent structure; use a dummy per-layer None
+        n = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+        dummy = jnp.zeros((n,), jnp.int32)
+        def step_nc(h, xs):
+            lp, _ = xs
+            h, _ = layer_fn(lp, h, None)
+            return h, None
+        if remat:
+            step_nc = L.remat_wrap(step_nc, cfg)
+        h, _ = jax.lax.scan(step_nc, x, (stacked_params, dummy))
+        return h, None
+    layer_kv = {"k": cache["k"], "v": cache["v"]}
+    h, new_kv = jax.lax.scan(step, x, (stacked_params, layer_kv))
+    return h, new_kv
+
+
+def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=None):
+    """tokens: [B, Q] int32 (or input_embeds [B, Q, D]).
+
+    cache=None  -> full-sequence causal pass (train / paper-faithful no-cache mode)
+    cache=dict  -> extend: write Q new tokens at cache["index"], return new cache
+    logits_slice: if "last", only unembed the final position (decode fast-path).
+    """
+    x = input_embeds if input_embeds is not None else L.embed(params["embed"], tokens)
+    x = x.astype(cfg.act_dtype)
+    B, Q = x.shape[0], x.shape[1]
+    index = cache["index"] if cache is not None else jnp.zeros((), jnp.int32)
+    # index: scalar (shared) or [B] (per-row batched speculation)
+    q_pos = jnp.asarray(index)[..., None] + jnp.arange(Q, dtype=jnp.int32) \
+        if jnp.asarray(index).ndim else index + jnp.arange(Q, dtype=jnp.int32)
+
+    def layer_fn(lp, h, lc):
+        return dense_layer(cfg, lp, h, q_pos, lc, index)
+
+    x, new_kv = scan_layers(layer_fn, params["layers"], x, cache,
+                            remat=cfg.remat, cfg=cfg)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logits_slice == "last":
+        x = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.linear(params["lm_head"], x.astype(jnp.float32))
+    if cache is None:
+        return logits, None
+    new_cache = {"k": new_kv["k"], "v": new_kv["v"], "index": index + Q}
+    return logits, new_cache

@@ -1,0 +1,108 @@
+"""Shared neural-net primitives (pure JAX, functional).
+
+Parameters are plain nested dicts of jnp arrays; every init_* function has a
+matching spec_* function in repro.models.specs producing a PartitionSpec tree
+with identical structure (enforced by tests/test_specs.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------- init
+def _dense_init(key, shape, dtype, scale=None):
+    """Truncated-normal fan-in init (matches common LLM practice)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, scale=None):
+    return {"w": _dense_init(key, (d_in, d_out), dtype, scale)}
+
+
+def linear(p, x):
+    from repro.quant.int8 import maybe_quant_act  # cheap no-op unless enabled
+    x = maybe_quant_act(x)
+    if "w_q" in p:
+        # int8 serving weights: dequant fuses into the matmul read, so HBM
+        # traffic is 1 byte/weight (the paper's w8 deployment path; the Pallas
+        # int8 kernel is the TPU drop-in that also feeds the MXU in int8)
+        w = p["w_q"].astype(x.dtype) * p["scale"].astype(x.dtype)
+        return x @ w
+    return x @ p["w"].astype(x.dtype)
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs    # [..., S, D/2]
+    cos, sin = jnp.cos(angles)[..., None, :], jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- MLP
+def init_swiglu(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d_model, d_ff, dtype),
+        "up": init_linear(k2, d_model, d_ff, dtype),
+        "down": init_linear(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(p, x):
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+def init_gelu_mlp(key, d_model, d_ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"up": init_linear(k1, d_model, d_ff, dtype),
+            "down": init_linear(k2, d_ff, d_model, dtype)}
+
+
+def gelu_mlp(p, x):
+    return linear(p["down"], jax.nn.gelu(linear(p["up"], x)))
+
+
+# --------------------------------------------------------------------------- embeddings
+def init_embedding(key, vocab, d_model, dtype):
+    return {"table": _dense_init(key, (vocab, d_model), dtype, scale=1.0)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    """Tied unembedding: project hidden states to vocab logits (fp32)."""
+    return (x.astype(jnp.float32) @ p["table"].astype(jnp.float32).T)
+
+
+def remat_wrap(fn, cfg):
+    """jax.checkpoint with the configured policy ("full" recomputes everything;
+    "dots" saves matmul outputs — less recompute, more live memory)."""
+    import jax
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)

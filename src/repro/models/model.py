@@ -1,0 +1,158 @@
+"""Unified model API over the six families.
+
+  model = build_model(cfg)
+  params = model.init(rng)
+  logits, cache, aux = model.apply(params, tokens, cache=None, **extras)
+  cache  = model.init_cache(batch, max_len, spec_slack)          (real buffers)
+  spec   = model.cache_spec(batch, max_len, spec_slack)          (ShapeDtypeStructs)
+  cache' = model.rollback(cache, accepted_index, q_len)          (O(1)/trail)
+
+``extras`` carries modality-frontend stand-ins: ``patches`` (vlm),
+``frames``/``cross`` (encdec). ``model.extra_inputs(batch)`` returns
+ShapeDtypeStructs for them (the stub carve-out).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache import kv_cache
+from repro.models import dense, encdec, hybrid, moe, ssm, vlm
+
+
+class Model:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.family = cfg.family
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng):
+        fam = self.family
+        if fam in ("dense",):
+            return dense.init(self.cfg, rng)
+        if fam == "vlm":
+            return vlm.init(self.cfg, rng)
+        if fam == "moe":
+            return moe.init(self.cfg, rng)
+        if fam == "ssm":
+            return ssm.init(self.cfg, rng)
+        if fam == "hybrid":
+            return hybrid.init(self.cfg, rng)
+        if fam == "encdec":
+            return encdec.init(self.cfg, rng)
+        raise ValueError(fam)
+
+    # ----------------------------------------------------------------- apply
+    def apply(self, params, tokens, cache=None, *, want_trail=False,
+              logits_slice=None, patches=None, frames=None, cross=None):
+        cfg = self.cfg
+        fam = self.family
+        if fam == "dense":
+            logits, new_cache = dense.forward(cfg, params, tokens, cache,
+                                              logits_slice=logits_slice)
+            return logits, new_cache, {}
+        if fam == "vlm":
+            logits, new_cache = vlm.forward(cfg, params, tokens, cache,
+                                            patches=patches, logits_slice=logits_slice)
+            return logits, new_cache, {}
+        if fam == "moe":
+            return moe.forward(cfg, params, tokens, cache, logits_slice=logits_slice)
+        if fam == "ssm":
+            logits, new_cache = ssm.forward(cfg, params, tokens, cache,
+                                            want_trail=want_trail,
+                                            logits_slice=logits_slice)
+            return logits, new_cache, {}
+        if fam == "hybrid":
+            logits, new_cache = hybrid.forward(cfg, params, tokens, cache,
+                                               want_trail=want_trail,
+                                               logits_slice=logits_slice)
+            return logits, new_cache, {}
+        if fam == "encdec":
+            if cross is None:
+                if frames is None:
+                    raise ValueError("encdec needs frames or precomputed cross KV")
+                enc_out = encdec.encode(cfg, params, frames)
+                cross = encdec.cross_kv(cfg, params, enc_out)
+            logits, new_cache = encdec.forward(cfg, params, tokens, cache,
+                                               cross=cross, logits_slice=logits_slice)
+            return logits, new_cache, {"cross": cross}
+        raise ValueError(fam)
+
+    # ----------------------------------------------------------------- cache
+    def cache_len(self, text_len: int) -> int:
+        """Cache capacity needed for `text_len` text positions (VLM prepends
+        vision tokens which occupy cache slots)."""
+        if self.family == "vlm":
+            return text_len + self.cfg.num_vision_tokens
+        return text_len
+
+    def _kv_window(self, spec_slack):
+        w = self.cfg.sliding_window
+        return None if w is None else w + spec_slack
+
+    def init_cache(self, batch, max_len, spec_slack=8, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or cfg.act_dtype
+        fam = self.family
+        if fam in ("dense", "vlm"):
+            return kv_cache.init_cache(cfg.num_layers, batch, max_len,
+                                       cfg.num_kv_heads, cfg.head_dim,
+                                       window=self._kv_window(spec_slack), dtype=dtype)
+        if fam == "moe":
+            n_blocks = cfg.num_layers // max(cfg.moe_every, 1)
+            per = max(cfg.moe_every, 1)
+            def kv():
+                return kv_cache.init_cache(n_blocks, batch, max_len,
+                                           cfg.num_kv_heads, cfg.head_dim,
+                                           window=self._kv_window(spec_slack),
+                                           dtype=dtype)
+            blocks = {f"dense{i}": {k: v for k, v in kv().items() if k != "index"}
+                      for i in range(per - 1)}
+            blocks["moe"] = {k: v for k, v in kv().items() if k != "index"}
+            return {"blocks": blocks, "index": jnp.zeros((), jnp.int32)}
+        if fam == "encdec":
+            return kv_cache.init_cache(cfg.num_layers, batch, max_len,
+                                       cfg.num_kv_heads, cfg.head_dim, dtype=dtype)
+        if fam == "ssm":
+            G, N, K = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+            ch = cfg.d_inner + 2 * G * N
+            return {"state": jnp.zeros((cfg.num_layers, batch, cfg.ssm_heads,
+                                        cfg.ssm_head_dim, N), dtype),
+                    "conv": jnp.zeros((cfg.num_layers, batch, K - 1, ch), dtype),
+                    "index": jnp.zeros((), jnp.int32)}
+        if fam == "hybrid":
+            return hybrid.init_cache(cfg, batch, max_len, spec_slack, dtype)
+        raise ValueError(fam)
+
+    def cache_spec(self, batch, max_len, spec_slack=8, dtype=None):
+        dtype = dtype or self.cfg.act_dtype
+        cache = jax.eval_shape(lambda: self.init_cache(batch, max_len, spec_slack, dtype))
+        return cache
+
+    # -------------------------------------------------------------- rollback
+    def rollback(self, cache, accepted_index, q_len):
+        fam = self.family
+        if fam in ("dense", "moe", "vlm", "encdec"):
+            return kv_cache.rollback(cache, accepted_index)
+        if fam == "ssm":
+            return ssm.rollback(cache, accepted_index, q_len)
+        if fam == "hybrid":
+            return hybrid.rollback(cache, accepted_index, q_len)
+        raise ValueError(fam)
+
+    # --------------------------------------------- modality frontend stand-ins
+    def extra_inputs(self, batch, dtype=None) -> Dict[str, Any]:
+        dtype = dtype or self.cfg.act_dtype
+        if self.family == "vlm":
+            n = self.cfg.num_vision_tokens
+            return {"patches": jax.ShapeDtypeStruct((batch, n, vlm.VIT_DIM), dtype)}
+        if self.family == "encdec":
+            return {"frames": jax.ShapeDtypeStruct(
+                (batch, self.cfg.encoder_seq, self.cfg.d_model), dtype)}
+        return {}
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

@@ -1,0 +1,205 @@
+"""Mixture-of-Experts transformer (Mixtral / Llama-4 style).
+
+Expert compute uses the GShard-style capacity-based dispatch/combine einsum
+formulation: tokens are grouped, each expert accepts at most C tokens per group,
+and dispatch/combine are expressed as dense einsums that GSPMD turns into
+all-to-alls when the expert axis is sharded. This is the standard TPU "dropped"
+MoE (cf. GShard, Switch, MaxText): it compiles for every mesh and its FLOP
+overhead (the dispatch einsums) is ~5% of expert FLOPs at our shapes.
+
+Routing: softmax over experts -> top-k -> renormalize (Mixtral convention).
+Aux losses (load-balance + router z-loss) are accumulated through the layer scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------- init
+def init_moe_mlp(key, cfg):
+    kr, ke, ks = jax.random.split(key, 3)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = cfg.weight_dtype
+    keys = jax.random.split(ke, E)
+    experts = jax.vmap(lambda k: L.init_swiglu(k, d, f, dt))(keys)  # stacked [E, ...]
+    p = {"router": L.init_linear(kr, d, E, dt, scale=d ** -0.5), "experts": experts}
+    if cfg.num_shared_experts:
+        p["shared"] = L.init_swiglu(ks, d, cfg.num_shared_experts * f, dt)
+    return p
+
+
+def init_layer(key, cfg):
+    ka, km = jax.random.split(key)
+    return {
+        "attn": dense.init_attn(ka, cfg),
+        "mlp_norm": L.init_rmsnorm(cfg.d_model, cfg.weight_dtype),
+        "moe": init_moe_mlp(km, cfg),
+    }
+
+
+def init_block(key, cfg):
+    """One scan block: (moe_every - 1) dense-MLP layers followed by one MoE
+    layer (llama4-style interleaving; moe_every=1 -> every layer MoE)."""
+    n_dense = max(cfg.moe_every - 1, 0)
+    keys = jax.random.split(key, n_dense + 1)
+    block = {f"dense{i}": dense.init_layer(keys[i], cfg) for i in range(n_dense)}
+    block["moe"] = init_layer(keys[-1], cfg)
+    return block
+
+
+def init(cfg, rng):
+    ke, kl, kh = jax.random.split(rng, 3)
+    n_blocks = cfg.num_layers // max(cfg.moe_every, 1)
+    params = {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype),
+        "layers": dense._stack_layers(kl, cfg, init_block, n_blocks),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.weight_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_linear(kh, cfg.d_model, cfg.vocab_size, cfg.weight_dtype)
+    return params
+
+
+# ------------------------------------------------------------------- routing
+def group_shape(T: int) -> int:
+    """Tokens per routing group. Groups bound the capacity buffer size."""
+    for g in (2048, 1024, 512, 256, 128):
+        if T % g == 0:
+            return g
+    return T
+
+
+def moe_mlp(cfg, p, x):
+    """x: [B, S, D] -> (y, aux_losses). Routes over flattened (B*S) tokens."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    g = group_shape(T)
+    n_groups = T // g
+    # dropless for small token counts (decode / speculative verify): capacity
+    # dropping is a *training* throughput trade; serving must be exact so the
+    # cached and uncached paths agree and greedy spec-decode stays lossless.
+    if g * K <= 512:
+        cap = g
+    else:
+        cap = max(1, int(g * K / E * 1.25))                   # capacity factor 1.25
+
+    xt = x.reshape(n_groups, g, D)
+    logits = L.linear(p["router"], xt).astype(jnp.float32)     # [G, g, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                     # [G, g, K]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity buffer.
+    # priority: token order within the group, then choice order.
+    assign = jax.nn.one_hot(top_e, E, dtype=jnp.int32)         # [G, g, K, E]
+    flat = assign.reshape(n_groups, g * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # tokens ahead of me
+    pos = pos.reshape(n_groups, g, K, E)
+    within_cap = (pos < cap) & (assign > 0)
+    # a token routes to each expert at most once, so the K axis can be folded
+    # BEFORE the capacity one-hot — the [G,g,K,E,C] intermediate never exists
+    # (it dominated temp memory in the first dry-run; see EXPERIMENTS.md §Perf)
+    pos_e = jnp.sum(pos * within_cap, axis=2)                  # [G, g, E]
+    sel_e = jnp.any(within_cap, axis=2)                        # [G, g, E]
+    gate_e = jnp.sum(top_p[..., None] * within_cap, axis=2)    # [G, g, E]
+    disp = (jax.nn.one_hot(pos_e, cap, dtype=x.dtype)
+            * sel_e[..., None].astype(x.dtype))                # [G, g, E, C]
+    comb = disp * gate_e[..., None].astype(x.dtype)
+
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xt)                # [G, E, C, D]
+    w = p["experts"]
+
+    def ew(wd):  # expert weight, handling int8 serving quantization
+        if "w_q" in wd:
+            return (wd["w_q"].astype(x.dtype)
+                    * wd["scale"][:, None, :].astype(x.dtype))
+        return wd["w"].astype(x.dtype)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, ew(w["gate"])))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, ew(w["up"]))
+    ye = jnp.einsum("gecf,efd->gecd", h, ew(w["down"]))
+    y = jnp.einsum("gsec,gecd->gsd", comb, ye).reshape(B, S, D)
+
+    if cfg.num_shared_experts:
+        y = y + L.swiglu(p["shared"], x)
+
+    # aux: load-balance (Switch) + router z-loss
+    density = assign.astype(jnp.float32).sum(2).mean(1)        # [G, E] token fraction
+    router_mean = probs.mean(1)                                # [G, E]
+    lb = (density * router_mean).sum(-1).mean() * E
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return y, {"load_balance": lb, "router_z": z}
+
+
+def moe_layer(cfg, p, x, q_pos, layer_cache, index):
+    o, new_cache = dense.attn_block(cfg, p["attn"], x, q_pos, layer_cache, index,
+                                    cfg.sliding_window)
+    x = x + o
+    y, aux = moe_mlp(cfg, p["moe"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+    return x + y, new_cache, aux
+
+
+def moe_block(cfg, bp, x, q_pos, block_cache, index):
+    """(moe_every-1) dense layers + 1 MoE layer; caches keyed like params."""
+    n_dense = max(cfg.moe_every - 1, 0)
+    new_bc = {}
+    for i in range(n_dense):
+        key = f"dense{i}"
+        lc = block_cache[key] if block_cache is not None else None
+        x, nc = dense.dense_layer(cfg, bp[key], x, q_pos, lc, index)
+        new_bc[key] = nc
+    lc = block_cache["moe"] if block_cache is not None else None
+    x, nc, aux = moe_layer(cfg, bp["moe"], x, q_pos, lc, index)
+    new_bc["moe"] = nc
+    return x, (new_bc if block_cache is not None else None), aux
+
+
+def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=None):
+    x = input_embeds if input_embeds is not None else L.embed(params["embed"], tokens)
+    x = x.astype(cfg.act_dtype)
+    B, Q = x.shape[0], x.shape[1]
+    index = cache["index"] if cache is not None else jnp.zeros((), jnp.int32)
+    # index: scalar (shared) or [B] (per-row batched speculation)
+    q_pos = (jnp.asarray(index)[..., None] + jnp.arange(Q, dtype=jnp.int32)
+             if jnp.asarray(index).ndim else index + jnp.arange(Q, dtype=jnp.int32))
+
+    def step(carry, xs):
+        h, lb, rz = carry
+        lp, lc = xs
+        h, new_lc, aux = moe_block(cfg, lp, h, q_pos, lc, index)
+        return (h, lb + aux["load_balance"], rz + aux["router_z"]), new_lc
+
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.remat:
+        step = L.remat_wrap(step, cfg)
+    if cache is None:
+        n = cfg.num_layers
+        def step_nc(carry, lp):
+            h, lb, rz = carry
+            h, _, aux = moe_block(cfg, lp, h, q_pos, None, index)
+            return (h, lb + aux["load_balance"], rz + aux["router_z"]), None
+        if cfg.remat:
+            step_nc = L.remat_wrap(step_nc, cfg)
+        (x, lb, rz), _ = jax.lax.scan(step_nc, (x, zero, zero), params["layers"])
+        new_kv = None
+    else:
+        layer_kv = cache["blocks"]
+        (x, lb, rz), new_kv = jax.lax.scan(step, (x, zero, zero),
+                                           (params["layers"], layer_kv))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logits_slice == "last":
+        x = x[:, -1:]
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.linear(params["lm_head"], x.astype(jnp.float32))
+    n_blocks = cfg.num_layers // max(cfg.moe_every, 1)
+    aux = {"load_balance": lb / n_blocks, "router_z": rz / n_blocks}
+    if cache is None:
+        return logits, None, aux
+    return logits, {"blocks": new_kv, "index": index + Q}, aux

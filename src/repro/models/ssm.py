@@ -1,0 +1,222 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Sequence path uses the chunked SSD algorithm (quadratic within chunks, linear
+recurrence across chunk states), which is MXU-friendly on TPU: every term is an
+einsum over [chunk x chunk] or [chunk x state] blocks. Decode is the O(1)
+recurrent step on the cached state.
+
+Speculative rollback: an SSM state cannot be truncated like a KV ring buffer, so
+multi-token extends (the verify pass, Q = γ+1) additionally emit a per-token
+*state trail*; ``rollback`` selects the state at the accepted position. The trail
+is Q x state and only exists during verification — this is the SSM analogue of
+KV-cache index rollback, noted in DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------- init
+def init_layer(key, cfg):
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * G * N
+    kp, kc, ko, ka = jax.random.split(key, 4)
+    dt = cfg.weight_dtype
+    return {
+        "norm": L.init_rmsnorm(d, dt),
+        "in_proj": L.init_linear(kp, d, 2 * di + 2 * G * N + H, dt),
+        "conv_w": (jax.random.normal(kc, (cfg.ssm_conv, conv_ch), jnp.float32)
+                   * (cfg.ssm_conv ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),  # softplus^-1
+        "gate_norm": L.init_rmsnorm(di, dt),
+        "out_proj": L.init_linear(ko, di, d, dt),
+    }
+
+
+def init(cfg, rng):
+    ke, kl = jax.random.split(rng)
+    from repro.models.dense import _stack_layers
+    return {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype),
+        "layers": _stack_layers(kl, cfg, init_layer, cfg.num_layers),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.weight_dtype),
+    }
+
+
+# ---------------------------------------------------------------------- SSD
+def _segsum(x):
+    """[..., T] -> [..., T, T] cumulative segment sums, -inf above diagonal."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dA, Bm, Cm, chunk, init_state):
+    """Chunked SSD scan.
+
+    x:  [b, l, h, p]   (pre-multiplied by dt)
+    dA: [b, l, h]      (log-decay = dt * A, negative)
+    Bm, Cm: [b, l, h, n] (groups already broadcast to heads)
+    init_state: [b, h, p, n]
+    Returns (y [b,l,h,p], final_state [b,h,p,n]).
+    """
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lc = x.shape[1]
+    c, q = lc // chunk, chunk
+    X = x.reshape(b, c, q, h, p)
+    A = dA.reshape(b, c, q, h).transpose(0, 3, 1, 2)           # [b,h,c,q]
+    Bc = Bm.reshape(b, c, q, h, n)
+    Cc = Cm.reshape(b, c, q, h, n)
+
+    A_cs = jnp.cumsum(A, axis=-1)                              # [b,h,c,q]
+    Ldec = jnp.exp(_segsum(A))                                 # [b,h,c,q,q]
+    Y_diag = jnp.einsum("bcqhn,bckhn,bhcqk,bckhp->bcqhp", Cc, Bc, Ldec, X)
+
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)              # [b,h,c,q]
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn", Bc, decay_states, X)
+    states = jnp.concatenate([init_state[:, None], states], axis=1)  # [b,c+1,h,p,n]
+    chunk_tot = jnp.pad(A_cs[..., -1], ((0, 0), (0, 0), (1, 0)))     # [b,h,c+1]
+    decay_chunk = jnp.exp(_segsum(chunk_tot))                  # [b,h,c+1,c+1]
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    state_decay_out = jnp.exp(A_cs)                            # [b,h,c,q]
+    Y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", Cc, prev_states, state_decay_out)
+    Y = (Y_diag + Y_off).reshape(b, lc, h, p)[:, :l]
+    return Y, final_state
+
+
+def ssd_sequential(x, dA, Bm, Cm, init_state):
+    """Token-by-token recurrence; returns per-token state trail (rollback support)."""
+    def step(state, t):
+        x_t, dA_t, B_t, C_t = t
+        state = jnp.exp(dA_t)[..., None, None] * state \
+            + jnp.einsum("bhp,bhn->bhpn", x_t, B_t)
+        y_t = jnp.einsum("bhn,bhpn->bhp", C_t, state)
+        return state, (y_t, state)
+    xs = (x.transpose(1, 0, 2, 3), dA.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2, 3), Cm.transpose(1, 0, 2, 3))
+    final, (ys, trail) = jax.lax.scan(step, init_state, xs)
+    return ys.transpose(1, 0, 2, 3), final, trail.transpose(1, 0, 2, 3, 4)  # [b,q,h,p,n]
+
+
+# ------------------------------------------------------------------- forward
+def _causal_conv(xBC, w, b, conv_cache):
+    """Depthwise causal conv. xBC: [B,Q,CH]; w: [K,CH]; conv_cache: [B,K-1,CH] or None."""
+    K = w.shape[0]
+    if conv_cache is not None:
+        xfull = jnp.concatenate([conv_cache.astype(xBC.dtype), xBC], axis=1)
+    else:
+        xfull = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    # window sum: out[t] = sum_k w[k] * xfull[t+k]
+    Q = xBC.shape[1]
+    out = jnp.zeros_like(xBC)
+    for k in range(K):
+        out = out + xfull[:, k:k + Q] * w[k].astype(xBC.dtype)
+    new_conv = xfull[:, -(K - 1):] if K > 1 else None
+    return out + b.astype(xBC.dtype), new_conv
+
+
+def ssm_mix(cfg, p, x, layer_cache, want_trail):
+    """The mamba2 mixer. layer_cache: {"state": [B,H,P,N], "conv": [B,K-1,CH]} or None."""
+    B, Q, _ = x.shape
+    di, G, N, H, P = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    zxbcdt = L.linear(p["in_proj"], h)
+    z, xBC_raw, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    conv_cache = layer_cache["conv"] if layer_cache is not None else None
+    xBC, new_conv = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"], conv_cache)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, Q, H, P)
+    rep = H // G
+    Bm = jnp.repeat(Bm.reshape(B, Q, G, N), rep, axis=2)
+    Cm = jnp.repeat(Cm.reshape(B, Q, G, N), rep, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])     # [B,Q,H]
+    A = -jnp.exp(p["A_log"])                                            # [H]
+    dA = (dt * A).astype(jnp.float32)
+    x_eff = (xs.astype(jnp.float32) * dt[..., None])
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    init_state = (layer_cache["state"].astype(jnp.float32) if layer_cache is not None
+                  else jnp.zeros((B, H, P, N), jnp.float32))
+
+    trail = None
+    if layer_cache is not None and (Q <= 16 or want_trail):
+        y, final_state, trail = ssd_sequential(x_eff, dA, Bf, Cf, init_state)
+    else:
+        y, final_state = ssd_chunked(x_eff, dA, Bf, Cf, cfg.ssm_chunk, init_state)
+    y = y + p["D"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, Q, di).astype(x.dtype)
+    y = L.rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.linear(p["out_proj"], y)
+    new_cache = None
+    if layer_cache is not None:
+        new_cache = {"state": final_state.astype(layer_cache["state"].dtype),
+                     "conv": new_conv.astype(layer_cache["conv"].dtype)}
+        if want_trail:
+            # conv trail: the conv cache as it would be after each new token
+            K = cfg.ssm_conv
+            xfull = jnp.concatenate([conv_cache.astype(x.dtype), xBC_raw], axis=1)
+            conv_trail = jnp.stack([xfull[:, j + 1:j + K] for j in range(Q)], axis=1)
+            new_cache["state_trail"] = trail.astype(layer_cache["state"].dtype)
+            new_cache["conv_trail"] = conv_trail.astype(layer_cache["conv"].dtype)
+    return x + out, new_cache
+
+
+def forward(cfg, params, tokens, cache=None, *, input_embeds=None,
+            logits_slice=None, want_trail=False):
+    x = input_embeds if input_embeds is not None else L.embed(params["embed"], tokens)
+    x = x.astype(cfg.act_dtype)
+    B, Q = x.shape[0], x.shape[1]
+    index = cache["index"] if cache is not None else jnp.zeros((), jnp.int32)
+
+    if cache is None:
+        def step_nc(h, lp):
+            h, _ = ssm_mix(cfg, lp, h, None, False)
+            return h, None
+        if cfg.remat:
+            step_nc = L.remat_wrap(step_nc, cfg)
+        x, _ = jax.lax.scan(step_nc, x, params["layers"])
+        new_cache = None
+    else:
+        layer_c = {"state": cache["state"], "conv": cache["conv"]}
+        def step(h, xs):
+            lp, lc = xs
+            h, new_lc = ssm_mix(cfg, lp, h, lc, want_trail)
+            return h, new_lc
+        x, new_layer_c = jax.lax.scan(step, x, (params["layers"], layer_c))
+        new_cache = dict(new_layer_c)
+        new_cache["index"] = index + Q
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if logits_slice == "last":
+        x = x[:, -1:]
+    logits = L.unembed(params["embed"], x)  # mamba2 ties embeddings
+    return logits, new_cache
+
+
+def rollback(cache, accepted_index, q_len):
+    """Select the state at ``accepted_index`` from the verification trail."""
+    old_index = cache["index"] - q_len
+    j = accepted_index - old_index - 1                     # trail position
+    j = jnp.clip(j, 0, q_len - 1)
+    state = jnp.take(cache["state_trail"], j, axis=2)      # [L,B,Q,...] -> [L,B,...]
+    conv = jnp.take(cache["conv_trail"], j, axis=2)
+    return {"state": state, "conv": conv,
+            "index": jnp.asarray(accepted_index, jnp.int32)}

@@ -1,0 +1,53 @@
+"""InternVL2-style VLM backbone (arXiv:2404.16821).
+
+Per the assignment carve-out, the vision encoder (InternViT) is a STUB:
+``input_specs`` provides precomputed patch embeddings [B, n_patches, vit_dim].
+This module implements the MLP projector and the InternLM2-style language model
+(dense llama-family decoder), with vision tokens prepended to the text sequence.
+
+Speculative decoding operates on the LM exactly as for dense models; the vision
+prefix is consumed during prefill and lives in the KV cache thereafter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense
+from repro.models import layers as L
+
+VIT_DIM = 3200  # InternViT-6B hidden size (stub frontend output width)
+
+
+def init(cfg, rng):
+    kd, kp1, kp2 = jax.random.split(rng, 3)
+    params = dense.init(cfg, kd)
+    params["projector"] = {
+        "fc1": L.init_linear(kp1, VIT_DIM, cfg.d_model, cfg.weight_dtype),
+        "norm": L.init_rmsnorm(VIT_DIM, cfg.weight_dtype),
+        "fc2": L.init_linear(kp2, cfg.d_model, cfg.d_model, cfg.weight_dtype),
+    }
+    return params
+
+
+def project(cfg, params, patches):
+    """patches: [B, P, VIT_DIM] -> [B, P, d_model]."""
+    p = params["projector"]
+    h = L.rmsnorm(p["norm"], patches.astype(cfg.act_dtype), cfg.norm_eps)
+    return L.linear(p["fc2"], jax.nn.gelu(L.linear(p["fc1"], h)))
+
+
+def forward(cfg, params, tokens, cache=None, *, patches=None, logits_slice=None):
+    """If ``patches`` is given (prefill), vision embeddings are prepended;
+    logits are returned for the text positions only."""
+    if patches is None:
+        return dense.forward(cfg, params, tokens, cache, logits_slice=logits_slice)
+    vis = project(cfg, params, patches)
+    txt = L.embed(params["embed"], tokens).astype(cfg.act_dtype)
+    embeds = jnp.concatenate([vis, txt], axis=1)
+    logits, new_cache = dense.forward(cfg, params, None, cache,
+                                      input_embeds=embeds, logits_slice=logits_slice)
+    n_vis = vis.shape[1]
+    if logits_slice != "last":
+        logits = logits[:, n_vis:]
+    return logits, new_cache

@@ -1,0 +1,140 @@
+"""w8a8 static quantization (paper §III-C: Intel-Neural-Compressor-style).
+
+Weights: per-output-channel symmetric int8. Activations: per-tensor symmetric
+int8. Two execution paths with matching semantics:
+
+  * fake-quant (QDQ) — quantize->dequantize in the original dtype; used to
+    reproduce the paper's acceptance-rate-vs-quantization study (Fig. 5),
+    where only the *distributional shift* matters.
+  * integer path   — int8 x int8 -> int32 matmul + rescale epilogue; this is
+    the deployment path, implemented as a Pallas MXU kernel
+    (repro.kernels.int8_matmul) with ref-checked numerics.
+
+Activation quantization is toggled process-wide via ``act_quant(...)`` — the
+hook lives in repro.models.layers.linear so every family picks it up without
+plumbing (mirrors how INC rewrites graphs behind the frontend).
+
+Deviation from the paper (recorded in DESIGN.md): the paper calibrates static
+activation scales offline with INC; we support both static (calibrated) and
+dynamic per-tensor scales, defaulting to dynamic when no calibration is given.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- primitives
+def quantize_array(w, axis: Optional[int] = -1, bits: int = 8):
+    """Symmetric quantization. axis: per-channel scale axis (None = per-tensor)."""
+    qmax = 2.0 ** (bits - 1) - 1
+    wf = w.astype(jnp.float32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(wf))
+        scale = jnp.maximum(amax / qmax, 1e-12)
+    else:
+        amax = jnp.max(jnp.abs(wf), axis=tuple(i for i in range(wf.ndim) if i != axis % wf.ndim),
+                       keepdims=True)
+        scale = jnp.maximum(amax / qmax, 1e-12)
+    q = jnp.clip(jnp.round(wf / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def fake_quant(w, axis: Optional[int] = -1, bits: int = 8):
+    q, s = quantize_array(w, axis, bits)
+    return dequantize(q, s, w.dtype)
+
+
+# ------------------------------------------------------------- model weights
+def _is_matmul_weight(path_str: str, leaf) -> bool:
+    return path_str.endswith("/w") and leaf.ndim >= 2
+
+
+def quantize_params(params, bits: int = 8, predicate: Optional[Callable] = None):
+    """Fake-quantize (QDQ) every matmul weight; embeddings/norms stay fp.
+
+    This is the paper's 'quantized target / quantized drafter' treatment for
+    the acceptance-rate study: same pytree structure, shifted distribution.
+    """
+    from repro.models.specs import _path_str
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        if (predicate or _is_matmul_weight)(ps, leaf):
+            return fake_quant(leaf, axis=-1, bits=bits)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+# --------------------------------------------------------- activation quant
+_ACT_QUANT = {"enabled": False, "bits": 8, "static_scale": None}
+
+
+@contextlib.contextmanager
+def act_quant(enabled: bool = True, bits: int = 8, static_scale: Optional[float] = None):
+    """Enable activation fake-quant inside layers.linear for the dynamic extent."""
+    prev = dict(_ACT_QUANT)
+    _ACT_QUANT.update(enabled=enabled, bits=bits, static_scale=static_scale)
+    try:
+        yield
+    finally:
+        _ACT_QUANT.update(prev)
+
+
+def maybe_quant_act(x):
+    """Called from repro.models.layers.linear on every matmul input."""
+    if not _ACT_QUANT["enabled"]:
+        return x
+    bits = _ACT_QUANT["bits"]
+    qmax = 2.0 ** (bits - 1) - 1
+    if _ACT_QUANT["static_scale"] is not None:
+        scale = jnp.float32(_ACT_QUANT["static_scale"])
+    else:
+        scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))) / qmax, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax - 1, qmax)
+    return (q * scale).astype(x.dtype)
+
+
+def calibrate_act_scale(samples, bits: int = 8, percentile: float = 99.9) -> float:
+    """Offline static calibration: percentile absmax over activation samples."""
+    import numpy as np
+    qmax = 2.0 ** (bits - 1) - 1
+    vals = np.concatenate([np.abs(np.asarray(s, np.float32)).ravel() for s in samples])
+    return float(np.percentile(vals, percentile) / qmax)
+
+
+def quantize_for_serving(params):
+    """Replace every matmul weight leaf {"w": [..., K, N]} with
+    {"w_q": int8, "scale": f32 per-output-channel} (in-place tree rewrite).
+    Embedding tables stay bf16 (gather path)."""
+    import jax
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "w" in node and getattr(node["w"], "ndim", 0) >= 2:
+                # per-output-channel: reduce over the K (contraction) dim ONLY
+                # so layer/expert stack dims keep their own scales
+                w = node["w"]
+                qmax = 127.0
+                amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2,
+                               keepdims=True)
+                sc = jnp.maximum(amax / qmax, 1e-12)
+                q = jnp.clip(jnp.round(w.astype(jnp.float32) / sc),
+                             -128, 127).astype(jnp.int8)
+                rest = {k: walk(v) for k, v in node.items() if k != "w"}
+                return {"w_q": q, "scale": sc[..., 0, :].astype(jnp.float32),
+                        **rest}
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)

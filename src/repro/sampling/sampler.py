@@ -1,0 +1,39 @@
+"""Token samplers: greedy / temperature / top-k / top-p (jit-safe, vectorized).
+
+The speculative engine uses greedy (the paper's setting) or plain temperature
+sampling; these are the serving-layer alternatives exposed through SamplerConfig.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    greedy: bool = True
+    temperature: float = 1.0
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
+
+
+def sample(key, logits, cfg: SamplerConfig):
+    """logits: [..., V] -> tokens [...] int32."""
+    if cfg.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / jnp.maximum(cfg.temperature, 1e-6)
+    if cfg.top_k is not None:
+        kth = jnp.sort(logits, axis=-1)[..., -cfg.top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if cfg.top_p is not None:
+        sorted_l = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p; keep at least 1
+        cutoff_idx = jnp.sum(cum < cfg.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,177 @@
+"""AdamW + schedules, pure-pytree (no optax dependency in this image)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: object
+    nu: object
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(cfg: AdamWConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, n):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        n = cfg.b2 * n + (1 - cfg.b2) * g * g
+        mh, nh = m / bc1, n / bc2
+        delta = mh / (jnp.sqrt(nh) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, n
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_n = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_m, flat_n)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_n = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, new_m, new_n), {"grad_norm": gnorm, "lr": lr}
+
+
+# =========================================================== Adafactor
+# Factored second moments (Shazeer & Stern, 2018): O(n+m) optimizer state per
+# n x m matrix instead of AdamW's 2x fp32 copies. Required for the >=100B
+# configs — AdamW state alone exceeds single-pod v5e HBM at 405B (see
+# EXPERIMENTS.md §Perf iteration log).
+
+
+@dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-2
+    decay_pow: float = 0.8          # beta2_t = 1 - t^-decay_pow
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_rms: float = 1.0
+    weight_decay: float = 0.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class FactoredState(NamedTuple):
+    step: jnp.ndarray
+    vr: object      # row stats   [..., n]   (dummy (1,) for <2D params)
+    vc: object      # col stats   [..., m]
+    v: object       # full stats for <2D params (dummy (1,) otherwise)
+
+
+def _dummy():
+    return jnp.zeros((1,), jnp.float32)
+
+
+def init_adafactor(params) -> FactoredState:
+    def vr_of(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2 else _dummy()
+
+    def vc_of(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if p.ndim >= 2 else _dummy())
+
+    def v_of(p):
+        return jnp.zeros(p.shape, jnp.float32) if p.ndim < 2 else _dummy()
+
+    return FactoredState(jnp.zeros((), jnp.int32),
+                         jax.tree.map(vr_of, params),
+                         jax.tree.map(vc_of, params),
+                         jax.tree.map(v_of, params))
+
+
+def apply_adafactor(cfg: AdafactorConfig, params, grads, state: FactoredState):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay_pow)
+    lr = schedule(AdamWConfig(lr=cfg.lr, warmup_steps=cfg.warmup_steps,
+                              total_steps=cfg.total_steps,
+                              min_lr_ratio=cfg.min_lr_ratio), step)
+
+    def upd(p, g, vr, vc, v):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps1
+        if p.ndim >= 2:
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), cfg.eps1)
+            u = g * jax.lax.rsqrt(jnp.maximum(r[..., None], cfg.eps1)) \
+                  * jax.lax.rsqrt(jnp.maximum(vc[..., None, :], cfg.eps1))
+        else:
+            v = beta2 * v + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(v, cfg.eps1))
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_rms)
+        delta = u + (cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0)
+        scale = lr * jnp.maximum(cfg.eps2, 1.0)
+        return (p.astype(jnp.float32) - scale * delta).astype(p.dtype), vr, vc, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_vr = treedef.flatten_up_to(state.vr)
+    flat_vc = treedef.flatten_up_to(state.vc)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(*a) for a in zip(flat_p, flat_g, flat_vr, flat_vc, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    return new_p, FactoredState(step,
+                                treedef.unflatten([o[1] for o in out]),
+                                treedef.unflatten([o[2] for o in out]),
+                                treedef.unflatten([o[3] for o in out])), \
+        {"grad_norm": global_norm(grads), "lr": lr}
+
+
+# ----------------------------------------------------------- generic facade
+def init_any(cfg, params):
+    return init_adafactor(params) if isinstance(cfg, AdafactorConfig) else init(params)
+
+
+def apply_any(cfg, params, grads, state):
+    if isinstance(cfg, AdafactorConfig):
+        return apply_adafactor(cfg, params, grads, state)
+    return apply(cfg, params, grads, state)

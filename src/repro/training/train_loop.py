@@ -1,0 +1,132 @@
+"""Train-step builder: loss, microbatched grad accumulation, sharded jit."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.specs import ShardingPolicy, param_specs, io_specs
+from repro.training import optimizer as opt
+
+MOE_LB_COEF = 0.01
+MOE_Z_COEF = 1e-3
+
+
+def cross_entropy(logits, labels):
+    """logits fp32 [B, S, V]; labels int32 [B, S] -> mean nats/token.
+
+    The gold-logit gather is written as a masked reduction (iota == label)
+    rather than take_along_axis: a gather indexes across the vocab-sharded
+    axis and forces GSPMD to all-gather the [B,S,V] logits (hundreds of GB at
+    train_4k); the masked sum reduces locally and all-reduces a scalar."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+              == labels[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(model, params, tokens, labels, extras=None):
+    logits, _, aux = model.apply(params, tokens, **(extras or {}))
+    loss = cross_entropy(logits.astype(jnp.float32), labels)
+    metrics = {"ce": loss}
+    if aux and "load_balance" in aux:
+        loss = loss + MOE_LB_COEF * aux["load_balance"] + MOE_Z_COEF * aux["router_z"]
+        metrics.update(aux)
+    return loss, metrics
+
+
+def make_train_step(model, ocfg: opt.AdamWConfig, num_microbatches: int = 1,
+                    extras_spec=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch: {"tokens": [B, S], "labels": [B, S]} (+ modality extras).
+    With num_microbatches > 1 the batch is split on axis 0 and gradients are
+    accumulated with a lax.scan (bounds activation memory; see DESIGN.md).
+    """
+
+    def grads_of(params, tokens, labels, extras):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(model, p, tokens, labels, extras), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        extras = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+        if num_microbatches == 1:
+            loss, metrics, grads = grads_of(params, tokens, labels, extras)
+        else:
+            B = tokens.shape[0]
+            mb = B // num_microbatches
+            rs = lambda x: x.reshape(num_microbatches, mb, *x.shape[1:])
+            mtoks, mlabels = rs(tokens), rs(labels)
+            mextras = {k: rs(v) for k, v in extras.items()}
+
+            def acc(carry, xs):
+                g_acc, l_acc = carry
+                t, l, ex = xs
+                loss, _, grads = grads_of(params, t, l, ex)
+                g_acc = jax.tree.map(lambda a, b: a + b, g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)),
+                                            (mtoks, mlabels, mextras))
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss / num_microbatches
+            metrics = {"ce": loss}
+        new_params, new_opt, om = opt.apply_any(ocfg, params, grads, opt_state)
+        metrics = dict(metrics, **om, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def opt_state_specs(pspecs, ocfg=None, params_shape=None):
+    """Optimizer-state sharding. AdamW moments mirror param specs; Adafactor
+    row/col stats inherit the surviving dims of the param spec."""
+    if isinstance(ocfg, opt.AdafactorConfig):
+        import jax as _jax
+
+        def vr_spec(ps, leaf):
+            return P(*ps[:-1]) if len(leaf.shape) >= 2 else P(None)
+
+        def vc_spec(ps, leaf):
+            return (P(*(list(ps[:-2]) + [ps[-1]])) if len(leaf.shape) >= 2
+                    else P(None))
+
+        def v_spec(ps, leaf):
+            return ps if len(leaf.shape) < 2 else P(None)
+
+        flat_s, treedef = _jax.tree.flatten(pspecs,
+                                            is_leaf=lambda x: isinstance(x, P))
+        flat_l = treedef.flatten_up_to(params_shape)
+        vr = treedef.unflatten([vr_spec(tuple(s), l) for s, l in zip(flat_s, flat_l)])
+        vc = treedef.unflatten([vc_spec(tuple(s), l) for s, l in zip(flat_s, flat_l)])
+        v = treedef.unflatten([v_spec(s, l) for s, l in zip(flat_s, flat_l)])
+        return opt.FactoredState(P(), vr, vc, v)
+    return opt.OptState(P(), pspecs, pspecs)
+
+
+def shard_train_step(model, ocfg, mesh, pol: ShardingPolicy, batch_shape,
+                     num_microbatches: int = 1, extras_specs=None):
+    """jit the train step with explicit in/out shardings for `mesh`."""
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = param_specs(model.cfg, params_shape, pol)
+    tok_spec, _ = io_specs(pol, batch_shape[0])
+    batch_specs = {"tokens": tok_spec, "labels": tok_spec}
+    if extras_specs:
+        batch_specs.update(extras_specs)
+    ospecs = opt_state_specs(pspecs)
+    ns = lambda spec: jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                                   is_leaf=lambda x: isinstance(x, P))
+    step = make_train_step(model, ocfg, num_microbatches)
+    jitted = jax.jit(step,
+                     in_shardings=(ns(pspecs), ns(ospecs), ns(batch_specs)),
+                     out_shardings=(ns(pspecs), ns(ospecs), None),
+                     donate_argnums=(0, 1))
+    return jitted, pspecs, ospecs, batch_specs

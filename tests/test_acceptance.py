@@ -1,0 +1,93 @@
+"""Property tests for the speculative-sampling acceptance rule.
+
+The crown property (Leviathan App. A): for ANY drafter distribution q, the
+emitted token at the first position is distributed EXACTLY as the target p.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import acceptance
+
+
+def _rand_logits(key, shape, scale=2.0):
+    return jax.random.normal(key, shape) * scale
+
+
+def test_greedy_accepts_matching_prefix():
+    p_logits = jnp.zeros((1, 4, 8)).at[0, :, 3].set(10.0)   # target argmax = 3
+    drafts = jnp.array([[3, 3, 5]])
+    res = acceptance.verify_greedy(drafts, p_logits)
+    assert int(res.n_accepted[0]) == 2
+    assert res.out_tokens[0, :3].tolist() == [3, 3, 3]      # 2 drafts + correction
+    assert int(res.n_emitted[0]) == 3
+
+
+def test_greedy_bonus_on_full_acceptance():
+    p_logits = jnp.zeros((1, 3, 8)).at[0, :, 2].set(5.0)
+    drafts = jnp.array([[2, 2]])
+    res = acceptance.verify_greedy(drafts, p_logits)
+    assert int(res.n_accepted[0]) == 2
+    assert int(res.n_emitted[0]) == 3
+    assert res.out_tokens[0].tolist() == [2, 2, 2]
+
+
+def test_stochastic_identical_models_accept_everything():
+    key = jax.random.PRNGKey(0)
+    q = _rand_logits(key, (64, 4, 16))
+    p = jnp.concatenate([q, _rand_logits(jax.random.PRNGKey(9), (64, 1, 16))], 1)
+    drafts = jax.random.categorical(jax.random.PRNGKey(1), q, axis=-1)
+    res = acceptance.verify_stochastic(jax.random.PRNGKey(2), drafts, q, p)
+    # p == q on draft positions -> accept probability 1
+    assert int(res.n_accepted.min()) == 4
+
+
+@pytest.mark.parametrize("vocab", [7, 33])
+def test_distribution_preservation(vocab):
+    """Empirical law of the first emitted token == softmax(p). Chi-square-ish
+    bound with n=20000 rounds on a fixed (p, q) pair."""
+    kp, kq, kd, kv = jax.random.split(jax.random.PRNGKey(3), 4)
+    n = 20000
+    q_logits = jnp.broadcast_to(_rand_logits(kq, (1, 1, vocab)), (n, 1, vocab))
+    p_logits = jnp.broadcast_to(_rand_logits(kp, (1, 2, vocab)), (n, 2, vocab))
+    drafts = jax.random.categorical(kd, q_logits, axis=-1)
+    res = acceptance.verify_stochastic(kv, drafts, q_logits, p_logits)
+    first = np.asarray(res.out_tokens[:, 0])
+    emp = np.bincount(first, minlength=vocab) / n
+    want = np.asarray(jax.nn.softmax(p_logits[0, 0]))
+    # total-variation distance small
+    tv = 0.5 * np.abs(emp - want).sum()
+    assert tv < 0.03, tv
+
+
+@given(seed=st.integers(0, 10_000), gamma=st.integers(1, 6))
+@settings(max_examples=60, deadline=None)
+def test_acceptance_count_in_range(seed, gamma):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    B, V = 3, 11
+    q = _rand_logits(k1, (B, gamma, V))
+    p = _rand_logits(k2, (B, gamma + 1, V))
+    drafts = jax.random.categorical(k3, q, axis=-1)
+    res = acceptance.verify_stochastic(k4, drafts, q, p)
+    assert (res.n_accepted >= 0).all() and (res.n_accepted <= gamma).all()
+    assert (res.n_emitted == res.n_accepted + 1).all()
+    # committed tokens: accepted prefix must equal the drafts
+    for b in range(B):
+        na = int(res.n_accepted[b])
+        assert res.out_tokens[b, :na].tolist() == drafts[b, :na].tolist()
+
+
+def test_empirical_alpha_matches_formula():
+    """E[accepted] from simulation ~= (1-alpha^(gamma+1))/(1-alpha) - ... checks
+    the geometric acceptance model underlying Eq (1) with synthetic alpha."""
+    from repro.core import cost_model as cm
+    alpha, gamma, n = 0.7, 4, 40000
+    key = jax.random.PRNGKey(5)
+    accept = jax.random.uniform(key, (n, gamma)) < alpha
+    prefix = jnp.cumprod(accept.astype(jnp.int32), axis=1).sum(axis=1)
+    emitted = prefix + 1
+    want = cm.expected_accepted(alpha, gamma)
+    got = float(emitted.mean())
+    assert abs(got - want) / want < 0.02

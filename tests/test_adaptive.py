@@ -1,0 +1,51 @@
+"""Adaptive draft length: gamma tracks the online alpha estimate via Eq (1),
+while output remains exactly the target's greedy continuation."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core.adaptive import AdaptiveConfig, AdaptiveSpecEngine
+from repro.core.engine import autoregressive_generate
+from repro.models.model import build_model
+
+
+def _setup():
+    cfg_t = registry.smoke_config("llama3.2-1b")
+    mt = build_model(cfg_t)
+    pt = mt.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 5), 0,
+                                cfg_t.vocab_size)
+    ref = autoregressive_generate(mt, pt, prompt, 20)
+    return mt, pt, prompt, ref
+
+
+def test_gamma_climbs_with_perfect_drafter():
+    mt, pt, prompt, ref = _setup()
+    eng = AdaptiveSpecEngine(mt, mt, AdaptiveConfig(c=0.1))
+    toks, stats = eng.generate(pt, pt, prompt, 20)
+    n = min(toks.shape[1], ref.shape[1])
+    assert (toks[:, :n] == ref[:, :n]).all()
+    assert stats["gamma_trace"][-1] == max(AdaptiveConfig().gammas)
+
+
+def test_gamma_falls_with_bad_drafter_and_stays_lossless():
+    mt, pt, prompt, ref = _setup()
+    pd_bad = jax.tree.map(
+        lambda w: w + 0.5 * jax.random.normal(jax.random.PRNGKey(99), w.shape,
+                                              jnp.float32).astype(w.dtype), pt)
+    eng = AdaptiveSpecEngine(mt, mt, AdaptiveConfig(c=0.1))
+    toks, stats = eng.generate(pt, pd_bad, prompt, 20)
+    n = min(toks.shape[1], ref.shape[1])
+    assert (toks[:, :n] == ref[:, :n]).all()       # lossless regardless
+    assert stats["gamma_trace"][-1] == min(AdaptiveConfig().gammas)
+    assert stats["alpha_hat"] < 0.2
+
+
+def test_pick_gamma_matches_cost_model():
+    from repro.core import cost_model
+    mt, pt, prompt, ref = _setup()
+    eng = AdaptiveSpecEngine(mt, mt, AdaptiveConfig(c=0.3, gammas=(1, 2, 4, 6)))
+    for alpha in (0.2, 0.5, 0.8, 0.95):
+        g = eng.pick_gamma(alpha)
+        best = max((1, 2, 4, 6), key=lambda gg: cost_model.speedup(alpha, gg, 0.3))
+        assert g == best

@@ -1,0 +1,94 @@
+"""Attention-path and KV-cache invariants (unit + hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cache import kv_cache
+from repro.models.attention import attn_chunked, attn_dense
+
+
+@given(S=st.integers(4, 40), chunk=st.sampled_from([4, 8, 16]),
+       window=st.one_of(st.none(), st.integers(2, 12)),
+       seed=st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_chunked_equals_dense(S, chunk, window, seed):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, H, Kv, D = 2, 4, 2, 16
+    q = jax.random.normal(kq, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, S, Kv, D), jnp.float32)
+    v = jax.random.normal(kv, (B, S, Kv, D), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    a = attn_dense(q, k, v, pos, pos, window=window)
+    b = attn_chunked(q, k, v, pos, pos, window=window, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+@given(W=st.integers(3, 16), index=st.integers(0, 64), new_len=st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_slot_positions_invariants(W, index, new_len):
+    pos = np.asarray(kv_cache.slot_positions(W, jnp.int32(index), new_len))
+    last = index + new_len - 1
+    for s in range(W):
+        p = pos[s]
+        if p >= 0:
+            assert p % W == s          # correct slot
+            assert p <= last           # never labels the future
+            assert p > last - W        # newest position for that slot
+        else:
+            assert last - (last - s) % W < 0   # genuinely never written
+
+
+@given(seed=st.integers(0, 500), W=st.integers(4, 10), Q=st.integers(2, 5))
+@settings(max_examples=30, deadline=None)
+def test_extend_then_rollback_identity(seed, W, Q):
+    """extend Q tokens then roll back all of them == no-op for valid reads."""
+    kk, kv_, kn = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, Kv, D = 1, 2, 8
+    base = {"k": jax.random.normal(kk, (B, W + Q, Kv, D)),
+            "v": jax.random.normal(kv_, (B, W + Q, Kv, D))}
+    index = jnp.int32(W)  # buffer already wrapped once
+    k_new = jax.random.normal(kn, (B, Q, Kv, D))
+    _, _, _, after = kv_cache.extend(base, k_new, k_new, index)
+    # positions < index must label identically before and after rollback
+    pos_before = kv_cache.slot_positions(W + Q, index, 0)
+    cache = {"k": after["k"], "v": after["v"], "index": index + Q}
+    rb = kv_cache.rollback(cache, index)
+    pos_after = kv_cache.slot_positions(W + Q, rb["index"], 0)
+    np.testing.assert_array_equal(np.asarray(pos_before), np.asarray(pos_after))
+
+
+def test_write_wraps_ring():
+    B, W, Kv, D = 1, 4, 1, 2
+    k_buf = jnp.zeros((B, W, Kv, D))
+    v_buf = jnp.zeros((B, W, Kv, D))
+    k_new = jnp.arange(6, dtype=jnp.float32).reshape(1, 6, 1, 1) * jnp.ones((1, 6, 1, 2))
+    k2, _ = kv_cache.write(k_buf, v_buf, k_new, k_new, jnp.int32(0))
+    # positions 0..5 -> last W=4 kept: pos 2,3,4,5 at slots 2,3,0,1
+    got = np.asarray(k2[0, :, 0, 0])
+    np.testing.assert_array_equal(got, [4.0, 5.0, 2.0, 3.0])
+
+
+def test_spec_slack_protects_window():
+    """Speculative writes then rollback must not corrupt in-window history."""
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.models import dense
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=31,
+                      sliding_window=4, dtype="float32", param_dtype="float32")
+    p = dense.init(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, 31)
+    full, _ = dense.forward(cfg, p, toks)
+    gamma = 3
+    cache = kv_cache.init_cache(1, 1, 12, 1, cfg.head_dim,
+                                window=cfg.sliding_window + gamma + 1,
+                                dtype=jnp.float32)
+    _, cache = dense.forward(cfg, p, toks[:, :6], cache)
+    # speculative extend of gamma+1 tokens, then reject all but 1
+    _, c2 = dense.forward(cfg, p, toks[:, 6:10], cache)
+    c2 = kv_cache.rollback(c2, 7)
+    lg, _ = dense.forward(cfg, p, toks[:, 7:8], c2)
+    np.testing.assert_allclose(np.asarray(lg[0, 0]), np.asarray(full[0, 7]),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,106 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.acceptance import verify_greedy as verify_greedy_oracle
+from repro.kernels import ops, ref
+
+
+# ------------------------------------------------------------- int8 matmul
+@pytest.mark.parametrize("M,K,N", [(8, 64, 32), (128, 128, 128), (37, 200, 150),
+                                   (256, 384, 128), (1, 128, 257)])
+def test_int8_matmul_shapes(M, K, N):
+    kx, kw, ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    w_q = jax.random.randint(kw, (K, N), -128, 128, jnp.int8)
+    sw = jax.random.uniform(ks, (N,), jnp.float32, 1e-3, 1e-2)
+    out = ops.quantized_matmul(x, w_q, sw, out_dtype=jnp.float32)
+    sx = jnp.maximum(jnp.abs(x).max() / 127.0, 1e-12)
+    x_q = jnp.clip(jnp.round(x / sx), -128, 127).astype(jnp.int8)
+    want = ref.int8_matmul_ref(x_q, w_q, sx, sw, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_matmul_dtypes(out_dtype):
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 128), jnp.float32)
+    w_q = jax.random.randint(jax.random.PRNGKey(2), (128, 64), -128, 128, jnp.int8)
+    sw = jnp.full((64,), 0.005, jnp.float32)
+    out = ops.quantized_matmul(x, w_q, sw, out_dtype=out_dtype)
+    assert out.dtype == jnp.dtype(out_dtype)
+    assert not bool(jnp.isnan(out.astype(jnp.float32)).any())
+
+
+def test_int8_matmul_batched_lead():
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 5, 96), jnp.float32)
+    w_q = jax.random.randint(jax.random.PRNGKey(4), (96, 40), -128, 128, jnp.int8)
+    sw = jnp.full((40,), 0.01, jnp.float32)
+    out = ops.quantized_matmul(x, w_q, sw)
+    assert out.shape == (2, 5, 40)
+
+
+# ------------------------------------------------------------ spec verify
+@pytest.mark.parametrize("B,G,V", [(1, 1, 128), (4, 4, 3000), (3, 6, 517),
+                                   (8, 2, 2048)])
+def test_verify_greedy_fused_matches_oracle(B, G, V):
+    kl, kd = jax.random.split(jax.random.PRNGKey(0))
+    logits = jax.random.normal(kl, (B, G + 1, V), jnp.float32)
+    drafts = jax.random.randint(kd, (B, G), 0, V)
+    got = ops.verify_greedy(drafts, logits)
+    want = verify_greedy_oracle(drafts, logits)
+    assert (got.n_accepted == want.n_accepted).all()
+    assert (got.out_tokens == want.out_tokens).all()
+    assert (got.n_emitted == want.n_emitted).all()
+
+
+def test_verify_greedy_fused_full_accept():
+    V = 256
+    drafts = jnp.array([[7, 9]])
+    logits = jnp.zeros((1, 3, V)).at[0, 0, 7].set(9.).at[0, 1, 9].set(9.) \
+                                 .at[0, 2, 4].set(9.)
+    got = ops.verify_greedy(drafts, logits)
+    assert int(got.n_accepted[0]) == 2
+    assert got.out_tokens[0].tolist() == [7, 9, 4]
+
+
+# --------------------------------------------------------- flash attention
+@pytest.mark.parametrize("window,causal", [(None, True), (16, True), (None, False)])
+@pytest.mark.parametrize("B,Sq,H,Kv,D", [(2, 40, 8, 2, 32), (1, 64, 4, 4, 64),
+                                         (2, 24, 6, 1, 16)])
+def test_flash_attention_sweep(window, causal, B, Sq, H, Kv, D):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (B, Sq, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, Sq, Kv, D), jnp.float32)
+    v = jax.random.normal(kv, (B, Sq, Kv, D), jnp.float32)
+    got = ops.flash_attention(q, k, v, bq=8, bs=8, window=window, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, window=window, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 4, 32), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 32, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 2, 32), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, bq=8, bs=8)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_flash_matches_model_chunked_path():
+    """Kernel vs the model-level chunked attention (two independent impls)."""
+    from repro.models.attention import attn_chunked
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(5), 3)
+    B, S, H, Kv, D = 2, 48, 8, 4, 32
+    q = jax.random.normal(kq, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, S, Kv, D), jnp.float32)
+    v = jax.random.normal(kv, (B, S, Kv, D), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    got = ops.flash_attention(q, k, v, bq=8, bs=16, window=11)
+    want = attn_chunked(q, k, v, pos, pos, window=11, chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

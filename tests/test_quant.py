@@ -1,0 +1,79 @@
+"""Quantization substrate tests: QDQ numerics + acceptance-rate degradation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import int8 as q8
+
+
+@given(seed=st.integers(0, 1000), per_channel=st.booleans())
+@settings(max_examples=50, deadline=None)
+def test_quant_roundtrip_error_bound(seed, per_channel):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 48)) * 0.1
+    axis = -1 if per_channel else None
+    q, s = q8.quantize_array(w, axis=axis)
+    deq = q8.dequantize(q, s)
+    # max error <= scale/2 per element
+    max_scale = float(jnp.max(s))
+    assert float(jnp.abs(deq - w).max()) <= max_scale * 0.5 + 1e-7
+    assert q.dtype == jnp.int8
+
+
+def test_quantize_params_structure_preserved():
+    from repro.configs import registry
+    from repro.models.model import build_model
+    cfg = registry.smoke_config("llama3.2-1b")
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    pq = q8.quantize_params(p)
+    assert jax.tree_util.tree_structure(p) == jax.tree_util.tree_structure(pq)
+    # norms untouched, matmul weights changed
+    assert bool((p["final_norm"]["scale"] == pq["final_norm"]["scale"]).all())
+    w0 = p["layers"]["attn"]["q"]["w"]
+    w1 = pq["layers"]["attn"]["q"]["w"]
+    assert not bool((w0 == w1).all())
+
+
+def test_act_quant_context():
+    from repro.models import layers as L
+    p = {"w": jnp.eye(8, dtype=jnp.float32)}
+    x = jnp.linspace(-1, 1, 8)[None]
+    clean = L.linear(p, x)
+    with q8.act_quant(enabled=True, bits=8):
+        quant = L.linear(p, x)
+    assert not bool(jnp.allclose(clean, quant))
+    assert float(jnp.abs(clean - quant).max()) < 0.02  # 8-bit is close
+    after = L.linear(p, x)
+    assert bool(jnp.allclose(clean, after))            # context restored
+
+
+def test_quantization_degrades_acceptance_monotonically():
+    """Paper Fig. 5's direction: FP/FP >= semi-quant >= full-quant acceptance.
+
+    Uses a trained-ish pair proxy: drafter = noisy copy of target so alpha is
+    high; quantization then injects distributional mismatch."""
+    from repro.configs import registry
+    from repro.core.engine import EngineConfig, SpecEngine
+    from repro.models.model import build_model
+    cfg_t = registry.smoke_config("llama3.2-1b").replace(vocab_size=64)
+    m = build_model(cfg_t)
+    pt = m.init(jax.random.PRNGKey(0))
+    noise = jax.tree.map(
+        lambda w: w + 0.02 * jax.random.normal(jax.random.PRNGKey(5), w.shape,
+                                               w.dtype).astype(w.dtype), pt)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 5), 0, 64)
+
+    def alpha_of(params_t, params_d, w_bits):
+        eng = SpecEngine(m, m, EngineConfig(gamma=4, greedy=True, use_cache=False))
+        _, stats = eng.generate(params_t, params_d, prompt, 24)
+        return stats["alpha_hat"]
+
+    a_fp = alpha_of(pt, noise, None)
+    a_semi = alpha_of(q8.quantize_params(pt, bits=4), noise, 4)      # target quant
+    a_full = alpha_of(q8.quantize_params(pt, bits=3),
+                      q8.quantize_params(noise, bits=3), 3)
+    # direction, with slack for tiny-model noise: fp >= semi and fp >= full
+    assert a_fp >= a_semi - 0.05
+    assert a_fp >= a_full - 0.05

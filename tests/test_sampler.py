@@ -1,0 +1,42 @@
+"""Sampler properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sampling.sampler import SamplerConfig, sample
+
+
+def test_greedy_is_argmax():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+    out = sample(jax.random.PRNGKey(1), logits, SamplerConfig(greedy=True))
+    assert (out == jnp.argmax(logits, -1)).all()
+
+
+@given(k=st.integers(1, 8), seed=st.integers(0, 100))
+@settings(max_examples=30, deadline=None)
+def test_top_k_support(k, seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (32, 16))
+    cfg = SamplerConfig(greedy=False, top_k=k)
+    out = sample(jax.random.PRNGKey(seed + 1), logits, cfg)
+    # every sampled token must be within the top-k of its row
+    ranks = jnp.argsort(jnp.argsort(-logits, axis=-1), axis=-1)
+    picked_rank = jnp.take_along_axis(ranks, out[:, None], axis=-1)[:, 0]
+    assert int(picked_rank.max()) < k
+
+
+def test_top_p_keeps_at_least_one():
+    logits = jnp.array([[10.0, -10.0, -10.0, -10.0]])
+    cfg = SamplerConfig(greedy=False, top_p=0.01)
+    out = sample(jax.random.PRNGKey(0), logits, cfg)
+    assert int(out[0]) == 0
+
+
+def test_temperature_sharpens():
+    logits = jnp.array([2.0, 1.0, 0.0])
+    n = 3000
+    keys = jax.random.split(jax.random.PRNGKey(2), n)
+    hot = jax.vmap(lambda k: sample(k, logits, SamplerConfig(greedy=False, temperature=5.0)))(keys)
+    cold = jax.vmap(lambda k: sample(k, logits, SamplerConfig(greedy=False, temperature=0.2)))(keys)
+    assert float((cold == 0).mean()) > float((hot == 0).mean())
