@@ -1,0 +1,110 @@
+"""Fixed-shape continuous batching vs paged variable-length serving.
+
+Traffic is RAGGED (mixed prompt lengths and per-request decode budgets).
+The fixed-shape server (launch/continuous.py) can only run it by padding
+every request to the worst case (max prompt_len, max max_new) — decode
+rounds and ring-cache memory are over-provisioned for every row. The paged
+server (serving/paged_server.py) serves each request at its own length from
+a shared block pool. Reports tokens/s, rounds, and cache memory footprint.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, prompts, trained_pair
+from repro.cache import paged_kv
+from repro.launch.continuous import ContinuousSpecServer, StreamRequest
+from repro.serving import PagedSpecServer, SchedulerConfig, ServeRequest
+
+B, GAMMA, R = 4, 4, 10
+PROMPT_LENS = (6, 9, 12, 16)
+MAX_NEWS = (8, 12, 18, 24)
+
+
+def _traffic(seed=5):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(R):
+        P = int(rng.choice(PROMPT_LENS))
+        new = int(rng.choice(MAX_NEWS))
+        reqs.append((i, np.asarray(prompts(1, P, seed=100 + i))[0], new))
+    return reqs
+
+
+def _ring_cache_bytes(model, batch, max_len, slack):
+    spec = model.cache_spec(batch, model.cache_len(max_len), spec_slack=slack)
+    return paged_kv.memory_bytes(spec)
+
+
+def main():
+    (mt, pt), (md, pd) = trained_pair()
+    traffic = _traffic()
+    useful_tokens = sum(new for _, _, new in traffic)
+    p_max, new_max = max(PROMPT_LENS), max(MAX_NEWS)
+
+    # --- fixed-shape: pad every request to the worst case
+    fixed = ContinuousSpecServer(mt, md, pt, pd, batch=B, prompt_len=p_max,
+                                 max_new=new_max, gamma=GAMMA)
+    for rid, prompt, _ in traffic:
+        padded = np.zeros(p_max, np.int64)
+        padded[:len(prompt)] = prompt
+        fixed.submit(StreamRequest(rid, padded))
+    t0 = time.time()
+    fixed.run()
+    t_fixed = time.time() - t0
+    fixed_ring_bytes = (_ring_cache_bytes(mt, B, fixed.max_len, GAMMA + 2)
+                        + _ring_cache_bytes(md, B, fixed.max_len, GAMMA + 2))
+    # every row decodes the worst-case budget regardless of its request
+    fixed_decoded = R * new_max
+
+    # --- paged: each request at its own length from the shared pool, sized
+    # to the workload (B rows of worst-case demand) + the null block
+    demand_blocks = -(-(p_max + new_max + GAMMA + 1) // 8)
+    scfg = SchedulerConfig(max_batch=B, block_size=8,
+                           num_blocks=B * demand_blocks + 1,
+                           max_blocks_per_row=demand_blocks, gamma_max=GAMMA,
+                           prefill_buckets=(8, 16), cost_coefficient=0.25)
+    paged = PagedSpecServer(mt, md, pt, pd, scfg, gamma=GAMMA)
+    for rid, prompt, new in traffic:
+        paged.submit(ServeRequest(rid, prompt, new))
+    t0 = time.time()
+    done = paged.run()
+    t_paged = time.time() - t0
+    assert len(done) == R
+    paged_pool_bytes = (paged_kv.memory_bytes(paged._state.tcache)
+                        + paged_kv.memory_bytes(paged._state.dcache))
+    # resident high-water: blocks actually allocated at peak x bytes/block
+    resident_bytes = (paged.alloc.peak_in_use * paged_pool_bytes
+                      / scfg.num_blocks)
+    s = paged.metrics.summary()
+
+    print(f"traffic: {R} ragged requests, prompt_len in {PROMPT_LENS}, "
+          f"max_new in {MAX_NEWS} ({useful_tokens} requested tokens)")
+    print(f"fixed-shape: {t_fixed:.2f}s, {fixed.total_rounds} rounds, "
+          f"{fixed_decoded} decoded tokens ({fixed_decoded - useful_tokens} "
+          f"wasted on padding), ring caches {fixed_ring_bytes / 1e6:.2f} MB")
+    print(f"paged:       {t_paged:.2f}s, {paged.total_rounds} rounds, "
+          f"{useful_tokens} decoded tokens (0 wasted), "
+          f"block pools {paged_pool_bytes / 1e6:.2f} MB "
+          f"(peak resident {resident_bytes / 1e6:.2f} MB, "
+          f"{paged.alloc.peak_in_use} blocks), "
+          f"alpha_hat={s['alpha_hat']:.2f}, "
+          f"mean latency {s['mean_latency_s'] * 1e3:.0f} ms")
+    print(f"# useful tokens/s: fixed {useful_tokens / t_fixed:.1f} vs paged "
+          f"{useful_tokens / t_paged:.1f}; rounds "
+          f"{fixed.total_rounds} -> {paged.total_rounds} "
+          f"({fixed.total_rounds / max(paged.total_rounds, 1):.2f}x fewer)")
+    print("# NOTE toy-scale wall-clock under-sells paging (host scheduling is"
+          " a fixed per-round cost); ROUNDS is the device-time proxy — padded"
+          " rows burn rounds decoding tokens nobody asked for.")
+    emit("paged_serving", t_paged * 1e6 / max(paged.total_rounds, 1),
+         f"rounds_fixed={fixed.total_rounds};rounds_paged={paged.total_rounds};"
+         f"mem_fixed_mb={fixed_ring_bytes / 1e6:.2f};"
+         f"mem_paged_resident_mb={resident_bytes / 1e6:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,11 @@ def _bench_batched():
     bench_batched.main()
 
 
+def _bench_paged():
+    from benchmarks import bench_paged_serving
+    bench_paged_serving.main()
+
+
 def main() -> None:
     from benchmarks import (bench_acceptance, bench_cost_coeff, bench_dse,
                             bench_spec_serving, bench_speedup_tables,
@@ -30,6 +35,7 @@ def main() -> None:
         ("Speculative serving on the pod (pair C)",
          lambda: bench_spec_serving.main(lower=False)),
         ("Beyond-paper: per-row batched speculation", _bench_batched),
+        ("Beyond-paper: paged vs fixed-shape serving", _bench_paged),
     ]
     failures = []
     for name, fn in benches:

@@ -120,7 +120,7 @@ def extend(layer_cache, k_new, v_new, index):
     if Q == 1:
         # decode fast-path: a single token cannot evict a slot it needs, so we
         # write first and attend over the updated buffer in place — no W-sized
-        # concat copy (halves per-step cache traffic; see EXPERIMENTS.md §Perf).
+        # concat copy (halves per-step cache traffic; see docs/DESIGN.md §Perf).
         k_buf, v_buf = write(layer_cache["k"], layer_cache["v"], k_new, v_new, index)
         kv_pos = slot_positions(W, index, 1)
         return (_from_buf(k_buf, k_new.dtype), _from_buf(v_buf, v_new.dtype),

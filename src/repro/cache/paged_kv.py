@@ -1,0 +1,193 @@
+"""Paged KV cache: block-pool storage for ragged continuous batching.
+
+The ring buffer (kv_cache.py) bakes ``(batch, max_len)`` into one dense
+allocation, so every row of a served batch must share a sequence budget.
+This module replaces that with vLLM-style paging:
+
+  pool   = {
+    "k": [L, num_blocks, block_size, Kv, D],   # one block pool per layer stack
+    "v": [L, num_blocks, block_size, Kv, D],
+    "block_table": [B, max_blocks_per_row] int32,  # row -> pool block ids
+    "index": [B] int32                             # committed tokens per row
+  }
+
+Token at absolute position ``p`` of row ``b`` lives in
+``pool[block_table[b, p // block_size], p % block_size]``. Rows own disjoint
+block sets handed out by the host-side ``BlockAllocator``; memory scales with
+the tokens actually resident, not ``batch * max(len)``.
+
+Block 0 is the NULL block: unallocated table entries point at it, so writes
+from frozen/empty batch slots land somewhere harmless and gathers of
+unallocated slots are causally masked (their positions exceed every live
+query position). The allocator never hands out block 0.
+
+Speculative rollback is O(1) exactly as for the ring cache: attention masks
+on *positions* recovered from ``index``, so ``cache | {"index": smaller}``
+drops the rejected tail; stale slots are overwritten by the next append
+before they can become causally visible. ``BlockAllocator.free_tail``
+returns whole blocks beyond an accepted length to the free list (host-side,
+because scheduling is host-driven). NOTE: under the scheduler's
+conservative worst-case reservation (serving/scheduler.py) a live row never
+shrinks, so the serving path reclaims via ``free_row`` at request
+completion; ``free_tail`` is the primitive for future preemption/shrink
+policies and is exercised directly by tests. See docs/DESIGN.md §3 for the
+layout comparison.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.kv_cache import _from_buf, _to_buf_dtype
+
+NULL_BLOCK = 0
+
+
+def init_pool(num_layers, num_blocks, block_size, num_kv_heads, head_dim,
+              dtype=jnp.bfloat16):
+    """Per-layer-stack block pools (no table — tables are per cache, pools may
+    be grouped, e.g. MoE sub-stacks sharing one table)."""
+    shape = (num_layers, num_blocks, block_size, num_kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_cache(num_layers, batch, num_blocks, block_size, max_blocks_per_row,
+               num_kv_heads, head_dim, dtype=jnp.bfloat16):
+    cache = init_pool(num_layers, num_blocks, block_size, num_kv_heads,
+                      head_dim, dtype)
+    cache["block_table"] = jnp.full((batch, max_blocks_per_row), NULL_BLOCK,
+                                    jnp.int32)
+    cache["index"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+def is_paged(cache) -> bool:
+    return isinstance(cache, dict) and "block_table" in cache
+
+
+def extend(layer_cache, k_new, v_new, block_table, index):
+    """Per-layer paged extension (the paged analogue of kv_cache.extend).
+
+    layer_cache: {"k": [NB, BS, Kv, D], "v": ...} — this layer's pool slice.
+    k_new/v_new: [B, Q, Kv, D] written at positions index..index+Q-1 per row.
+
+    Returns (k_all, v_all, kv_pos, new_layer_cache) where k_all/v_all are the
+    per-row gathered views [B, MB*BS, Kv, D] and kv_pos = arange(MB*BS): paged
+    slots store absolute positions directly (slot j of row b holds position j),
+    so no ring-congruence recovery is needed — the causal mask alone hides
+    stale and unallocated slots (their positions exceed every query position).
+
+    Unlike the ring buffer, appends never evict: the write happens first and
+    attention runs over the post-write gathered view even for Q > 1.
+    """
+    NB, BS = layer_cache["k"].shape[0], layer_cache["k"].shape[1]
+    B, Q = k_new.shape[0], k_new.shape[1]
+    MB = block_table.shape[1]
+    idx = jnp.asarray(index)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (B,))
+    pos = idx[:, None] + jnp.arange(Q, dtype=jnp.int32)      # [B, Q]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    # frozen batch slots keep getting speculative writes at their (fixed)
+    # index; clamp the table lookup so an over-capacity position resolves to
+    # the row's last table entry (NULL for released rows) instead of OOB
+    blk = block_table[rows, jnp.minimum(pos // BS, MB - 1)]  # [B, Q]
+    off = pos % BS
+    k_buf = layer_cache["k"].at[blk, off].set(_to_buf_dtype(k_new, layer_cache["k"].dtype))
+    v_buf = layer_cache["v"].at[blk, off].set(_to_buf_dtype(v_new, layer_cache["v"].dtype))
+    # gather per-row views: [B, MB, BS, Kv, D] -> [B, MB*BS, Kv, D]
+    k_all = _from_buf(k_buf[block_table], k_new.dtype)
+    v_all = _from_buf(v_buf[block_table], v_new.dtype)
+    Kv, D = k_new.shape[2], k_new.shape[3]
+    k_all = k_all.reshape(B, MB * BS, Kv, D)
+    v_all = v_all.reshape(B, MB * BS, Kv, D)
+    kv_pos = jnp.arange(MB * BS, dtype=jnp.int32)
+    return k_all, v_all, kv_pos, {"k": k_buf, "v": v_buf}
+
+
+def rollback(cache, accepted_index):
+    """O(1) speculative rollback: drop everything after ``accepted_index``
+    ([B] or scalar). Physical blocks stay resident (the next round rewrites
+    them); reclaim whole tail blocks via BlockAllocator.free_tail."""
+    idx = jnp.asarray(accepted_index, jnp.int32)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, cache["index"].shape)
+    return {**cache, "index": idx}
+
+
+def memory_bytes(cache) -> int:
+    """Total resident cache bytes (pools + tables + indices)."""
+    return sum(int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree_util.tree_leaves(cache))
+
+
+class BlockAllocator:
+    """Host-side free-list allocator for one (pool, table) pair.
+
+    The device ``block_table`` array is the jit-visible mirror of the host
+    table; callers push ``device_table()`` into the cache dict after any
+    allocation change (tables only change between rounds, on the host).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int,
+                 max_blocks_per_row: int, batch: int):
+        assert num_blocks >= 2, "need at least the null block + one real block"
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.max_blocks_per_row = max_blocks_per_row
+        self.batch = batch
+        self.free: deque = deque(range(1, num_blocks))   # block 0 reserved
+        self.table = np.full((batch, max_blocks_per_row), NULL_BLOCK, np.int32)
+        self.n_alloc = np.zeros((batch,), np.int64)      # allocated blocks/row
+        self.peak_in_use = 0                             # residency high-water
+
+    # ------------------------------------------------------------- queries
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.block_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        need = self.blocks_for(n_tokens)
+        return need <= self.max_blocks_per_row and need <= self.num_free
+
+    def device_table(self) -> jnp.ndarray:
+        return jnp.asarray(self.table)
+
+    # ----------------------------------------------------------- mutation
+    def ensure(self, row: int, n_tokens: int) -> bool:
+        """Grow row's allocation to cover ``n_tokens`` positions. Returns
+        False (allocating nothing) if the pool cannot satisfy the request."""
+        need = self.blocks_for(n_tokens)
+        if need > self.max_blocks_per_row:
+            return False
+        have = int(self.n_alloc[row])
+        if need <= have:
+            return True
+        if need - have > len(self.free):
+            return False
+        for j in range(have, need):
+            self.table[row, j] = self.free.popleft()
+        self.n_alloc[row] = need
+        self.peak_in_use = max(self.peak_in_use, int(self.n_alloc.sum()))
+        return True
+
+    def free_tail(self, row: int, n_tokens: int) -> int:
+        """Release blocks beyond the one holding token ``n_tokens - 1``
+        (speculative-rollback reclamation). Returns #blocks freed."""
+        keep = self.blocks_for(n_tokens)
+        have = int(self.n_alloc[row])
+        for j in range(keep, have):
+            self.free.append(int(self.table[row, j]))
+            self.table[row, j] = NULL_BLOCK
+        self.n_alloc[row] = min(keep, have)
+        return max(have - keep, 0)
+
+    def free_row(self, row: int) -> int:
+        return self.free_tail(row, 0)

@@ -8,7 +8,12 @@ its own accepted prefix each round, so throughput tracks each row's own alpha.
 
 Supported families: the KV-cache group (dense / moe / vlm) — per-row rollback
 is an index vector; recurrent-state families would need per-row state trails
-(see DESIGN.md §5b). Greedy acceptance (the serving configuration).
+(see docs/DESIGN.md §5b). Greedy acceptance (the serving configuration).
+
+Caches may be ring buffers (cache/kv_cache.py) or paged block pools
+(cache/paged_kv.py) — both expose per-row ``index`` rollback, so the round
+is layout-agnostic; serving/paged_server.py drives this engine on paged
+caches for ragged continuous batching.
 
 Invariant (tested): every row's output equals that row's OWN autoregressive
 greedy continuation, regardless of what other rows do.

@@ -8,13 +8,17 @@ stays full and the 3.1x committed-tokens/round advantage becomes wall-clock
 throughput (vLLM-style continuous batching, driven by the speculative round).
 
 Constraints: KV-cache families; uniform (prompt_len, max_new) per server
-instance (fixed XLA shapes); greedy acceptance.
+instance (fixed XLA shapes); greedy acceptance. The paged successor
+(repro.serving.PagedSpecServer) removes the uniform-shape constraint via
+block-pool KV storage — prefer it for ragged traffic; this server remains
+the minimal fixed-shape reference (see docs/DESIGN.md §4).
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, List, Optional
+from typing import Any, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +45,7 @@ class ContinuousSpecServer:
         self.params_t, self.params_d = params_t, params_d
         self.B, self.P, self.max_new, self.gamma = batch, prompt_len, max_new, gamma
         self.max_len = prompt_len + max_new + gamma + 2
-        self.queue: List[StreamRequest] = []
+        self.queue: Deque[StreamRequest] = deque()
         self.done: List[StreamRequest] = []
         self._slots: List[Optional[StreamRequest]] = [None] * batch
         self._state: Optional[RowState] = None
@@ -100,7 +104,7 @@ class ContinuousSpecServer:
         self.queue.append(req)
 
     def _bootstrap(self):
-        first = [self.queue.pop(0) for _ in range(min(self.B, len(self.queue)))]
+        first = [self.queue.popleft() for _ in range(min(self.B, len(self.queue)))]
         prompts = np.stack([r.prompt for r in first])
         while len(first) < self.B:          # pad with copies of the last
             first.append(StreamRequest(-1, first[-1].prompt))
@@ -145,7 +149,7 @@ class ContinuousSpecServer:
                     req.tokens = np.asarray(self._state.tokens[b, :target_len])
                     self.done.append(req)
                     if self.queue:
-                        nxt = self.queue.pop(0)
+                        nxt = self.queue.popleft()
                         buf1, dc1, tc1 = self._prefill_one(nxt.prompt)
                         self._state = self._insert_row(self._state, b, buf1, dc1, tc1)
                         self._slots[b] = nxt

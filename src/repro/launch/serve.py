@@ -8,8 +8,9 @@ from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +40,7 @@ class Server:
         self.engine = SpecEngine(target, drafter, ecfg)
         self.params_t, self.params_d = params_t, params_d
         self.max_batch = max_batch
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()
         self.done: List[Request] = []
 
     def submit(self, req: Request):
@@ -59,7 +60,8 @@ class Server:
         batch = self._batchable()
         if not batch:
             return 0
-        self.queue = [r for r in self.queue if r not in batch]
+        drop = set(id(r) for r in batch)
+        self.queue = deque(r for r in self.queue if id(r) not in drop)
         prompts = jnp.asarray(np.stack([r.prompt for r in batch]))
         toks, stats = self.engine.generate(self.params_t, self.params_d,
                                            prompts, batch[0].max_new_tokens)
@@ -122,11 +124,14 @@ def main():
     t0 = time.time()
     done = server.run()
     dt = time.time() - t0
-    total = sum(r.stats.get("tokens_generated", 0) for r in done[:1]) * len(done)
+    total = sum(r.stats.get("tokens_generated", 0) for r in done)
+    latencies = [r.completed - r.submitted for r in done]
     alpha = done[0].stats.get("alpha_hat", float("nan"))
-    print(f"speculative served {len(done)} requests in {dt:.2f}s "
-          f"(alpha_hat={alpha:.2f}, gamma={args.gamma}, "
-          f"strategy={args.strategy}, cache={args.use_cache})")
+    print(f"speculative served {len(done)} requests, {total} tokens in "
+          f"{dt:.2f}s ({total / dt:.1f} tok/s aggregate, mean latency "
+          f"{np.mean(latencies) * 1e3:.0f}ms, alpha_hat={alpha:.2f}, "
+          f"gamma={args.gamma}, strategy={args.strategy}, "
+          f"cache={args.use_cache})")
 
 
 if __name__ == "__main__":

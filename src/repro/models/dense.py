@@ -15,7 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.cache import kv_cache
+from repro.cache import kv_cache, paged_kv
 from repro.models import layers as L
 from repro.models.attention import attention
 
@@ -61,8 +61,10 @@ def init(cfg, rng):
 
 
 # ------------------------------------------------------------------- forward
-def attn_block(cfg, p, x, q_pos, layer_cache, index, window, use_rope=True):
-    """Self-attention sub-block; returns (out, new_layer_cache or None)."""
+def attn_block(cfg, p, x, q_pos, layer_cache, index, window, use_rope=True,
+               block_table=None):
+    """Self-attention sub-block; returns (out, new_layer_cache or None).
+    ``block_table`` non-None selects the paged-pool cache path."""
     B, Q, _ = x.shape
     hd = cfg.head_dim
     h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
@@ -76,6 +78,10 @@ def attn_block(cfg, p, x, q_pos, layer_cache, index, window, use_rope=True):
         kv_pos = q_pos
         o = attention(q, k, v, q_pos, kv_pos, window=window)
         new_cache = None
+    elif block_table is not None:
+        k_all, v_all, kv_pos, new_cache = paged_kv.extend(layer_cache, k, v,
+                                                          block_table, index)
+        o = attention(q, k_all, v_all, q_pos, kv_pos, window=window)
     else:
         k_all, v_all, kv_pos, new_cache = kv_cache.extend(layer_cache, k, v, index)
         o = attention(q, k_all, v_all, q_pos, kv_pos, window=window)
@@ -83,9 +89,9 @@ def attn_block(cfg, p, x, q_pos, layer_cache, index, window, use_rope=True):
     return o, new_cache
 
 
-def dense_layer(cfg, p, x, q_pos, layer_cache, index):
+def dense_layer(cfg, p, x, q_pos, layer_cache, index, block_table=None):
     o, new_cache = attn_block(cfg, p["attn"], x, q_pos, layer_cache, index,
-                              cfg.sliding_window)
+                              cfg.sliding_window, block_table=block_table)
     x = x + o
     x = x + L.swiglu(p["mlp"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
     return x, new_cache
@@ -129,12 +135,13 @@ def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=
     x = x.astype(cfg.act_dtype)
     B, Q = x.shape[0], x.shape[1]
     index = cache["index"] if cache is not None else jnp.zeros((), jnp.int32)
+    block_table = cache.get("block_table") if cache is not None else None
     # index: scalar (shared) or [B] (per-row batched speculation)
     q_pos = jnp.asarray(index)[..., None] + jnp.arange(Q, dtype=jnp.int32) \
         if jnp.asarray(index).ndim else index + jnp.arange(Q, dtype=jnp.int32)
 
     def layer_fn(lp, h, lc):
-        return dense_layer(cfg, lp, h, q_pos, lc, index)
+        return dense_layer(cfg, lp, h, q_pos, lc, index, block_table)
 
     x, new_kv = scan_layers(layer_fn, params["layers"], x, cache,
                             remat=cfg.remat, cfg=cfg)
@@ -148,4 +155,6 @@ def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=
     if cache is None:
         return logits, None
     new_cache = {"k": new_kv["k"], "v": new_kv["v"], "index": index + Q}
+    if block_table is not None:
+        new_cache["block_table"] = block_table
     return logits, new_cache

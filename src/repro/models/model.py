@@ -18,7 +18,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.cache import kv_cache
+from repro.cache import kv_cache, paged_kv
 from repro.models import dense, encdec, hybrid, moe, ssm, vlm
 
 
@@ -125,6 +125,32 @@ class Model:
         if fam == "hybrid":
             return hybrid.init_cache(cfg, batch, max_len, spec_slack, dtype)
         raise ValueError(fam)
+
+    def init_paged_cache(self, batch, num_blocks, block_size,
+                         max_blocks_per_row, dtype=None):
+        """Block-pool KV cache for ragged continuous batching (paged_kv.py).
+        KV families only; recurrent state needs no paging (it is O(1)/row)."""
+        cfg = self.cfg
+        dtype = dtype or cfg.act_dtype
+        fam = self.family
+        if fam in ("dense", "vlm"):
+            return paged_kv.init_cache(cfg.num_layers, batch, num_blocks,
+                                       block_size, max_blocks_per_row,
+                                       cfg.num_kv_heads, cfg.head_dim, dtype)
+        if fam == "moe":
+            n_stack = cfg.num_layers // max(cfg.moe_every, 1)
+            per = max(cfg.moe_every, 1)
+
+            def pool():
+                return paged_kv.init_pool(n_stack, num_blocks, block_size,
+                                          cfg.num_kv_heads, cfg.head_dim, dtype)
+            blocks = {f"dense{i}": pool() for i in range(per - 1)}
+            blocks["moe"] = pool()
+            return {"blocks": blocks,
+                    "block_table": jnp.full((batch, max_blocks_per_row),
+                                            paged_kv.NULL_BLOCK, jnp.int32),
+                    "index": jnp.zeros((batch,), jnp.int32)}
+        raise ValueError(f"paged KV cache unsupported for family {fam!r}")
 
     def cache_spec(self, batch, max_len, spec_slack=8, dtype=None):
         dtype = dtype or self.cfg.act_dtype

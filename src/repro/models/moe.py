@@ -103,7 +103,7 @@ def moe_mlp(cfg, p, x):
     within_cap = (pos < cap) & (assign > 0)
     # a token routes to each expert at most once, so the K axis can be folded
     # BEFORE the capacity one-hot — the [G,g,K,E,C] intermediate never exists
-    # (it dominated temp memory in the first dry-run; see EXPERIMENTS.md §Perf)
+    # (it dominated temp memory in the first dry-run; see docs/DESIGN.md §Perf)
     pos_e = jnp.sum(pos * within_cap, axis=2)                  # [G, g, E]
     sel_e = jnp.any(within_cap, axis=2)                        # [G, g, E]
     gate_e = jnp.sum(top_p[..., None] * within_cap, axis=2)    # [G, g, E]
@@ -136,25 +136,25 @@ def moe_mlp(cfg, p, x):
     return y, {"load_balance": lb, "router_z": z}
 
 
-def moe_layer(cfg, p, x, q_pos, layer_cache, index):
+def moe_layer(cfg, p, x, q_pos, layer_cache, index, block_table=None):
     o, new_cache = dense.attn_block(cfg, p["attn"], x, q_pos, layer_cache, index,
-                                    cfg.sliding_window)
+                                    cfg.sliding_window, block_table=block_table)
     x = x + o
     y, aux = moe_mlp(cfg, p["moe"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
     return x + y, new_cache, aux
 
 
-def moe_block(cfg, bp, x, q_pos, block_cache, index):
+def moe_block(cfg, bp, x, q_pos, block_cache, index, block_table=None):
     """(moe_every-1) dense layers + 1 MoE layer; caches keyed like params."""
     n_dense = max(cfg.moe_every - 1, 0)
     new_bc = {}
     for i in range(n_dense):
         key = f"dense{i}"
         lc = block_cache[key] if block_cache is not None else None
-        x, nc = dense.dense_layer(cfg, bp[key], x, q_pos, lc, index)
+        x, nc = dense.dense_layer(cfg, bp[key], x, q_pos, lc, index, block_table)
         new_bc[key] = nc
     lc = block_cache["moe"] if block_cache is not None else None
-    x, nc, aux = moe_layer(cfg, bp["moe"], x, q_pos, lc, index)
+    x, nc, aux = moe_layer(cfg, bp["moe"], x, q_pos, lc, index, block_table)
     new_bc["moe"] = nc
     return x, (new_bc if block_cache is not None else None), aux
 
@@ -164,6 +164,7 @@ def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=
     x = x.astype(cfg.act_dtype)
     B, Q = x.shape[0], x.shape[1]
     index = cache["index"] if cache is not None else jnp.zeros((), jnp.int32)
+    block_table = cache.get("block_table") if cache is not None else None
     # index: scalar (shared) or [B] (per-row batched speculation)
     q_pos = (jnp.asarray(index)[..., None] + jnp.arange(Q, dtype=jnp.int32)
              if jnp.asarray(index).ndim else index + jnp.arange(Q, dtype=jnp.int32))
@@ -171,7 +172,7 @@ def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=
     def step(carry, xs):
         h, lb, rz = carry
         lp, lc = xs
-        h, new_lc, aux = moe_block(cfg, lp, h, q_pos, lc, index)
+        h, new_lc, aux = moe_block(cfg, lp, h, q_pos, lc, index, block_table)
         return (h, lb + aux["load_balance"], rz + aux["router_z"]), new_lc
 
     zero = jnp.zeros((), jnp.float32)
@@ -202,4 +203,7 @@ def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=
     aux = {"load_balance": lb / n_blocks, "router_z": rz / n_blocks}
     if cache is None:
         return logits, None, aux
-    return logits, {"blocks": new_kv, "index": index + Q}, aux
+    new_cache = {"blocks": new_kv, "index": index + Q}
+    if block_table is not None:
+        new_cache["block_table"] = block_table
+    return logits, new_cache, aux

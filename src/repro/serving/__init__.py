@@ -1,0 +1,8 @@
+"""Paged-KV serving subsystem: scheduler, telemetry, and the paged
+continuous-batching speculative server. See docs/DESIGN.md §3-§5."""
+from repro.serving.metrics import RequestRecord, ServingMetrics
+from repro.serving.paged_server import PagedSpecServer
+from repro.serving.scheduler import Scheduler, SchedulerConfig, ServeRequest
+
+__all__ = ["RequestRecord", "ServingMetrics", "PagedSpecServer",
+           "Scheduler", "SchedulerConfig", "ServeRequest"]

@@ -1,0 +1,125 @@
+"""Serving telemetry: per-request latency/throughput and acceptance-rate
+statistics for the paged speculative server.
+
+Two consumers:
+  * operators — ``summary()`` aggregates tokens/s, latency, and the per-round
+    acceptance histogram (the serving-time estimate of the paper's α);
+  * the scheduler — ``alpha_hat()`` feeds the cost model's gamma/AR decision
+    (core/cost_model.py Eq. 1), closing the paper's "when does speculation
+    pay off" loop online.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class RequestRecord:
+    rid: int
+    prompt_len: int
+    max_new: int
+    submitted: float = 0.0
+    started: float = 0.0      # prefill time (admission)
+    completed: float = 0.0
+    n_rounds: int = 0
+
+    @property
+    def latency(self) -> float:
+        return self.completed - self.submitted
+
+    @property
+    def decode_tps(self) -> float:
+        dt = self.completed - self.started
+        return self.max_new / dt if dt > 0 else float("inf")
+
+
+class ServingMetrics:
+    """Round- and request-level counters. ``now`` is injectable for tests."""
+
+    def __init__(self, gamma_max: int = 16, alpha_ema: float = 0.9,
+                 now=time.time):
+        self.gamma_max = gamma_max
+        self.alpha_ema = alpha_ema
+        self.now = now
+        self._alpha: Optional[float] = None
+        self.accept_hist = np.zeros(gamma_max + 1, np.int64)  # n_accepted/round
+        self.row_hists: Dict[int, np.ndarray] = {}            # rid -> histogram
+        self.n_rounds = 0
+        self.n_spec_rounds = 0
+        self.requests: Dict[int, RequestRecord] = {}
+        self.completed: List[RequestRecord] = []
+        self._t0: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self.total_generated = 0
+
+    # ------------------------------------------------------------- requests
+    def submit(self, rid: int, prompt_len: int, max_new: int):
+        rec = RequestRecord(rid, prompt_len, max_new, submitted=self.now())
+        self.requests[rid] = rec
+        return rec
+
+    def start(self, rid: int):
+        self.requests[rid].started = self.now()
+        if self._t0 is None:
+            self._t0 = self.requests[rid].started
+
+    def complete(self, rid: int):
+        rec = self.requests.pop(rid)
+        rec.completed = self.now()
+        self._t_last = rec.completed
+        self.total_generated += rec.max_new
+        self.completed.append(rec)
+        return rec
+
+    # --------------------------------------------------------------- rounds
+    def record_round(self, n_accepted, gamma: int, active=None, rids=None):
+        """n_accepted: [B] accepted draft tokens this round; ``active`` masks
+        live rows; ``rids`` maps rows to request ids for per-row histograms."""
+        n_accepted = np.asarray(n_accepted)
+        active = (np.asarray(active) if active is not None
+                  else np.ones_like(n_accepted, bool))
+        self.n_rounds += 1
+        if gamma <= 0:
+            return
+        self.n_spec_rounds += 1
+        for b, (acc, live) in enumerate(zip(n_accepted, active)):
+            if not live:
+                continue
+            a = int(min(max(acc, 0), self.gamma_max))
+            self.accept_hist[a] += 1
+            if rids is not None and rids[b] is not None:
+                h = self.row_hists.setdefault(rids[b],
+                                              np.zeros(self.gamma_max + 1,
+                                                       np.int64))
+                h[a] += 1
+            alpha_round = a / gamma
+            self._alpha = (alpha_round if self._alpha is None else
+                           self.alpha_ema * self._alpha
+                           + (1 - self.alpha_ema) * alpha_round)
+
+    def alpha_hat(self) -> Optional[float]:
+        """EMA acceptance-rate estimate; None until a speculative round ran."""
+        return self._alpha
+
+    # -------------------------------------------------------------- summary
+    def summary(self) -> dict:
+        lat = [r.latency for r in self.completed]
+        wall = ((self._t_last - self._t0)
+                if self._t0 is not None and self._t_last is not None else 0.0)
+        return {
+            "requests_completed": len(self.completed),
+            "total_generated_tokens": self.total_generated,
+            "aggregate_tokens_per_s": (self.total_generated / wall
+                                       if wall > 0 else float("inf")),
+            "mean_latency_s": float(np.mean(lat)) if lat else float("nan"),
+            "p95_latency_s": (float(np.percentile(lat, 95)) if lat
+                              else float("nan")),
+            "rounds": self.n_rounds,
+            "spec_rounds": self.n_spec_rounds,
+            "alpha_hat": self._alpha,
+            "accept_hist": self.accept_hist.copy(),
+        }

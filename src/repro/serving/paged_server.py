@@ -1,0 +1,225 @@
+"""Paged continuous-batching speculative server.
+
+Successor to launch/continuous.py's ContinuousSpecServer: the uniform
+``(prompt_len, max_new)`` constraint is gone. Every request carries its own
+prompt length and decode budget; KV lives in a shared block pool
+(cache/paged_kv.py) so memory scales with resident tokens, and the
+Scheduler (serving/scheduler.py) drives admission, length-bucketed prefill,
+slot refill into the live block tables, and the cost-model gamma/AR
+decision per admitted batch.
+
+Execution model: one jitted round (speculative — BatchedSpecEngine.round —
+or plain AR when the cost model says speculation does not pay) advances the
+whole batch; between rounds the host harvests finished rows, frees their
+blocks, and refills slots by running a bucketed one-row prefill directly
+into the shared pools. Target and drafter consume identical token positions,
+so one allocator/block-table drives both models' pools.
+
+Invariant (tested): every completed request's tokens equal that prompt's
+standalone greedy AR continuation, regardless of its neighbours' lengths.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.paged_kv import BlockAllocator
+from repro.core.batched_engine import (KV_FAMILIES, BatchedEngineConfig,
+                                       BatchedSpecEngine, RowState)
+from repro.serving.metrics import ServingMetrics
+from repro.serving.scheduler import Scheduler, SchedulerConfig, ServeRequest
+
+
+class PagedSpecServer:
+    def __init__(self, target, drafter, params_t, params_d,
+                 scfg: Optional[SchedulerConfig] = None, *,
+                 gamma: Optional[int] = None,
+                 alpha: Optional[float] = None,
+                 cost_coefficient: Optional[float] = None):
+        """``gamma``/``alpha``/``cost_coefficient`` override the scheduler's
+        cost-model decision (None = decide online from telemetry)."""
+        assert target.family in KV_FAMILIES and drafter.family in KV_FAMILIES, \
+            "paged speculative serving needs KV-cache families"
+        self.target, self.drafter = target, drafter
+        self.params_t, self.params_d = params_t, params_d
+        self.scfg = scfg or SchedulerConfig()
+        self.metrics = ServingMetrics(gamma_max=self.scfg.gamma_max)
+        self.alloc = BlockAllocator(self.scfg.num_blocks, self.scfg.block_size,
+                                    self.scfg.max_blocks_per_row,
+                                    self.scfg.max_batch)
+        self.sched = Scheduler(self.scfg, self.alloc, self.metrics)
+        self._gamma_override = gamma
+        self._alpha_override = alpha
+        self._c_override = cost_coefficient
+
+        self.B = self.scfg.max_batch
+        self.T = self.scfg.max_tokens_per_row + self.scfg.gamma_max + 2
+        self._slots: List[Optional[ServeRequest]] = [None] * self.B
+        self._target_len = np.zeros(self.B, np.int64)
+        self._state: Optional[RowState] = None
+        self._engines: Dict[int, BatchedSpecEngine] = {}
+        self._prefill_jit = None
+        self._ar_jit = None
+        self.gamma = None           # decided at batch formation
+        self.done: List[ServeRequest] = []
+        self.total_rounds = 0
+
+    # ------------------------------------------------------------- plumbing
+    def submit(self, req: ServeRequest):
+        self.sched.submit(req)
+
+    def _engine(self, gamma: int) -> BatchedSpecEngine:
+        if gamma not in self._engines:
+            eng = BatchedSpecEngine(self.target, self.drafter,
+                                    BatchedEngineConfig(gamma=gamma))
+            eng._round_jit = jax.jit(lambda pt, pd, s: eng.round(pt, pd, s))
+            self._engines[gamma] = eng
+        return self._engines[gamma]
+
+    def _empty_state(self) -> RowState:
+        B = self.B
+        tcache = self.target.init_paged_cache(B, self.scfg.num_blocks,
+                                              self.scfg.block_size,
+                                              self.scfg.max_blocks_per_row)
+        dcache = self.drafter.init_paged_cache(B, self.scfg.num_blocks,
+                                               self.scfg.block_size,
+                                               self.scfg.max_blocks_per_row)
+        return RowState(jnp.zeros((B, self.T), jnp.int32),
+                        jnp.ones((B,), jnp.int32),      # length-1 must be >= 0
+                        dcache, tcache,
+                        jnp.zeros((B,), jnp.int32), jnp.zeros((), jnp.int32),
+                        jnp.zeros((B,), bool))
+
+    def _sync_tables(self, state: RowState) -> RowState:
+        table = self.alloc.device_table()
+        return state._replace(tcache={**state.tcache, "block_table": table},
+                              dcache={**state.dcache, "block_table": table})
+
+    # -------------------------------------------------------------- prefill
+    def _prefill_into(self, state: RowState, row: int, req: ServeRequest):
+        """Length-bucketed one-row prefill written straight into the shared
+        pools, then rolled back to the true prompt length (exact: the padded
+        tail is causally invisible to the real tokens and masked afterward)."""
+        padded = self.sched.pad_to_bucket(np.asarray(req.prompt, np.int32))
+        P = req.prompt_len
+        if self._prefill_jit is None:
+            def prefill(pt, pd, prompt, tc, dc):
+                _, tc, _ = self.target.apply(pt, prompt[:, :-1], tc)
+                _, dc, _ = self.drafter.apply(pd, prompt[:, :-1], dc)
+                return tc, dc
+            self._prefill_jit = jax.jit(prefill)
+        table = self.alloc.device_table()
+        zero = jnp.zeros((1,), jnp.int32)
+        tc_view = {**state.tcache, "block_table": table[row:row + 1], "index": zero}
+        dc_view = {**state.dcache, "block_table": table[row:row + 1], "index": zero}
+        tc, dc = self._prefill_jit(self.params_t, self.params_d,
+                                   jnp.asarray(padded[None]), tc_view, dc_view)
+        # merge: pools carry the new rows; index rolls back to P-1 (bucket
+        # padding beyond it is masked); tables re-broadcast to the full batch
+        tcache = {**tc, "block_table": table,
+                  "index": state.tcache["index"].at[row].set(P - 1)}
+        dcache = {**dc, "block_table": table,
+                  "index": state.dcache["index"].at[row].set(P - 1)}
+        tokens = state.tokens.at[row].set(0).at[row, :P].set(
+            jnp.asarray(req.prompt, jnp.int32))
+        self._target_len[row] = P + req.max_new
+        return state._replace(tokens=tokens,
+                              length=state.length.at[row].set(P),
+                              active=state.active.at[row].set(True),
+                              tcache=tcache, dcache=dcache)
+
+    # ------------------------------------------------------------- AR round
+    def _ar_round(self, state: RowState) -> RowState:
+        """gamma* = 0 fallback: one committed token per active row per round,
+        target model only (the cost model said drafting does not pay)."""
+        if self._ar_jit is None:
+            def ar(pt, st: RowState) -> RowState:
+                B, T = st.tokens.shape
+                rows = jnp.arange(B)
+                t_last = st.tokens[rows, st.length - 1]
+                logits, tcache, _ = self.target.apply(pt, t_last[:, None],
+                                                      st.tcache,
+                                                      logits_slice="last")
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                cols = jnp.clip(st.length, 0, T - 1)
+                cur = st.tokens[rows, cols]
+                tokens = st.tokens.at[rows, cols].set(
+                    jnp.where(st.active, nxt, cur))
+                new_len = st.length + st.active.astype(jnp.int32)
+                tcache = {**tcache, "index": (new_len - 1).astype(jnp.int32)}
+                return st._replace(tokens=tokens, length=new_len,
+                                   tcache=tcache,
+                                   n_rounds=st.n_rounds + 1)
+            self._ar_jit = jax.jit(ar)
+        return self._ar_jit(self.params_t, state)
+
+    # -------------------------------------------------------------- serving
+    def _refill(self, state: RowState) -> RowState:
+        for b in range(self.B):
+            if self._slots[b] is not None:
+                continue
+            req = self.sched.try_admit(b)
+            if req is None:
+                break                       # FCFS head-blocking
+            state = self._sync_tables(state)
+            state = self._prefill_into(state, b, req)
+            self._slots[b] = req
+        return state
+
+    def _harvest(self, state: RowState) -> RowState:
+        lengths = np.asarray(state.length)
+        for b in range(self.B):
+            req = self._slots[b]
+            if req is None or lengths[b] < self._target_len[b]:
+                continue
+            req.tokens = np.asarray(state.tokens[b, :self._target_len[b]])
+            self.sched.release(b, req)
+            self.done.append(req)
+            self._slots[b] = None
+            state = state._replace(active=state.active.at[b].set(False))
+        return self._sync_tables(self._refill(state))
+
+    def run(self):
+        """Drain the queue; returns completed requests (submission order is
+        not guaranteed — rows finish by their own lengths)."""
+        if self._state is None:
+            self._state = self._empty_state()
+        self._state = self._sync_tables(self._refill(self._state))
+        if not any(r is not None for r in self._slots):
+            return self.done
+
+        # gamma/AR decision at batch formation (paper Eq. 1, telemetry alpha)
+        if self._gamma_override is not None:
+            self.gamma = self._gamma_override
+        else:
+            self.gamma, _ = self.sched.choose_gamma(self._alpha_override,
+                                                    self._c_override)
+
+        while any(r is not None for r in self._slots):
+            # online re-decision: spec->spec retunes are safe (both caches are
+            # maintained every speculative round) and spec->AR downgrades when
+            # measured alpha makes Eq. 1 infeasible; AR->spec is one-way OFF
+            # within a run because the drafter KV is not written during AR
+            # rounds (it resynchronizes at the next run()/batch formation).
+            if self._gamma_override is None and self.gamma > 0:
+                self.gamma, _ = self.sched.choose_gamma(self._alpha_override,
+                                                        self._c_override)
+            prev_len = np.asarray(self._state.length)
+            if self.gamma > 0:
+                eng = self._engine(self.gamma)
+                self._state = eng._round_jit(self.params_t, self.params_d,
+                                             self._state)
+            else:
+                self._state = self._ar_round(self._state)
+            self.total_rounds += 1
+            emitted = np.asarray(self._state.length) - prev_len
+            active = np.asarray(self._state.active)
+            rids = [r.rid if r is not None else None for r in self._slots]
+            self.metrics.record_round(np.maximum(emitted - 1, 0), self.gamma,
+                                      active, rids)
+            self._state = self._harvest(self._state)
+        return self.done

@@ -1,0 +1,149 @@
+"""Request scheduler for paged variable-length continuous speculative batching.
+
+Responsibilities (host-side; every decision lands in the device state as a
+block-table / index update between jitted rounds):
+
+  * ADMISSION CONTROL — FCFS with conservative reservation: a request is
+    admitted only when the block pool can hold its whole worst case
+    ``prompt_len + max_new + gamma + 1`` tokens (prompt + decode + in-flight
+    speculation). Nothing is ever preempted mid-flight, so admission can
+    never deadlock the pool.
+  * LENGTH BUCKETING — ragged prompt lengths are padded up to a small set of
+    bucket lengths so prefill compiles once per bucket, not once per length.
+    Padding is exact: prefill consumes the padded prompt causally (real
+    tokens never attend to the right-padding) and the cache index is rolled
+    back to ``prompt_len - 1`` afterwards, masking the padded tail.
+  * GAMMA / AR DECISION — at batch formation and then before every round,
+    the scheduler evaluates the paper's Eq. (1) cost model
+    (core/cost_model.py) at the measured acceptance rate (metrics EMA,
+    falling back to a prior) and the configured cost coefficient
+    c = t_draft / t_target: the optimal gamma drives speculative rounds,
+    and gamma* = 0 (infeasible c >= alpha) falls back to plain
+    autoregressive decoding — the "when is speculation beneficial" decision
+    made online (see docs/DESIGN.md §4 for the one-way spec->AR rule).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Optional, Tuple
+
+import numpy as np
+
+from repro.cache.paged_kv import BlockAllocator
+from repro.core import cost_model
+from repro.serving.metrics import ServingMetrics
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    max_batch: int = 4
+    block_size: int = 8
+    num_blocks: int = 128              # pool size (block 0 is reserved/null)
+    max_blocks_per_row: int = 16
+    gamma_max: int = 8
+    prefill_buckets: Tuple[int, ...] = (8, 16, 32, 64, 128, 256)
+    alpha_prior: float = 0.8           # acceptance prior before telemetry
+    cost_coefficient: float = 0.25     # c = t_draft / t_target (measured or roofline)
+
+    @property
+    def max_tokens_per_row(self) -> int:
+        return self.max_blocks_per_row * self.block_size
+
+
+@dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray                 # [P] int32, any length
+    max_new: int
+    tokens: Optional[np.ndarray] = None  # filled on completion
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig, allocator: BlockAllocator,
+                 metrics: Optional[ServingMetrics] = None):
+        self.cfg = cfg
+        self.alloc = allocator
+        self.metrics = metrics or ServingMetrics(gamma_max=cfg.gamma_max)
+        self.queue: Deque[ServeRequest] = deque()
+
+    # ------------------------------------------------------------ admission
+    def submit(self, req: ServeRequest):
+        demand = self.demand_tokens(req)
+        if demand > self.cfg.max_tokens_per_row:
+            raise ValueError(
+                f"request {req.rid}: {demand} tokens exceeds per-row capacity "
+                f"{self.cfg.max_tokens_per_row} "
+                f"({self.cfg.max_blocks_per_row} blocks x {self.cfg.block_size})")
+        pool_tokens = (self.cfg.num_blocks - 1) * self.cfg.block_size
+        if demand > pool_tokens:
+            # would pass the per-row check yet never admit (head-blocks forever)
+            raise ValueError(
+                f"request {req.rid}: {demand} tokens exceeds the allocatable "
+                f"pool {pool_tokens} ({self.cfg.num_blocks - 1} blocks x "
+                f"{self.cfg.block_size}; block 0 is reserved)")
+        self.bucket(req.prompt_len)   # over-bucket prompts fail loudly here,
+                                      # not mid-flight in the prefill
+        self.metrics.submit(req.rid, req.prompt_len, req.max_new)
+        self.queue.append(req)
+
+    def demand_tokens(self, req: ServeRequest) -> int:
+        """Worst-case resident tokens: prompt + decode budget + speculative
+        slack (a round writes up to gamma+1 unverified tokens past the
+        committed index)."""
+        return req.prompt_len + req.max_new + self.cfg.gamma_max + 1
+
+    def has_work(self) -> bool:
+        return bool(self.queue)
+
+    def try_admit(self, row: int) -> Optional[ServeRequest]:
+        """Admit the queue head into ``row`` if its full reservation fits
+        (FCFS, head-blocking — no starvation). Reserves blocks on success."""
+        if not self.queue:
+            return None
+        req = self.queue[0]
+        # bucketed prefill writes bucket(P)-1 positions; real-token positions
+        # are always < demand, and padded spill past the reservation lands in
+        # the null block and is rolled back — reserve only the real demand.
+        if not self.alloc.ensure(row, self.demand_tokens(req)):
+            return None
+        self.queue.popleft()
+        self.metrics.start(req.rid)
+        return req
+
+    def release(self, row: int, req: ServeRequest):
+        """Return a finished request's blocks to the pool."""
+        self.alloc.free_row(row)
+        self.metrics.complete(req.rid)
+
+    # ------------------------------------------------------------ bucketing
+    def bucket(self, prompt_len: int) -> int:
+        for b in self.cfg.prefill_buckets:
+            if b >= prompt_len:
+                return b
+        raise ValueError(f"prompt_len {prompt_len} exceeds largest prefill "
+                         f"bucket {self.cfg.prefill_buckets[-1]}")
+
+    def pad_to_bucket(self, prompt: np.ndarray) -> np.ndarray:
+        P = len(prompt)
+        Lb = self.bucket(P)
+        out = np.zeros(Lb, np.int32)
+        out[:P] = prompt
+        return out
+
+    # ------------------------------------------------------- gamma decision
+    def choose_gamma(self, alpha: Optional[float] = None,
+                     c: Optional[float] = None) -> Tuple[int, float]:
+        """Cost-model gamma for the next admitted batch: (gamma*, predicted
+        speedup). gamma* == 0 means 'speculation does not pay — run AR'."""
+        if alpha is None:
+            alpha = self.metrics.alpha_hat()
+        if alpha is None:
+            alpha = self.cfg.alpha_prior
+        if c is None:
+            c = self.cfg.cost_coefficient
+        return cost_model.optimal_gamma(alpha, c, self.cfg.gamma_max)

@@ -3,6 +3,7 @@ import math
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: requirements-test.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cost_model as cm

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: requirements-test.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.quant import int8 as q8
