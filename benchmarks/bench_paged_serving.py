@@ -14,10 +14,13 @@ import time
 import jax
 import numpy as np
 
+import dataclasses
+
 from benchmarks.common import emit, prompts, trained_pair
+from repro.api import DeploymentSpec, Planner, Session
 from repro.cache import paged_kv
 from repro.launch.continuous import ContinuousSpecServer, StreamRequest
-from repro.serving import PagedSpecServer, SchedulerConfig, ServeRequest
+from repro.serving import ServeRequest
 
 B, GAMMA, R = 4, 4, 10
 PROMPT_LENS = (6, 9, 12, 16)
@@ -61,18 +64,29 @@ def main():
     fixed_decoded = R * new_max
 
     # --- paged: each request at its own length from the shared pool, sized
-    # to the workload (B rows of worst-case demand) + the null block
+    # to the workload (B rows of worst-case demand) + the null block; the
+    # plan comes from the facade Planner with the bench geometry pinned
     demand_blocks = -(-(p_max + new_max + GAMMA + 1) // 8)
-    scfg = SchedulerConfig(max_batch=B, block_size=8,
-                           num_blocks=B * demand_blocks + 1,
-                           max_blocks_per_row=demand_blocks, gamma_max=GAMMA,
-                           prefill_buckets=(8, 16), cost_coefficient=0.25)
-    paged = PagedSpecServer(mt, md, pt, pd, scfg, gamma=GAMMA)
-    for rid, prompt, new in traffic:
-        paged.submit(ServeRequest(rid, prompt, new))
+    spec = DeploymentSpec(batch_size=B,
+                          prompt_lens=tuple(len(p) for _, p, _ in traffic),
+                          max_new=tuple(new for _, _, new in traffic),
+                          streaming=True, cost_coefficient=0.25,
+                          gamma_max=GAMMA, adaptive_gamma=False)
+    plan = Planner(spec).plan()
+    plan = dataclasses.replace(
+        plan,
+        cache=dataclasses.replace(plan.cache, block_size=8,
+                                  num_blocks=B * demand_blocks + 1,
+                                  max_blocks_per_row=demand_blocks,
+                                  prefill_buckets=(8, 16)),
+        gamma=dataclasses.replace(plan.gamma, gamma=GAMMA))
+    sess = Session(mt, md, pt, pd, plan, max_batch=B)
     t0 = time.time()
-    done = paged.run()
+    done = sess.serve([ServeRequest(rid, prompt, new)
+                       for rid, prompt, new in traffic])
     t_paged = time.time() - t0
+    paged = sess.backend.server
+    scfg = paged.scfg
     assert len(done) == R
     paged_pool_bytes = (paged_kv.memory_bytes(paged._state.tcache)
                         + paged_kv.memory_bytes(paged._state.dcache))

@@ -41,10 +41,16 @@ def main(lower: bool = False):
     print(f"# target step {tt.step_time*1e3:.3f}ms, drafter step "
           f"{td.step_time*1e3:.3f}ms  ->  c = {c:.3f}")
 
+    # the same decision through the facade Planner: one frozen plan per alpha
+    # (gamma* and predicted S are the plan's, not recomputed here)
+    from repro.api import DeploymentSpec, Planner
     print("alpha,gamma*,S_predicted,tokens_per_target_step")
     best = {}
     for alpha in (0.5, 0.7, 0.8, 0.9):
-        g, s = cost_model.optimal_gamma(alpha, c)
+        plan = Planner(DeploymentSpec(alpha=alpha, cost_coefficient=c,
+                                      gamma_max=cost_model.GAMMA_MAX_DEFAULT,
+                                      adaptive_gamma=False)).plan()
+        g, s = plan.gamma.gamma, plan.predicted_speedup
         tok = cost_model.expected_accepted(alpha, g) if g else 1.0
         best[alpha] = (g, s)
         print(f"{alpha},{g},{s:.2f},{tok:.2f}")

@@ -7,23 +7,30 @@ while_loop program — quantifying what the paper could not deploy.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from benchmarks.common import emit, prompts, time_call, trained_pair
-from repro.core.engine import EngineConfig, SpecEngine
+from repro.api import DeploymentSpec, Planner, Session
 
 GAMMA = 4
 MAX_NEW = 32
 
 
 def run(strategy, use_cache, mt, md, pt, pd, ps):
-    eng = SpecEngine(mt, md, EngineConfig(gamma=GAMMA, greedy=True,
-                                          use_cache=use_cache,
-                                          strategy=strategy))
+    spec = DeploymentSpec(batch_size=1, prompt_lens=(ps.shape[1],),
+                          max_new=MAX_NEW, alpha=0.8, cost_coefficient=0.1,
+                          gamma_max=GAMMA, use_cache=use_cache,
+                          strategy=strategy, adaptive_gamma=False)
+    plan = Planner(spec).plan()
+    plan = dataclasses.replace(                       # pin the measured gamma
+        plan, gamma=dataclasses.replace(plan.gamma, gamma=GAMMA))
+    sess = Session(mt, md, pt, pd, plan)
     def go():
-        return eng.generate(pt, pd, ps, MAX_NEW)[0]
+        return sess.generate(ps, MAX_NEW)[0]
     t = time_call(go, iters=3, warmup=1)
-    _, stats = eng.generate(pt, pd, ps, MAX_NEW)
+    _, stats = sess.generate(ps, MAX_NEW)
     return t, stats["rounds"]
 
 

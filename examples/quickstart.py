@@ -1,11 +1,12 @@
-"""Quickstart: speculative sampling with the cost model deciding the setup.
+"""Quickstart: the two-phase API — plan a deployment, open a session.
 
 Runs entirely on CPU with reduced configs:
   1. build a (target, drafter) pair,
   2. profile the cost coefficient c (paper step ②),
-  3. ask the analytical cost model whether/how to speculate (steps ③-⑤),
-  4. generate with the monolithic speculative engine and verify the output
-     matches the target model's own greedy continuation.
+  3. hand the measurements to the Planner: the analytical cost model decides
+     whether/how to speculate and freezes an ExecutionPlan (steps ③-⑤),
+  4. open a Session on the plan, generate, and verify the output matches
+     the target model's own greedy continuation.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,9 +15,9 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import DeploymentSpec, ExecutionPlan, Planner, Session
 from repro.configs import registry
-from repro.core import cost_model
-from repro.core.engine import EngineConfig, SpecEngine, autoregressive_generate
+from repro.core.engine import autoregressive_generate
 from repro.models.model import build_model
 
 # 1. models — the paper's pairing shape: same family, ~3x size gap
@@ -29,7 +30,7 @@ params_d = drafter.init(jax.random.PRNGKey(1))
 
 prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, cfg_t.vocab_size)
 
-# 2. profile c = t_draft / t_target (one forward each)
+# 2. profile t_draft / t_target (one forward each)
 fwd_t = jax.jit(lambda p, t: target.apply(p, t)[0])
 fwd_d = jax.jit(lambda p, t: drafter.apply(p, t)[0])
 for f, p in ((fwd_t, params_t), (fwd_d, params_d)):
@@ -38,19 +39,26 @@ t0 = time.perf_counter(); jax.block_until_ready(fwd_t(params_t, prompt))
 t_target = time.perf_counter() - t0
 t0 = time.perf_counter(); jax.block_until_ready(fwd_d(params_d, prompt))
 t_draft = time.perf_counter() - t0
-c = cost_model.cost_coefficient(t_draft, t_target)
 
-# 3. the cost model decides (assume alpha from offline measurement)
-alpha = 0.8
-gamma, predicted_S = cost_model.optimal_gamma(alpha, c)
-print(f"c={c:.3f}  alpha={alpha}  ->  feasible={cost_model.feasible(alpha, c)} "
-      f"gamma*={gamma}  predicted S={predicted_S:.2f}")
+# 3. the Planner decides (alpha from offline measurement) and freezes a plan
+spec = DeploymentSpec(batch_size=1, prompt_lens=(8,), max_new=24,
+                      alpha=0.8, t_draft=t_draft, t_target=t_target)
+plan = Planner(spec).plan()
+if plan.gamma.gamma == 0:
+    # single-shot CPU timings are noisy; keep the speculative path exercised
+    # (the losslessness check below is only meaningful with speculation on)
+    import dataclasses
+    plan = dataclasses.replace(plan,
+                               gamma=dataclasses.replace(plan.gamma, gamma=1))
+print(f"c={plan.cost_coefficient:.3f}  alpha={plan.alpha}  ->  "
+      f"gamma*={plan.gamma.gamma}  predicted S={plan.predicted_speedup:.2f}  "
+      f"strategy={plan.strategy}  batching={plan.batching}")
+# the plan is a frozen artifact: serialize it, ship it, reload it
+plan = ExecutionPlan.from_json(plan.to_json())
 
-# 4. generate speculatively and check greedy losslessness
-engine = SpecEngine(target, drafter,
-                    EngineConfig(gamma=max(gamma, 1), greedy=True,
-                                 use_cache=True, strategy="monolithic"))
-toks, stats = engine.generate(params_t, params_d, prompt, 24)
+# 4. open a session on the plan and check greedy losslessness
+session = Session(target, drafter, params_t, params_d, plan)
+toks, stats = session.generate(prompt, 24)
 ref = autoregressive_generate(target, params_t, prompt, 24)
 n = min(toks.shape[1], ref.shape[1])
 assert (toks[:, :n] == ref[:, :n]).all(), "speculative output diverged!"

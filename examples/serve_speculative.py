@@ -1,6 +1,6 @@
 """End-to-end serving driver: trained target + drafter, batched requests,
 speculative vs autoregressive latency on this host (the paper's Fig. 7 setup
-in miniature).
+in miniature) — served through the repro.api plan -> session facade.
 
     PYTHONPATH=src python examples/serve_speculative.py
 """
@@ -16,32 +16,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import prompts, trained_pair
-from repro.core.engine import EngineConfig, SpecEngine, autoregressive_generate
-from repro.launch.serve import Request, Server
+from repro.api import DeploymentSpec, Planner, Session
+from repro.core.engine import autoregressive_generate
 
 (target, params_t), (drafter, params_d) = trained_pair()
 
-# --- speculative server: max_batch=1 = the paper's single-stream latency
-# setting. (Batched rounds commit the batch-min acceptance — correct but
-# wasteful when per-prompt alpha varies; see engine.py docstring.)
-server = Server(target, drafter, params_t, params_d,
-                EngineConfig(gamma=4, greedy=True, use_cache=False,
-                             strategy="modular"), max_batch=1)
+# --- plan: batch_size=1 = the paper's single-stream latency setting; the
+# fixed gamma=4 modular no-cache configuration is pinned through the spec
+spec = DeploymentSpec(batch_size=1, prompt_lens=(12,), max_new=24,
+                      alpha=0.8, cost_coefficient=0.1, gamma_max=4,
+                      use_cache=False, strategy="modular",
+                      adaptive_gamma=False)
+plan = Planner(spec).plan()
+server = Session(target, drafter, params_t, params_d, plan, max_batch=1)
 rng = np.random.default_rng(0)
 ps = np.asarray(prompts(8, 12, seed=5))
 # warm up (compile) both paths outside the timed region
-server.submit(Request(-1, ps[0], max_new_tokens=24))
-server.run()
-server.done.clear()
+server.serve([server.request(ps[0], 24, rid=-1)])
 jax.block_until_ready(
     autoregressive_generate(target, params_t, jnp.asarray(ps[:1]), 24))
 
-for i in range(8):
-    server.submit(Request(i, ps[i], max_new_tokens=24))
 t0 = time.time()
-done = server.run()
+done = server.serve([server.request(ps[i], 24, rid=i) for i in range(8)])
 t_spec = time.time() - t0
-alpha = float(np.mean([r.stats["alpha_hat"] for r in done]))
+alpha = server.alpha_hat
 
 # --- autoregressive baseline over the same requests
 t0 = time.time()
@@ -52,4 +50,5 @@ t_ar = time.time() - t0
 
 print(f"speculative: {t_spec:.2f}s  autoregressive: {t_ar:.2f}s  "
       f"speedup {t_ar / t_spec:.2f}x  (alpha_hat={alpha:.2f})")
-print("first completion:", done[0].tokens[:20].tolist())
+first = next(r for r in done if r.rid == 0)
+print("first completion:", first.tokens[:20].tolist())

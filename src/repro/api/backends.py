@@ -1,0 +1,363 @@
+"""Execution backends behind the Session facade.
+
+Every pre-existing execution path — batch-synchronized SpecEngine, per-row
+BatchedSpecEngine, fixed-shape ContinuousSpecServer, paged PagedSpecServer,
+and the plain autoregressive fallback — is wrapped behind one ``SpecBackend``
+protocol here. A backend executes a frozen ExecutionPlan; it makes NO
+speculation decisions of its own beyond the plan's runtime-feedback hook
+(api/feedback.py). Requests use serving.ServeRequest as the common currency.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Protocol, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.feedback import GammaController
+from repro.api.plan import ExecutionPlan
+from repro.core.engine import (EngineConfig, SpecEngine,
+                               autoregressive_generate)
+from repro.serving.scheduler import ServeRequest
+
+
+class SpecBackend(Protocol):
+    """What Session needs from an execution path."""
+    name: str
+
+    def generate(self, prompt, max_new: Optional[int] = None, key=None
+                 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+        """[B, P] prompt -> ([B, <=P+max_new] tokens, stats)."""
+        ...
+
+    def generate_batch(self, prompts, max_new: Optional[int] = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, Any]]:
+        """[B, P] prompts -> (token buffer, [B] lengths, stats)."""
+        ...
+
+    def serve(self, requests: Sequence[ServeRequest]) -> List[ServeRequest]:
+        """Drain a request list; returns them with .tokens filled."""
+        ...
+
+
+def _as_requests(prompts, max_new: int) -> List[ServeRequest]:
+    return [ServeRequest(i, np.asarray(p, np.int32), max_new)
+            for i, p in enumerate(np.asarray(prompts))]
+
+
+def _stack_results(done: Sequence[ServeRequest], n: int):
+    """Reassemble served requests (any completion order) into [n, T] + lens."""
+    by_rid = {r.rid: r for r in done}
+    lens = np.array([len(by_rid[i].tokens) for i in range(n)], np.int32)
+    buf = np.zeros((n, int(lens.max())), np.int32)
+    for i in range(n):
+        buf[i, :lens[i]] = by_rid[i].tokens
+    return jnp.asarray(buf), jnp.asarray(lens)
+
+
+# ============================================================== single-stream
+class EngineBackend:
+    """SpecEngine (monolithic or modular) / AR fallback / adaptive-gamma loop.
+
+    Serves plans with batching='single' — and doubles as the batch-synchronized
+    reference path for 'per_row' plans on non-KV families.
+    """
+    name = "engine"
+
+    def __init__(self, target, drafter, params_t, params_d,
+                 plan: ExecutionPlan, max_batch: int = 8):
+        self.target, self.drafter = target, drafter
+        self.params_t, self.params_d = params_t, params_d
+        self.plan = plan
+        self.max_batch = max_batch
+        self.controller = GammaController(plan.gamma, plan.cost_coefficient)
+        self._engines: Dict[int, SpecEngine] = {}
+
+    def _engine(self, gamma: int) -> SpecEngine:
+        if gamma not in self._engines:
+            p = self.plan
+            self._engines[gamma] = SpecEngine(
+                self.target, self.drafter,
+                EngineConfig(gamma=gamma, greedy=p.greedy,
+                             temperature=p.temperature, use_cache=p.use_cache,
+                             strategy=p.strategy))
+        return self._engines[gamma]
+
+    # ----------------------------------------------------------------- paths
+    def _generate_ar(self, prompt, max_new, key, extras_t=None):
+        toks = autoregressive_generate(
+            self.target, self.params_t, prompt, max_new,
+            greedy=self.plan.greedy, temperature=self.plan.temperature,
+            key=key, use_cache=self.plan.use_cache, extras=extras_t)
+        stats = {"rounds": max_new, "accepted": 0, "drafted": 0,
+                 "alpha_hat": float("nan"), "tokens_generated": max_new,
+                 "speculative": False}
+        return toks, stats
+
+    def _generate_adaptive(self, prompt, max_new, key, extras_t=None,
+                           extras_d=None):
+        """The plan's runtime-feedback hook driving modular rounds: re-pick
+        gamma each round from the alpha EMA (core/adaptive.py, generalized)."""
+        p = self.plan
+        B, P = prompt.shape
+        g_max = max(p.gamma.candidates)
+        max_len = P + max_new + g_max + 2
+        eng0 = self._engine(g_max)
+        state = eng0.prefill(self.params_t, self.params_d, prompt, max_len,
+                             extras_t, extras_d, key)
+        target_len = P + max_new
+        trace_start = len(self.controller.gamma_trace)
+        for g in p.gamma.candidates:
+            eng = self._engine(g)
+            if eng._round_jit is None:
+                fn = eng.round_cached if p.use_cache else eng.round_nocache
+                eng._round_jit = jax.jit(lambda pt, pd, s, f=fn: f(pt, pd, s))
+        while int(state.length) < target_len:
+            g = self.controller.gamma()
+            before = (int(state.n_accepted), int(state.n_drafted))
+            state = self._engines[g]._round_jit(self.params_t, self.params_d,
+                                                state)
+            self.controller.observe(int(state.n_accepted) - before[0],
+                                    int(state.n_drafted) - before[1])
+        stats = {
+            "rounds": int(state.n_rounds),
+            "accepted": int(state.n_accepted),
+            "drafted": int(state.n_drafted),
+            "alpha_hat": float(state.n_accepted) / max(float(state.n_drafted), 1.0),
+            "tokens_generated": int(state.length) - P,
+            "gamma_trace": list(self.controller.gamma_trace[trace_start:]),
+            "speculative": True,
+        }
+        return state.tokens[:, :int(state.length)], stats
+
+    # ------------------------------------------------------------- protocol
+    def generate(self, prompt, max_new=None, key=None, extras_t=None,
+                 extras_d=None):
+        p = self.plan
+        max_new = p.max_new if max_new is None else max_new
+        prompt = jnp.asarray(prompt, jnp.int32)
+        if p.gamma.adaptive and p.gamma.candidates:
+            return self._generate_adaptive(prompt, max_new, key,
+                                           extras_t, extras_d)
+        g = self.controller.gamma()
+        if g == 0:
+            return self._generate_ar(prompt, max_new, key, extras_t)
+        toks, stats = self._engine(g).generate(self.params_t, self.params_d,
+                                               prompt, max_new, key=key,
+                                               extras_t=extras_t,
+                                               extras_d=extras_d)
+        self.controller.observe(stats["accepted"], stats["drafted"])
+        stats["speculative"] = True
+        return toks, stats
+
+    def generate_batch(self, prompts, max_new=None):
+        toks, stats = self.generate(prompts, max_new)
+        lengths = jnp.full((toks.shape[0],), toks.shape[1], jnp.int32)
+        return toks, lengths, stats
+
+    def serve(self, requests):
+        return _serve_grouped(self, requests, self.max_batch)
+
+
+# =================================================================== per-row
+class PerRowBackend:
+    """BatchedSpecEngine: each row commits its own accepted prefix."""
+    name = "per_row"
+
+    def __init__(self, target, drafter, params_t, params_d,
+                 plan: ExecutionPlan, max_batch: int = 8):
+        from repro.core.batched_engine import (BatchedEngineConfig,
+                                               BatchedSpecEngine)
+        self.target, self.drafter = target, drafter
+        self.params_t, self.params_d = params_t, params_d
+        self.plan = plan
+        self.max_batch = max_batch
+        # gamma is consulted at batch boundaries, where the AR path is
+        # reachable (g==0 branch below) — let the controller downgrade
+        self.controller = GammaController(plan.gamma, plan.cost_coefficient,
+                                          allow_ar=True)
+        self._engines: Dict[int, Any] = {}
+        self._mk = lambda g: BatchedSpecEngine(
+            target, drafter, BatchedEngineConfig(gamma=g, max_new_tokens=plan.max_new))
+
+    def _engine(self, gamma: int):
+        if gamma not in self._engines:
+            self._engines[gamma] = self._mk(gamma)
+        return self._engines[gamma]
+
+    def generate_batch(self, prompts, max_new=None):
+        p = self.plan
+        max_new = p.max_new if max_new is None else max_new
+        prompts = jnp.asarray(prompts, jnp.int32)
+        g = self.controller.gamma()
+        if g == 0:
+            toks = autoregressive_generate(self.target, self.params_t,
+                                           prompts, max_new,
+                                           use_cache=p.use_cache)
+            lengths = jnp.full((toks.shape[0],), toks.shape[1], jnp.int32)
+            return toks, lengths, {"rounds": max_new, "speculative": False}
+        tokens, lengths, stats = self._engine(g).generate(
+            self.params_t, self.params_d, prompts, max_new)
+        B = prompts.shape[0]
+        drafted = int(stats["rounds"]) * g * B
+        accepted = int(round(float(jnp.sum(stats["alpha_hat_per_row"]))
+                             * int(stats["rounds"]) * g))
+        self.controller.observe(accepted, drafted)
+        stats = dict(stats)
+        stats["speculative"] = True
+        stats["alpha_hat"] = accepted / max(drafted, 1)
+        return tokens, lengths, stats
+
+    def generate(self, prompt, max_new=None, key=None):
+        toks, lengths, stats = self.generate_batch(prompt, max_new)
+        return toks[:, :int(jnp.min(lengths))], stats
+
+    def serve(self, requests):
+        return _serve_grouped(self, requests, self.max_batch)
+
+
+# ======================================================== continuous (fixed)
+class ContinuousBackend:
+    """ContinuousSpecServer: fixed-shape slot refill, uniform (P, max_new)."""
+    name = "continuous"
+
+    def __init__(self, target, drafter, params_t, params_d,
+                 plan: ExecutionPlan, max_batch: int = 4):
+        self.target, self.drafter = target, drafter
+        self.params_t, self.params_d = params_t, params_d
+        self.plan = plan
+        self.max_batch = max_batch
+        # consulted per uniform group, where the g==0 AR branch is reachable
+        self.controller = GammaController(plan.gamma, plan.cost_coefficient,
+                                          allow_ar=True)
+        self._engines: Dict[int, Any] = {}   # shared round-jit across waves
+
+    def _engine(self, gamma: int):
+        from repro.core.batched_engine import (BatchedEngineConfig,
+                                               BatchedSpecEngine)
+        if gamma not in self._engines:
+            self._engines[gamma] = BatchedSpecEngine(
+                self.target, self.drafter, BatchedEngineConfig(gamma=gamma))
+        return self._engines[gamma]
+
+    def serve(self, requests):
+        from repro.launch.continuous import ContinuousSpecServer, StreamRequest
+        out: List[ServeRequest] = []
+        for (P, max_new), group in _group_uniform(requests).items():
+            g = self.controller.gamma()
+            if g == 0:
+                out.extend(_serve_ar(self, group))
+                continue
+            srv = ContinuousSpecServer(
+                self.target, self.drafter, self.params_t, self.params_d,
+                batch=min(self.max_batch, len(group)), prompt_len=P,
+                max_new=max_new, gamma=g, engine=self._engine(g))
+            for r in group:
+                srv.submit(StreamRequest(r.rid, np.asarray(r.prompt, np.int32)))
+            by_rid = {r.rid: r for r in group}
+            for s in srv.run():
+                req = by_rid[s.rid]
+                req.tokens = s.tokens
+                out.append(req)
+            self.controller.observe(srv.n_accepted_total, srv.n_drafted_total)
+        return out
+
+    def generate_batch(self, prompts, max_new=None):
+        max_new = self.plan.max_new if max_new is None else max_new
+        done = self.serve(_as_requests(prompts, max_new))
+        toks, lens = _stack_results(done, len(done))
+        return toks, lens, {"speculative": self.plan.speculative}
+
+    def generate(self, prompt, max_new=None, key=None):
+        toks, lens, stats = self.generate_batch(prompt, max_new)
+        return toks[:, :int(jnp.min(lens))], stats
+
+
+# ============================================================ paged serving
+class PagedBackend:
+    """PagedSpecServer: ragged continuous batching over a shared block pool.
+    The plan's block geometry becomes the SchedulerConfig; an adaptive
+    GammaSchedule hands the gamma/AR decision to the scheduler's online
+    cost-model loop (same Eq. 1, telemetry alpha)."""
+    name = "paged"
+
+    def __init__(self, target, drafter, params_t, params_d,
+                 plan: ExecutionPlan, max_batch: int = 4):
+        from repro.serving import PagedSpecServer, SchedulerConfig
+        self.plan = plan
+        cache = plan.cache
+        scfg = SchedulerConfig(
+            max_batch=max_batch, block_size=cache.block_size,
+            num_blocks=cache.num_blocks,
+            max_blocks_per_row=cache.max_blocks_per_row,
+            gamma_max=plan.gamma_max,
+            prefill_buckets=cache.prefill_buckets,
+            alpha_prior=plan.gamma.alpha_init,
+            cost_coefficient=plan.cost_coefficient)
+        gamma_override = None if plan.gamma.adaptive else plan.gamma.gamma
+        self.server = PagedSpecServer(target, drafter, params_t, params_d,
+                                      scfg, gamma=gamma_override)
+
+    @property
+    def metrics(self):
+        return self.server.metrics
+
+    def serve(self, requests):
+        for r in requests:
+            self.server.submit(r)
+        done_before = len(self.server.done)
+        self.server.run()
+        return self.server.done[done_before:]
+
+    def generate_batch(self, prompts, max_new=None):
+        max_new = self.plan.max_new if max_new is None else max_new
+        reqs = _as_requests(prompts, max_new)
+        done = self.serve(reqs)
+        toks, lens = _stack_results(done, len(reqs))
+        return toks, lens, {"speculative": self.plan.speculative,
+                            "gamma": self.server.gamma}
+
+    def generate(self, prompt, max_new=None, key=None):
+        toks, lens, stats = self.generate_batch(prompt, max_new)
+        return toks[:, :int(jnp.min(lens))], stats
+
+
+# ------------------------------------------------------------------- helpers
+def _group_uniform(requests) -> Dict[Tuple[int, int], List[ServeRequest]]:
+    """Group requests by (prompt_len, max_new) so shapes compile once."""
+    groups: Dict[Tuple[int, int], List[ServeRequest]] = {}
+    for r in requests:
+        groups.setdefault((r.prompt_len, r.max_new), []).append(r)
+    return groups
+
+
+def _serve_grouped(backend, requests, max_batch: int) -> List[ServeRequest]:
+    """Batch-at-a-time serving loop over uniform-shape groups (the legacy
+    launch/serve.py Server semantics, on any generate_batch backend)."""
+    out: List[ServeRequest] = []
+    for (P, max_new), group in _group_uniform(requests).items():
+        for i in range(0, len(group), max_batch):
+            chunk = group[i:i + max_batch]
+            prompts = jnp.asarray(np.stack([np.asarray(r.prompt, np.int32)
+                                            for r in chunk]))
+            toks, lengths, _ = backend.generate_batch(prompts, max_new)
+            toks = np.asarray(toks)
+            for j, r in enumerate(chunk):
+                # the last round may commit past the budget — trim to it
+                r.tokens = toks[j, :min(int(lengths[j]), P + max_new)]
+                out.append(r)
+    return out
+
+
+def _serve_ar(backend, group) -> List[ServeRequest]:
+    """AR-serve a uniform group on the target only (gamma*=0 plans)."""
+    prompts = jnp.asarray(np.stack([np.asarray(r.prompt, np.int32)
+                                    for r in group]))
+    toks = autoregressive_generate(backend.target, backend.params_t, prompts,
+                                   group[0].max_new,
+                                   use_cache=backend.plan.use_cache)
+    toks = np.asarray(toks)
+    for j, r in enumerate(group):
+        r.tokens = toks[j]
+    return list(group)

@@ -1,0 +1,231 @@
+"""Plan-side datatypes of the two-phase API: DeploymentSpec in, ExecutionPlan out.
+
+The paper's pipeline is compile-then-run: an analytical cost model (Eq. 1)
+plus a heterogeneous-mapping DSE decide *offline* whether to speculate, with
+which draft length, and where drafter and target live; the runtime then just
+executes that decision. `DeploymentSpec` is the planner's input (models,
+hardware, traffic shape); `ExecutionPlan` is its frozen, JSON-serializable
+output — the single artifact every execution path (`repro.api.Session`)
+consumes. Nothing downstream of the Planner re-derives a decision the plan
+already records.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Optional, Tuple, Union
+
+PLAN_VERSION = 1
+
+STRATEGIES = ("monolithic", "modular")
+BATCHING_MODES = ("single", "per_row", "continuous")
+CACHE_KINDS = ("ring", "paged")
+
+
+# ------------------------------------------------------------------ spec side
+@dataclass(frozen=True)
+class DeploymentSpec:
+    """What the operator knows before compiling a deployment.
+
+    Traffic shape: ``batch_size`` concurrent rows, prompts drawn from
+    ``prompt_lens`` (a representative sample, not a hard bound), per-request
+    decode budgets from ``max_new`` (int = uniform). ``streaming`` means
+    requests keep arriving and finished slots should be refilled
+    (continuous batching) rather than one fixed batch generated to completion.
+
+    Speculation economics: ``alpha`` is the expected acceptance rate
+    (offline-measured or prior); the cost coefficient c = t_draft/t_target
+    comes from ``cost_coefficient`` directly, from measured ``t_draft``/
+    ``t_target``, or — when ``arch`` names a registry architecture — from the
+    analytic roofline (core/analytic_cost.py) at ``shape``/``chips``.
+    """
+    # traffic shape
+    batch_size: int = 1
+    prompt_lens: Tuple[int, ...] = (8,)
+    max_new: Union[int, Tuple[int, ...]] = 32
+    streaming: bool = False
+    latency_target_ms: Optional[float] = None
+
+    # speculation economics
+    alpha: float = 0.8
+    cost_coefficient: Optional[float] = None
+    t_draft: Optional[float] = None
+    t_target: Optional[float] = None
+    gamma_max: int = 8
+    adaptive_gamma: Optional[bool] = None   # None = planner decides
+    alpha_ema: float = 0.9
+
+    # sampling / execution knobs
+    greedy: bool = True
+    temperature: float = 1.0
+    use_cache: bool = True
+    strategy: Optional[str] = None          # None = planner decides
+
+    # hardware / placement (optional roofline + submesh DSE)
+    arch: Optional[str] = None              # configs.registry id
+    shape: str = "decode_32k"               # configs.base.INPUT_SHAPES key
+    chips: int = 1
+    explore_placement: bool = False
+
+    def __post_init__(self):
+        if not self.prompt_lens:
+            raise ValueError("prompt_lens must be non-empty")
+        if self.strategy is not None and self.strategy not in STRATEGIES:
+            raise ValueError(f"strategy must be one of {STRATEGIES}")
+        if isinstance(self.max_new, tuple) and not self.max_new:
+            raise ValueError("max_new tuple must be non-empty")
+
+    # convenience views the planner keys its decisions on
+    @property
+    def max_new_budgets(self) -> Tuple[int, ...]:
+        if isinstance(self.max_new, int):
+            return (self.max_new,)
+        return tuple(self.max_new)
+
+    @property
+    def max_new_cap(self) -> int:
+        return max(self.max_new_budgets)
+
+    @property
+    def ragged(self) -> bool:
+        """Mixed prompt lengths or per-request decode budgets."""
+        return (len(set(self.prompt_lens)) > 1
+                or len(set(self.max_new_budgets)) > 1)
+
+
+# ------------------------------------------------------------------ plan side
+@dataclass(frozen=True)
+class SubmeshSpec:
+    """Serializable mirror of core.partition.Submesh — a partition's mapping."""
+    name: str = "replicated"
+    axes: Tuple[str, ...] = ()
+    sizes: Tuple[int, ...] = ()
+
+    @property
+    def chips(self) -> int:
+        out = 1
+        for s in self.sizes:
+            out *= s
+        return out
+
+
+@dataclass(frozen=True)
+class PlacementPlan:
+    """Where drafter and target live (the DSE's winning mapping)."""
+    drafter: SubmeshSpec = SubmeshSpec()
+    target: SubmeshSpec = SubmeshSpec()
+    explored_variants: int = 1
+    predicted_speedup: float = 1.0
+
+
+@dataclass(frozen=True)
+class GammaSchedule:
+    """The plan's speculation schedule plus its runtime-feedback hook.
+
+    ``gamma == 0`` means the cost model ruled speculation out (c >= alpha or
+    S <= 1): the session runs plain autoregressive decoding. ``adaptive``
+    arms the alpha-EMA re-planning hook (api/feedback.py): the session keeps
+    an online acceptance estimate and re-picks gamma over ``candidates``
+    each round/batch with the same Eq. (1) the planner used offline.
+    """
+    gamma: int = 4
+    adaptive: bool = False
+    candidates: Tuple[int, ...] = ()
+    alpha_ema: float = 0.9
+    alpha_init: float = 0.8
+
+
+@dataclass(frozen=True)
+class CacheLayout:
+    """ring = per-row ring buffers (cache/kv_cache.py); paged = shared block
+    pool (cache/paged_kv.py) with this block geometry."""
+    kind: str = "ring"
+    block_size: int = 8
+    num_blocks: int = 128
+    max_blocks_per_row: int = 16
+    prefill_buckets: Tuple[int, ...] = (8, 16, 32, 64, 128, 256)
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """Frozen output of the Planner; the only input a Session needs besides
+    models and params. Fully JSON round-trippable (tested)."""
+    strategy: str = "monolithic"            # STRATEGIES
+    batching: str = "single"                # BATCHING_MODES
+    cache: CacheLayout = CacheLayout()
+    gamma: GammaSchedule = GammaSchedule()
+    placement: PlacementPlan = PlacementPlan()
+
+    # the economics the decisions were derived from (for audit/re-planning)
+    alpha: float = 0.8
+    cost_coefficient: float = 0.25
+    gamma_max: int = 8
+    predicted_speedup: float = 1.0
+
+    # execution knobs carried through from the spec
+    greedy: bool = True
+    temperature: float = 1.0
+    use_cache: bool = True
+    max_new: int = 32
+
+    rationale: Tuple[str, ...] = ()         # human-readable planner decisions
+    version: int = PLAN_VERSION
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"strategy must be one of {STRATEGIES}")
+        if self.batching not in BATCHING_MODES:
+            raise ValueError(f"batching must be one of {BATCHING_MODES}")
+        if self.cache.kind not in CACHE_KINDS:
+            raise ValueError(f"cache.kind must be one of {CACHE_KINDS}")
+        if self.cache.kind == "paged" and self.batching != "continuous":
+            raise ValueError("paged cache layout requires continuous batching")
+
+    @property
+    def speculative(self) -> bool:
+        return self.gamma.gamma > 0 or (self.gamma.adaptive
+                                        and bool(self.gamma.candidates))
+
+    # -------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExecutionPlan":
+        d = dict(d)
+        version = d.get("version", PLAN_VERSION)
+        if version != PLAN_VERSION:
+            raise ValueError(f"unsupported plan version {version} "
+                             f"(supported: {PLAN_VERSION})")
+        d["cache"] = CacheLayout(**_tupled(d.get("cache", {}),
+                                           ("prefill_buckets",)))
+        d["gamma"] = GammaSchedule(**_tupled(d.get("gamma", {}),
+                                             ("candidates",)))
+        pl = dict(d.get("placement", {}))
+        for part in ("drafter", "target"):
+            pl[part] = SubmeshSpec(**_tupled(pl.get(part, {}),
+                                             ("axes", "sizes")))
+        d["placement"] = PlacementPlan(**pl)
+        d["rationale"] = tuple(d.get("rationale", ()))
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ExecutionPlan fields: {sorted(unknown)}")
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExecutionPlan":
+        return cls.from_dict(json.loads(s))
+
+
+def _tupled(d: dict, keys: Tuple[str, ...]) -> dict:
+    """JSON turns tuples into lists; restore the tuple-typed fields."""
+    out = dict(d)
+    for k in keys:
+        if k in out:
+            out[k] = tuple(out[k])
+    return out

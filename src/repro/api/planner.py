@@ -1,0 +1,226 @@
+"""Phase one of the two-phase API: DeploymentSpec -> frozen ExecutionPlan.
+
+This is where the paper's compile-time decisions live, in order:
+
+  ② cost coefficient  — explicit > measured t_draft/t_target > analytic
+    roofline (core/analytic_cost.py + cost_model.roofline_terms) when the
+    spec names a registry architecture;
+  ③ placement         — the §III-B submesh DSE (core/partition.py) when
+    exploration is requested, scored with the same roofline times;
+  ④ whether/how much to speculate — Eq. (1): gamma* over 0..gamma_max
+    (gamma*=0 = serve autoregressively);
+  ⑤ execution shape   — batching mode, cache layout + block geometry, and
+    compilation strategy from the traffic shape.
+
+The emitted ExecutionPlan is the system's control plane: Sessions execute
+it verbatim, and its GammaSchedule carries the runtime-feedback hook that
+re-runs decision ④ online (api/feedback.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Optional, Sequence
+
+from repro.core import cost_model
+from repro.core.partition import DesignSpace, Submesh
+from repro.api.plan import (CacheLayout, DeploymentSpec, ExecutionPlan,
+                            GammaSchedule, PlacementPlan, SubmeshSpec)
+
+DEFAULT_COST_COEFFICIENT = 0.25   # matches serving.SchedulerConfig's prior
+
+
+def _roofline_step_time(cfg, shape, chips: int) -> float:
+    from repro.core import analytic_cost
+    sc = analytic_cost.step_cost(cfg, shape, chips=chips)
+    return cost_model.roofline_terms(sc.flops, sc.hbm_bytes,
+                                     sc.collective_bytes, chips).step_time
+
+
+class Planner:
+    """Consumes a DeploymentSpec, runs cost model + DSE, emits ExecutionPlan."""
+
+    def __init__(self, spec: DeploymentSpec):
+        self.spec = spec
+        self._notes: List[str] = []
+
+    # ------------------------------------------------------------ decisions
+    def resolve_cost_coefficient(self) -> float:
+        """Decision ②: c = t_draft / t_target by the best available evidence."""
+        s = self.spec
+        if s.cost_coefficient is not None:
+            self._notes.append(f"c={s.cost_coefficient:.4f} (given)")
+            return float(s.cost_coefficient)
+        if s.t_draft is not None and s.t_target is not None:
+            c = cost_model.cost_coefficient(s.t_draft, s.t_target)
+            self._notes.append(f"c={c:.4f} (measured step times)")
+            return c
+        if s.arch is not None:
+            from repro.configs import registry
+            from repro.configs.base import INPUT_SHAPES
+            shape = INPUT_SHAPES[s.shape]
+            tt = _roofline_step_time(registry.config(s.arch), shape, s.chips)
+            td = _roofline_step_time(registry.drafter_config(s.arch), shape,
+                                     s.chips)
+            c = cost_model.cost_coefficient(td, tt)
+            self._notes.append(
+                f"c={c:.4f} (roofline {s.arch}@{s.shape} on {s.chips} chips)")
+            return c
+        self._notes.append(f"c={DEFAULT_COST_COEFFICIENT} (default prior)")
+        return DEFAULT_COST_COEFFICIENT
+
+    def explore_placement(self, c: float,
+                          drafter_options: Optional[Sequence[Submesh]] = None,
+                          target_options: Optional[Sequence[Submesh]] = None,
+                          t_draft_fn: Optional[Callable] = None,
+                          t_target_fn: Optional[Callable] = None
+                          ) -> PlacementPlan:
+        """Decision ③: submesh DSE. Step times scale with submesh chips via
+        the roofline (arch known) or ideal 1/chips scaling from the unit c."""
+        s = self.spec
+        if not s.explore_placement:
+            return PlacementPlan(predicted_speedup=1.0)
+        from repro.core import partition
+        d_opts = list(drafter_options or partition.default_drafter_options())
+        t_opts = list(target_options or partition.default_target_options())
+        if t_draft_fn is None or t_target_fn is None:
+            if s.arch is not None:
+                from repro.configs import registry
+                from repro.configs.base import INPUT_SHAPES
+                shape = INPUT_SHAPES[s.shape]
+                cfg_t, cfg_d = registry.config(s.arch), registry.drafter_config(s.arch)
+                t_target_fn = lambda sub: _roofline_step_time(
+                    cfg_t, shape, max(sub.chips, 1))
+                t_draft_fn = lambda sub: _roofline_step_time(
+                    cfg_d, shape, max(sub.chips, 1))
+            else:
+                # unitless: t_target=1 on one chip, drafter = c, ideal scaling
+                t_target_fn = lambda sub: 1.0 / max(sub.chips, 1)
+                t_draft_fn = lambda sub: c / max(sub.chips, 1)
+        space = DesignSpace(d_opts, t_opts)
+        best = space.best(s.alpha, t_draft_fn, t_target_fn,
+                          gamma_max=s.gamma_max)
+        self._notes.append(
+            f"placement: drafter@{best.mapping.drafter.name} "
+            f"target@{best.mapping.target.name} "
+            f"({len(space.mappings())} variants explored, "
+            f"S={best.speedup:.2f})")
+        def mirror(sub: Submesh) -> SubmeshSpec:
+            return SubmeshSpec(sub.name, tuple(sub.axes), tuple(sub.sizes))
+        return PlacementPlan(drafter=mirror(best.mapping.drafter),
+                             target=mirror(best.mapping.target),
+                             explored_variants=len(space.mappings()),
+                             predicted_speedup=best.speedup)
+
+    def choose_gamma(self, c: float, paged: bool = False) -> GammaSchedule:
+        """Decision ④: Eq. (1) gamma* (0 = AR) + the runtime-feedback hook."""
+        s = self.spec
+        gamma, speedup = cost_model.optimal_gamma(s.alpha, c, s.gamma_max)
+        if gamma == 0:
+            self._notes.append(
+                f"gamma*=0: speculation infeasible at alpha={s.alpha} "
+                f"c={c:.3f} (need c < alpha) — plan serves autoregressive")
+        else:
+            self._notes.append(f"gamma*={gamma} (predicted S={speedup:.2f} "
+                               f"at alpha={s.alpha}, c={c:.3f})")
+        adaptive = s.adaptive_gamma
+        if adaptive is None:
+            # streaming deployments see enough rounds for telemetry to beat
+            # the prior; one-shot generation keeps the offline gamma
+            adaptive = s.streaming
+        if gamma == 0 and not paged:
+            # a gamma*=0 plan must actually serve AR: only the paged
+            # scheduler can flip AR<->spec online, so everywhere else
+            # adaptive candidates would override the infeasibility verdict
+            adaptive = False
+        candidates = ()
+        if adaptive:
+            lo = [g for g in (1, 2) if g < max(gamma, 1)]
+            hi = [g for g in (max(gamma, 1), min(max(gamma, 1) * 2, s.gamma_max))]
+            candidates = tuple(sorted(set(lo + hi)))
+            self._notes.append(f"adaptive gamma over {candidates} "
+                               f"(alpha-EMA re-planning)")
+        return GammaSchedule(gamma=gamma, adaptive=bool(adaptive),
+                             candidates=candidates, alpha_ema=s.alpha_ema,
+                             alpha_init=s.alpha)
+
+    def choose_batching(self) -> str:
+        s = self.spec
+        if s.streaming or (s.ragged and s.batch_size > 1):
+            mode = "continuous"
+        elif s.batch_size > 1:
+            mode = "per_row"
+        else:
+            mode = "single"
+        self._notes.append(
+            f"batching={mode} (B={s.batch_size}, "
+            f"{'ragged' if s.ragged else 'uniform'} traffic, "
+            f"streaming={s.streaming})")
+        return mode
+
+    def choose_cache(self, batching: str, gamma_max: int) -> CacheLayout:
+        """Decision ⑤b: ragged continuous traffic gets the paged block pool;
+        everything else keeps per-row ring buffers. Geometry is sized so the
+        worst-case request fits a row and the pool holds a full batch with
+        one spare row of headroom."""
+        s = self.spec
+        if batching != "continuous" or not s.ragged:
+            self._notes.append("cache=ring")
+            return CacheLayout(kind="ring")
+        demand = max(s.prompt_lens) + s.max_new_cap + gamma_max + 1
+        block = 8
+        blocks_per_row = max(2, math.ceil(demand / block) + 1)
+        num_blocks = blocks_per_row * (s.batch_size + 1) + 1  # +1: null block
+        maxp = max(s.prompt_lens)
+        buckets, b = [], 8
+        while b < maxp:
+            buckets.append(b)
+            b *= 2
+        buckets.append(b)                    # first power of two >= maxp
+        buckets = tuple(buckets)
+        self._notes.append(
+            f"cache=paged (block={block}, {blocks_per_row} blocks/row, "
+            f"pool={num_blocks} blocks for worst-case demand {demand})")
+        return CacheLayout(kind="paged", block_size=block,
+                           num_blocks=num_blocks,
+                           max_blocks_per_row=blocks_per_row,
+                           prefill_buckets=buckets)
+
+    def choose_strategy(self, batching: str, gamma: GammaSchedule) -> str:
+        s = self.spec
+        if s.strategy is not None:
+            self._notes.append(f"strategy={s.strategy} (given)")
+            return s.strategy
+        # per-row/continuous rounds and adaptive gamma both need the host
+        # between compiled modules; only fixed-gamma single-stream generation
+        # benefits from the one-XLA-program design (paper Fig. 3)
+        strategy = ("monolithic"
+                    if batching == "single" and not gamma.adaptive
+                    else "modular")
+        self._notes.append(f"strategy={strategy}")
+        return strategy
+
+    # ----------------------------------------------------------------- plan
+    def plan(self) -> ExecutionPlan:
+        s = self.spec
+        self._notes = []
+        c = self.resolve_cost_coefficient()
+        placement = self.explore_placement(c)
+        batching = self.choose_batching()
+        cache = self.choose_cache(batching, s.gamma_max)
+        gamma = self.choose_gamma(c, paged=cache.kind == "paged")
+        strategy = self.choose_strategy(batching, gamma)
+        predicted = cost_model.speedup(s.alpha, gamma.gamma, c) \
+            if gamma.gamma > 0 else 1.0
+        if placement.predicted_speedup > 1.0:
+            predicted = max(predicted, placement.predicted_speedup)
+        return ExecutionPlan(
+            strategy=strategy, batching=batching, cache=cache, gamma=gamma,
+            placement=placement, alpha=s.alpha, cost_coefficient=c,
+            gamma_max=s.gamma_max, predicted_speedup=predicted,
+            greedy=s.greedy, temperature=s.temperature, use_cache=s.use_cache,
+            max_new=s.max_new_cap, rationale=tuple(self._notes))
+
+
+def plan(spec: DeploymentSpec) -> ExecutionPlan:
+    """One-call convenience: ``repro.api.plan_deployment(spec)``."""
+    return Planner(spec).plan()

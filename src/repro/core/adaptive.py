@@ -11,6 +11,12 @@ cannot do this without baking every gamma into one program.
 
 This is exactly the kind of runtime speculation-control the paper's §V
 "future work (2): other SD techniques" gestures at.
+
+DEPRECATED SHIM: the gamma-adaptation logic now lives in the plan's
+runtime-feedback hook (repro.api.feedback.GammaController), which the
+Session facade drives identically for every backend. This engine remains as
+a thin wrapper for one release; new code should plan with
+``DeploymentSpec(adaptive_gamma=True)`` and run through ``repro.api.Session``.
 """
 from __future__ import annotations
 
@@ -20,7 +26,6 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import cost_model
 from repro.core.engine import EngineConfig, GenState, SpecEngine
 
 
@@ -48,12 +53,8 @@ class AdaptiveSpecEngine:
         }
 
     def pick_gamma(self, alpha_hat: float) -> int:
-        best_g, best_s = self.acfg.gammas[0], -1.0
-        for g in self.acfg.gammas:
-            s = cost_model.speedup(min(max(alpha_hat, 1e-3), 0.999), g, self.acfg.c)
-            if s > best_s:
-                best_g, best_s = g, s
-        return best_g
+        from repro.api.feedback import best_gamma
+        return best_gamma(self.acfg.gammas, alpha_hat, self.acfg.c)
 
     def generate(self, params_t, params_d, prompt, max_new_tokens, key=None,
                  extras_t=None, extras_d=None):
@@ -66,7 +67,8 @@ class AdaptiveSpecEngine:
         state = eng0.prefill(params_t, params_d, prompt, max_len,
                              extras_t, extras_d, key)
         target_len = P + max_new_tokens
-        alpha_hat = a.alpha_init
+        from repro.api.feedback import AlphaEma
+        tracker = AlphaEma(ema=a.alpha_ema, value=a.alpha_init)
         gamma_trace = []
         for eng in self.engines.values():
             if eng._round_jit is None:
@@ -74,14 +76,12 @@ class AdaptiveSpecEngine:
                 eng._round_jit = jax.jit(lambda pt, pd, s, f=fn: f(pt, pd, s))
 
         while int(state.length) < target_len:
-            g = self.pick_gamma(alpha_hat)
+            g = self.pick_gamma(tracker.get(a.alpha_init))
             gamma_trace.append(g)
             before_acc, before_drafted = int(state.n_accepted), int(state.n_drafted)
             state = self.engines[g]._round_jit(params_t, params_d, state)
-            d_acc = int(state.n_accepted) - before_acc
-            d_drafted = int(state.n_drafted) - before_drafted
-            alpha_round = d_acc / max(d_drafted, 1)
-            alpha_hat = a.alpha_ema * alpha_hat + (1 - a.alpha_ema) * alpha_round
+            tracker.observe(int(state.n_accepted) - before_acc,
+                            int(state.n_drafted) - before_drafted)
 
         stats = {
             "rounds": int(state.n_rounds),

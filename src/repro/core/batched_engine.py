@@ -21,7 +21,7 @@ greedy continuation, regardless of what other rows do.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +44,8 @@ class RowState(NamedTuple):
     tcache: Any
     n_accepted: jnp.ndarray  # [B]
     n_rounds: jnp.ndarray    # scalar
-    active: jnp.ndarray = None  # [B] bool — frozen rows commit nothing
+    active: Optional[jnp.ndarray] = None  # [B] bool — frozen rows commit
+                                          # nothing; None = all rows live
 
 
 def _gather_last(tokens, length):

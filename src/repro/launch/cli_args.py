@@ -1,0 +1,61 @@
+"""Shared CLI flag parsing for the serving drivers.
+
+launch/serve.py, launch/serve_paged.py, and launch/continuous.py all need the
+same ``--arch/--smoke`` model selection and synthetic-traffic knobs; the
+copies had drifted. One parser-builder and one model-pair loader live here.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Tuple
+
+
+def add_model_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    ap.add_argument("--arch", required=True,
+                    help="configs.registry architecture id")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CPU-sized configs")
+    return ap
+
+
+def add_traffic_args(ap: argparse.ArgumentParser, *, requests: int = 8,
+                     prompt_len: int = 8, max_new: int = 24
+                     ) -> argparse.ArgumentParser:
+    ap.add_argument("--requests", type=int, default=requests)
+    ap.add_argument("--prompt-len", type=int, default=prompt_len)
+    ap.add_argument("--max-new", type=int, default=max_new)
+    return ap
+
+
+def add_spec_args(ap: argparse.ArgumentParser, *, gamma: int = None
+                  ) -> argparse.ArgumentParser:
+    ap.add_argument("--gamma", type=int, default=gamma,
+                    help="draft length (default: the planner's cost-model "
+                         "decision)")
+    ap.add_argument("--alpha", type=float, default=0.8,
+                    help="expected acceptance rate fed to the planner")
+    ap.add_argument("--cost-coefficient", type=float, default=None,
+                    help="c = t_draft/t_target fed to the gamma decision")
+    return ap
+
+
+def build_pair(arch: str, smoke: bool) -> Tuple[object, object, dict, dict, object]:
+    """(target, drafter, params_t, params_d, cfg_t) for a registry arch.
+
+    Smoke mode derives the drafter by shrinking the target one layer — the
+    same-family pairing every driver used; full mode uses the registered
+    drafter config.
+    """
+    import jax
+
+    from repro.configs import registry
+    from repro.models.model import build_model
+
+    mod = registry.get(arch)
+    cfg_t = mod.smoke_config() if smoke else mod.config()
+    cfg_d = (cfg_t.replace(num_layers=max(1, cfg_t.num_layers - 1), name="draft")
+             if smoke else mod.drafter_config())
+    mt, md = build_model(cfg_t), build_model(cfg_d)
+    pt = mt.init(jax.random.PRNGKey(0))
+    pd = md.init(jax.random.PRNGKey(7))
+    return mt, md, pt, pd, cfg_t

@@ -12,6 +12,10 @@ instance (fixed XLA shapes); greedy acceptance. The paged successor
 (repro.serving.PagedSpecServer) removes the uniform-shape constraint via
 block-pool KV storage — prefer it for ragged traffic; this server remains
 the minimal fixed-shape reference (see docs/DESIGN.md §4).
+
+``python -m repro.launch.continuous --arch <id> --smoke`` drives it through
+the ``repro.api.Session`` facade on a uniform synthetic stream; constructing
+ContinuousSpecServer directly is deprecated (migration: docs/API.md).
 """
 from __future__ import annotations
 
@@ -39,9 +43,12 @@ class StreamRequest:
 class ContinuousSpecServer:
     def __init__(self, target, drafter, params_t, params_d, *,
                  batch: int = 4, prompt_len: int = 12, max_new: int = 24,
-                 gamma: int = 4):
-        self.engine = BatchedSpecEngine(target, drafter,
-                                        BatchedEngineConfig(gamma=gamma))
+                 gamma: int = 4, engine: Optional[BatchedSpecEngine] = None):
+        """``engine`` lets callers share one (jit-cached) engine across
+        server instances; it must have been built with the same gamma."""
+        assert engine is None or engine.ecfg.gamma == gamma
+        self.engine = engine or BatchedSpecEngine(target, drafter,
+                                                  BatchedEngineConfig(gamma=gamma))
         self.params_t, self.params_d = params_t, params_d
         self.B, self.P, self.max_new, self.gamma = batch, prompt_len, max_new, gamma
         self.max_len = prompt_len + max_new + gamma + 2
@@ -51,6 +58,8 @@ class ContinuousSpecServer:
         self._state: Optional[RowState] = None
         self._prefill_jit = None
         self._insert_jit = None
+        self.n_accepted_total = 0     # accepted draft tokens across rounds
+        self.n_drafted_total = 0      # drafted tokens across rounds
 
     # ------------------------------------------------------------ plumbing
     def _prefill_one(self, prompt):
@@ -137,9 +146,15 @@ class ContinuousSpecServer:
         target_len = self.P + self.max_new
         n_rounds = 0
         while any(r is not None and r.rid >= 0 for r in self._slots):
+            prev_len = np.asarray(self._state.length)
+            prev_active = np.asarray(self._state.active)
             self._state = eng._round_jit(self.params_t, self.params_d, self._state)
             n_rounds += 1
             lengths = np.asarray(self._state.length)
+            # acceptance telemetry: each active row emits n_accepted+1 tokens
+            emitted = (lengths - prev_len)[prev_active]
+            self.n_accepted_total += int(np.maximum(emitted - 1, 0).sum())
+            self.n_drafted_total += int(prev_active.sum()) * self.gamma
             for b in range(self.B):
                 req = self._slots[b]
                 if req is None or req.rid < 0:
@@ -160,3 +175,50 @@ class ContinuousSpecServer:
                         self._slots[b] = StreamRequest(-1, req.prompt)
         self.total_rounds = n_rounds
         return self.done
+
+
+def main():
+    import argparse
+
+    from repro.api import DeploymentSpec, Planner, Session
+    from repro.launch import cli_args
+
+    ap = argparse.ArgumentParser()
+    cli_args.add_model_args(ap)
+    cli_args.add_traffic_args(ap)
+    cli_args.add_spec_args(ap)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="live slots in the continuous batch")
+    args = ap.parse_args()
+
+    mt, md, pt, pd, cfg_t = cli_args.build_pair(args.arch, args.smoke)
+    spec = DeploymentSpec(batch_size=args.batch,
+                          prompt_lens=(args.prompt_len,),
+                          max_new=args.max_new, streaming=True,
+                          alpha=args.alpha,
+                          cost_coefficient=args.cost_coefficient,
+                          adaptive_gamma=False)
+    plan = Planner(spec).plan()
+    if args.gamma is not None:          # --gamma trumps the planner
+        import dataclasses as _dc
+        plan = _dc.replace(plan,
+                           gamma=_dc.replace(plan.gamma, gamma=args.gamma))
+    gamma = plan.gamma.gamma
+    sess = Session(mt, md, pt, pd, plan, max_batch=args.batch)
+
+    rng = np.random.default_rng(0)
+    reqs = [sess.request(rng.integers(0, cfg_t.vocab_size, args.prompt_len),
+                         args.max_new, rid=i) for i in range(args.requests)]
+    t0 = time.time()
+    done = sess.serve(reqs)
+    dt = time.time() - t0
+    total = sum(len(r.tokens) - r.prompt_len for r in done)
+    print(f"continuous-served {len(done)} requests, {total} tokens in "
+          f"{dt:.2f}s ({total / dt:.1f} tok/s aggregate, gamma={gamma}"
+          f"{' [forced]' if args.gamma is not None else ' [cost-model]'}, "
+          f"B={args.batch}, backend={sess.backend_name})")
+
+
+if __name__ == "__main__":
+    main()
+

@@ -3,10 +3,15 @@
 ``python -m repro.launch.serve --arch <id> --smoke --speculative`` serves a
 stream of synthetic requests on CPU with the reduced configs; on hardware the
 same loop runs the full configs with the DSE-selected drafter placement.
+
+The driver plans with ``repro.api.Planner`` and executes through the
+``Session`` facade; the ``Server`` class below is the legacy fixed-batch
+wrapper, kept as a deprecated shim for one release (migration: docs/API.md).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -16,9 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import registry
-from repro.core.engine import EngineConfig, SpecEngine, autoregressive_generate
-from repro.models.model import build_model
+from repro.core.engine import EngineConfig, SpecEngine
+from repro.launch import cli_args
 
 
 @dataclass
@@ -33,7 +37,9 @@ class Request:
 
 
 class Server:
-    """Batches compatible requests and drives the engine round-robin."""
+    """DEPRECATED shim: batches compatible requests and drives SpecEngine
+    round-robin. Use ``repro.api.Session.serve`` instead — the facade runs
+    the same grouping loop for single/per-row plans."""
 
     def __init__(self, target, drafter, params_t, params_d, ecfg: EngineConfig,
                  max_batch: int = 8):
@@ -81,57 +87,71 @@ class Server:
 
 
 def main():
+    from repro.api import DeploymentSpec, Planner, Session
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
+    cli_args.add_model_args(ap)
+    cli_args.add_traffic_args(ap)
+    cli_args.add_spec_args(ap)
     ap.add_argument("--speculative", action="store_true")
-    ap.add_argument("--gamma", type=int, default=4)
     ap.add_argument("--use-cache", action="store_true")
     ap.add_argument("--strategy", default="monolithic")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=8)
     args = ap.parse_args()
 
-    mod = registry.get(args.arch)
-    cfg_t = mod.smoke_config() if args.smoke else mod.config()
-    cfg_d = (cfg_t.replace(num_layers=max(1, cfg_t.num_layers - 1), name="draft")
-             if args.smoke else mod.drafter_config())
-    mt, md = build_model(cfg_t), build_model(cfg_d)
-    pt = mt.init(jax.random.PRNGKey(0))
-    pd = md.init(jax.random.PRNGKey(7))
-
-    ecfg = EngineConfig(gamma=args.gamma if args.speculative else 0,
-                        greedy=True, use_cache=args.use_cache,
-                        strategy=args.strategy)
+    mt, md, pt, pd, cfg_t = cli_args.build_pair(args.arch, args.smoke)
     rng = np.random.default_rng(0)
-    server = Server(mt, md, pt, pd, ecfg)
+
+    spec = DeploymentSpec(batch_size=args.batch,
+                          prompt_lens=(args.prompt_len,),
+                          max_new=args.max_new, alpha=args.alpha,
+                          cost_coefficient=args.cost_coefficient,
+                          adaptive_gamma=False, use_cache=args.use_cache,
+                          strategy=args.strategy)
+    plan = Planner(spec).plan()
+    # CLI overrides trump the planner: --gamma forces the draft length and
+    # omitting --speculative forces the AR path (gamma 0); with neither,
+    # the planner's Eq.-1 decision stands
+    if not args.speculative:
+        forced = 0
+    elif args.gamma is not None:
+        forced = args.gamma
+    else:
+        forced = plan.gamma.gamma
+    plan = dataclasses.replace(
+        plan, gamma=dataclasses.replace(plan.gamma, gamma=forced))
+    sess = Session(mt, md, pt, pd, plan, max_batch=args.batch)
 
     if not args.speculative:
-        # plain autoregressive serving baseline
+        # plain autoregressive serving baseline (one fixed batch)
         prompts = rng.integers(0, cfg_t.vocab_size,
                                (args.requests, args.prompt_len))
         t0 = time.time()
-        out = autoregressive_generate(mt, pt, jnp.asarray(prompts), args.max_new)
+        jax.block_until_ready(
+            sess.generate(jnp.asarray(prompts), args.max_new)[0])
         dt = time.time() - t0
         print(f"AR served {args.requests} x {args.max_new} tokens in {dt:.2f}s "
               f"({args.requests*args.max_new/dt:.1f} tok/s)")
         return
 
-    for i in range(args.requests):
-        server.submit(Request(i, rng.integers(0, cfg_t.vocab_size,
-                                              args.prompt_len), args.max_new))
+    reqs = [sess.request(rng.integers(0, cfg_t.vocab_size, args.prompt_len),
+                         args.max_new, rid=i) for i in range(args.requests)]
+    # serve wave-by-wave so per-request latency (submit -> completion) is real
     t0 = time.time()
-    done = server.run()
+    done, latencies = [], []
+    for i in range(0, len(reqs), args.batch):
+        out = sess.serve(reqs[i:i + args.batch])
+        latencies += [time.time() - t0] * len(out)
+        done += out
     dt = time.time() - t0
-    total = sum(r.stats.get("tokens_generated", 0) for r in done)
-    latencies = [r.completed - r.submitted for r in done]
-    alpha = done[0].stats.get("alpha_hat", float("nan"))
+    total = sum(len(r.tokens) - r.prompt_len for r in done)
+    alpha = sess.alpha_hat
     print(f"speculative served {len(done)} requests, {total} tokens in "
-          f"{dt:.2f}s ({total / dt:.1f} tok/s aggregate, mean latency "
-          f"{np.mean(latencies) * 1e3:.0f}ms, alpha_hat={alpha:.2f}, "
-          f"gamma={args.gamma}, strategy={args.strategy}, "
-          f"cache={args.use_cache})")
+          f"{dt:.2f}s ({total / dt:.1f} tok/s aggregate, "
+          f"mean latency {np.mean(latencies) * 1e3:.0f}ms, "
+          f"alpha_hat={float('nan') if alpha is None else alpha:.2f}, "
+          f"gamma={forced}, strategy={plan.strategy}, "
+          f"cache={args.use_cache}, backend={sess.backend_name})")
 
 
 if __name__ == "__main__":

@@ -2,21 +2,22 @@
 
 ``python -m repro.launch.serve_paged --arch <id> --smoke`` serves a stream
 of synthetic requests with MIXED prompt lengths and per-request decode
-budgets — the traffic shape launch/serve.py cannot batch — on the paged
-KV-cache + scheduler subsystem (repro.serving). The scheduler's cost-model
-gamma/AR decision is reported alongside the telemetry summary.
+budgets — the traffic shape launch/serve.py cannot batch. The driver plans
+with ``repro.api.Planner`` (which picks the paged block-pool layout for
+ragged continuous traffic) and executes through the ``Session`` facade; the
+scheduler's online cost-model gamma/AR decision is the plan's
+runtime-feedback hook.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import registry
-from repro.models.model import build_model
-from repro.serving import PagedSpecServer, SchedulerConfig, ServeRequest
+from repro.launch import cli_args
+from repro.serving import ServeRequest
 
 
 def synthetic_requests(rng, n, vocab, prompt_lens=(4, 18), max_news=(4, 24)):
@@ -29,40 +30,50 @@ def synthetic_requests(rng, n, vocab, prompt_lens=(4, 18), max_news=(4, 24)):
 
 
 def main():
+    from repro.api import DeploymentSpec, Planner, Session
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
+    cli_args.add_model_args(ap)
+    cli_args.add_traffic_args(ap)
+    cli_args.add_spec_args(ap, gamma=None)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--num-blocks", type=int, default=256)
     ap.add_argument("--max-blocks-per-row", type=int, default=16)
-    ap.add_argument("--gamma", type=int, default=None,
-                    help="override the scheduler's cost-model decision")
-    ap.add_argument("--cost-coefficient", type=float, default=None,
-                    help="c = t_draft/t_target fed to the gamma decision")
     args = ap.parse_args()
 
-    mod = registry.get(args.arch)
-    cfg_t = mod.smoke_config() if args.smoke else mod.config()
-    cfg_d = (cfg_t.replace(num_layers=max(1, cfg_t.num_layers - 1), name="draft")
-             if args.smoke else mod.drafter_config())
-    mt, md = build_model(cfg_t), build_model(cfg_d)
-    pt = mt.init(jax.random.PRNGKey(0))
-    pd = md.init(jax.random.PRNGKey(7))
-
-    scfg = SchedulerConfig(max_batch=args.batch, block_size=args.block_size,
-                           num_blocks=args.num_blocks,
-                           max_blocks_per_row=args.max_blocks_per_row)
-    srv = PagedSpecServer(mt, md, pt, pd, scfg, gamma=args.gamma,
-                          cost_coefficient=args.cost_coefficient)
+    mt, md, pt, pd, cfg_t = cli_args.build_pair(args.arch, args.smoke)
     rng = np.random.default_rng(0)
-    for r in synthetic_requests(rng, args.requests, cfg_t.vocab_size):
-        srv.submit(r)
+    reqs = synthetic_requests(rng, args.requests, cfg_t.vocab_size)
+
+    spec = DeploymentSpec(
+        batch_size=args.batch,
+        prompt_lens=tuple(r.prompt_len for r in reqs),
+        max_new=tuple(r.max_new for r in reqs),
+        streaming=True, alpha=args.alpha,
+        cost_coefficient=args.cost_coefficient,
+        adaptive_gamma=args.gamma is None)
+    plan = Planner(spec).plan()
+    # CLI block geometry trumps the planner's sizing; --gamma forces a fixed
+    # draft length (adaptive_gamma=False above disables the online decision)
+    plan = dataclasses.replace(
+        plan, batching="continuous",       # paged even if the sample traffic
+        cache=dataclasses.replace(plan.cache, kind="paged",  # looked uniform
+                                  block_size=args.block_size,
+                                  num_blocks=args.num_blocks,
+                                  max_blocks_per_row=args.max_blocks_per_row),
+        gamma=(plan.gamma if args.gamma is None else
+               dataclasses.replace(plan.gamma, gamma=args.gamma)))
+    sess = Session(mt, md, pt, pd, plan, max_batch=args.batch)
+    if sess.backend_name != "paged":
+        raise SystemExit(
+            f"--arch {args.arch} (family {mt.family!r}) cannot take the paged "
+            f"backend (KV-cache families only) — use repro.launch.serve")
 
     t0 = time.time()
-    done = srv.run()
+    done = sess.serve(reqs)
     dt = time.time() - t0
+    srv = sess.backend.server
     s = srv.metrics.summary()
     total = s["total_generated_tokens"]
     alpha = s["alpha_hat"]

@@ -1,0 +1,304 @@
+"""The two-phase repro.api facade: plan correctness and facade/legacy parity.
+
+Three contracts:
+  (a) the Planner's gamma/AR decision reproduces the serving scheduler's
+      cost-model decision at matched (alpha, c) inputs — one control plane,
+      not two;
+  (b) ExecutionPlan is a frozen artifact: JSON round-trip is lossless;
+  (c) Session output on every backend is token-identical to the legacy
+      entry point it replaced (SpecEngine, BatchedSpecEngine,
+      ContinuousSpecServer, PagedSpecServer, AR fallback).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (DeploymentSpec, ExecutionPlan, GammaController,
+                       Planner, Session)
+from repro.cache.paged_kv import BlockAllocator
+from repro.configs import registry
+from repro.core import cost_model
+from repro.core.batched_engine import BatchedEngineConfig, BatchedSpecEngine
+from repro.core.engine import EngineConfig, SpecEngine, autoregressive_generate
+from repro.launch.continuous import ContinuousSpecServer, StreamRequest
+from repro.models.model import build_model
+from repro.serving import (PagedSpecServer, Scheduler, SchedulerConfig,
+                           ServeRequest)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    cfg_t = registry.smoke_config("llama3.2-1b")
+    cfg_d = cfg_t.replace(num_layers=max(1, cfg_t.num_layers - 1), name="draft")
+    mt, md = build_model(cfg_t), build_model(cfg_d)
+    return (mt, md, mt.init(jax.random.PRNGKey(0)),
+            md.init(jax.random.PRNGKey(7)), cfg_t)
+
+
+# ------------------------------------------------- (a) one gamma control plane
+@pytest.mark.parametrize("alpha,c", [(0.8, 0.2), (0.6, 0.4), (0.9, 0.05),
+                                     (0.5, 0.9), (0.3, 0.35)])
+def test_planner_reproduces_scheduler_gamma_decision(alpha, c):
+    scfg = SchedulerConfig(gamma_max=8)
+    sched = Scheduler(scfg, BlockAllocator(scfg.num_blocks, scfg.block_size,
+                                           scfg.max_blocks_per_row,
+                                           scfg.max_batch))
+    g_sched, s_sched = sched.choose_gamma(alpha=alpha, c=c)
+    plan = Planner(DeploymentSpec(alpha=alpha, cost_coefficient=c,
+                                  gamma_max=8, adaptive_gamma=False)).plan()
+    assert plan.gamma.gamma == g_sched
+    assert plan.predicted_speedup == pytest.approx(s_sched)
+    # gamma*=0 (infeasible) must plan the AR path, never a speculative one
+    if not cost_model.feasible(alpha, c):
+        assert plan.gamma.gamma == 0 and not plan.speculative
+
+
+def test_planner_gamma_is_cost_model_argmax():
+    plan = Planner(DeploymentSpec(alpha=0.75, cost_coefficient=0.15,
+                                  gamma_max=12)).plan()
+    assert (plan.gamma.gamma, plan.predicted_speedup) == \
+        pytest.approx(cost_model.optimal_gamma(0.75, 0.15, 12))
+
+
+def test_adaptive_controller_rejoins_cost_model():
+    plan = Planner(DeploymentSpec(alpha=0.8, cost_coefficient=0.2,
+                                  adaptive_gamma=True)).plan()
+    assert plan.gamma.adaptive and plan.gamma.candidates
+    ctl = GammaController(plan.gamma, plan.cost_coefficient)
+    # before any observation: the argmax at the planning alpha
+    g0 = ctl.gamma()
+    assert g0 == max(plan.gamma.candidates,
+                     key=lambda g: cost_model.speedup(0.8, g, 0.2))
+    # collapse the measured alpha -> smallest candidate wins
+    for _ in range(40):
+        ctl.observe(0, g0)
+    assert ctl.gamma() == min(plan.gamma.candidates)
+
+
+# --------------------------------------------------- (b) frozen-plan artifact
+def _specs():
+    return [
+        DeploymentSpec(),
+        DeploymentSpec(batch_size=1, prompt_lens=(8,), max_new=16,
+                       cost_coefficient=0.2),
+        DeploymentSpec(batch_size=4, prompt_lens=(6,), max_new=12,
+                       streaming=True, adaptive_gamma=False),
+        DeploymentSpec(batch_size=3, prompt_lens=(5, 9, 13), max_new=(4, 12),
+                       streaming=True, cost_coefficient=0.25),
+        DeploymentSpec(cost_coefficient=1.5),              # AR fallback
+        DeploymentSpec(explore_placement=True, cost_coefficient=0.1),
+    ]
+
+
+@pytest.mark.parametrize("i", range(len(_specs())))
+def test_execution_plan_json_roundtrip(i):
+    plan = Planner(_specs()[i]).plan()
+    restored = ExecutionPlan.from_json(plan.to_json())
+    assert restored == plan
+    # tuple-typed fields must come back as tuples, not JSON lists
+    assert isinstance(restored.gamma.candidates, tuple)
+    assert isinstance(restored.cache.prefill_buckets, tuple)
+    assert isinstance(restored.placement.drafter.axes, tuple)
+
+
+def test_execution_plan_rejects_bad_input():
+    plan = Planner(DeploymentSpec()).plan()
+    with pytest.raises(ValueError, match="version"):
+        ExecutionPlan.from_dict({**plan.to_dict(), "version": 99})
+    with pytest.raises(ValueError, match="unknown"):
+        ExecutionPlan.from_dict({**plan.to_dict(), "bogus": 1})
+    with pytest.raises(ValueError, match="continuous"):
+        dataclasses.replace(plan, cache=dataclasses.replace(
+            plan.cache, kind="paged"))
+
+
+def test_planner_shapes_traffic_into_batching_and_cache():
+    single = Planner(DeploymentSpec(batch_size=1, cost_coefficient=0.2,
+                                    adaptive_gamma=False)).plan()
+    assert (single.batching, single.strategy) == ("single", "monolithic")
+    perrow = Planner(DeploymentSpec(batch_size=4, cost_coefficient=0.2)).plan()
+    assert (perrow.batching, perrow.cache.kind) == ("per_row", "ring")
+    cont = Planner(DeploymentSpec(batch_size=4, streaming=True,
+                                  cost_coefficient=0.2)).plan()
+    assert (cont.batching, cont.cache.kind) == ("continuous", "ring")
+    ragged = Planner(DeploymentSpec(batch_size=4, prompt_lens=(5, 11),
+                                    max_new=(4, 12), streaming=True,
+                                    cost_coefficient=0.2)).plan()
+    assert (ragged.batching, ragged.cache.kind) == ("continuous", "paged")
+    assert ragged.strategy == "modular"
+    # geometry must hold the worst-case request
+    demand = 11 + 12 + ragged.gamma_max + 1
+    assert ragged.cache.max_blocks_per_row * ragged.cache.block_size >= demand
+    assert max(ragged.cache.prefill_buckets) >= 11
+
+
+# ------------------------------------------- (c) facade == legacy, per backend
+def _plan(**kw):
+    kw.setdefault("cost_coefficient", 0.2)
+    kw.setdefault("adaptive_gamma", False)
+    return Planner(DeploymentSpec(**kw)).plan()
+
+
+def _force_gamma(plan, g):
+    return dataclasses.replace(plan,
+                               gamma=dataclasses.replace(plan.gamma, gamma=g))
+
+
+def test_session_single_matches_spec_engine(pair):
+    mt, md, pt, pd, cfg = pair
+    prompt = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (1, 6)), jnp.int32)
+    plan = _force_gamma(_plan(batch_size=1, prompt_lens=(6,), max_new=10), 3)
+    sess = Session(mt, md, pt, pd, plan)
+    toks, stats = sess.generate(prompt, 10)
+    eng = SpecEngine(mt, md, EngineConfig(gamma=3, greedy=True, use_cache=True,
+                                          strategy=plan.strategy))
+    ref, ref_stats = eng.generate(pt, pd, prompt, 10)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(ref))
+    assert stats["rounds"] == ref_stats["rounds"]
+
+
+def test_session_per_row_matches_batched_engine(pair):
+    mt, md, pt, pd, cfg = pair
+    prompts = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (3, 6)), jnp.int32)
+    plan = _force_gamma(_plan(batch_size=3, prompt_lens=(6,), max_new=8), 3)
+    sess = Session(mt, md, pt, pd, plan)
+    assert sess.backend_name == "per_row"
+    toks, lengths, _ = sess.generate_batch(prompts, 8)
+    eng = BatchedSpecEngine(mt, md, BatchedEngineConfig(gamma=3))
+    ref, ref_len, _ = eng.generate(pt, pd, prompts, 8)
+    for b in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(toks)[b, :6 + 8], np.asarray(ref)[b, :6 + 8])
+    assert (np.asarray(lengths) >= np.asarray(ref_len)).all()
+
+
+def test_session_continuous_matches_continuous_server(pair):
+    mt, md, pt, pd, cfg = pair
+    rng = np.random.default_rng(2)
+    R, P, NEW = 5, 6, 8
+    prompts = rng.integers(0, cfg.vocab_size, (R, P))
+    plan = _force_gamma(_plan(batch_size=2, prompt_lens=(P,), max_new=NEW,
+                              streaming=True), 3)
+    sess = Session(mt, md, pt, pd, plan, max_batch=2)
+    assert sess.backend_name == "continuous"
+    done = sess.serve([ServeRequest(i, prompts[i], NEW) for i in range(R)])
+    srv = ContinuousSpecServer(mt, md, pt, pd, batch=2, prompt_len=P,
+                               max_new=NEW, gamma=3)
+    for i in range(R):
+        srv.submit(StreamRequest(i, prompts[i]))
+    legacy = {r.rid: r.tokens for r in srv.run()}
+    assert sorted(r.rid for r in done) == list(range(R))
+    for r in done:
+        np.testing.assert_array_equal(r.tokens, legacy[r.rid])
+
+
+def test_session_paged_matches_paged_server(pair):
+    mt, md, pt, pd, cfg = pair
+    rng = np.random.default_rng(3)
+    ragged = [(5, 6), (9, 10), (6, 4), (11, 8)]
+    reqs = lambda: [ServeRequest(i, rng2.integers(0, cfg.vocab_size, P), new)
+                    for i, (P, new) in enumerate(ragged)]
+    rng2 = np.random.default_rng(3)
+    facade_reqs = reqs()
+    rng2 = np.random.default_rng(3)
+    legacy_reqs = reqs()
+    plan = _force_gamma(_plan(batch_size=2,
+                              prompt_lens=tuple(P for P, _ in ragged),
+                              max_new=tuple(n for _, n in ragged),
+                              streaming=True), 3)
+    assert plan.cache.kind == "paged"
+    sess = Session(mt, md, pt, pd, plan, max_batch=2)
+    assert sess.backend_name == "paged"
+    done = sess.serve(facade_reqs)
+    scfg = SchedulerConfig(max_batch=2, block_size=plan.cache.block_size,
+                           num_blocks=plan.cache.num_blocks,
+                           max_blocks_per_row=plan.cache.max_blocks_per_row,
+                           gamma_max=plan.gamma_max,
+                           prefill_buckets=plan.cache.prefill_buckets,
+                           cost_coefficient=plan.cost_coefficient)
+    srv = PagedSpecServer(mt, md, pt, pd, scfg, gamma=3)
+    for r in legacy_reqs:
+        srv.submit(r)
+    legacy = {r.rid: r.tokens for r in srv.run()}
+    assert sorted(r.rid for r in done) == list(range(len(ragged)))
+    for r in done:
+        np.testing.assert_array_equal(r.tokens, legacy[r.rid])
+
+
+def test_session_ar_fallback_matches_autoregressive(pair):
+    mt, md, pt, pd, cfg = pair
+    prompt = jnp.asarray(np.random.default_rng(4).integers(
+        0, cfg.vocab_size, (1, 6)), jnp.int32)
+    plan = _plan(batch_size=1, prompt_lens=(6,), max_new=8,
+                 cost_coefficient=1.5)
+    assert plan.gamma.gamma == 0
+    sess = Session(mt, md, pt, pd, plan)
+    toks, stats = sess.generate(prompt, 8)
+    assert stats["speculative"] is False
+    ref = autoregressive_generate(mt, pt, prompt, 8, use_cache=True)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(ref))
+
+
+def test_infeasible_streaming_plan_serves_ar_not_spec(pair):
+    """gamma*=0 must actually mean AR on non-paged paths: an infeasible
+    streaming (ring-continuous) plan may not arm speculative candidates
+    that would override the cost model's verdict."""
+    plan = Planner(DeploymentSpec(batch_size=2, prompt_lens=(6,), max_new=6,
+                                  streaming=True, alpha=0.3,
+                                  cost_coefficient=0.5)).plan()
+    assert plan.gamma.gamma == 0 and not plan.gamma.adaptive
+    assert not plan.speculative
+    mt, md, pt, pd, cfg = pair
+    prompts = np.random.default_rng(6).integers(0, cfg.vocab_size, (3, 6))
+    sess = Session(mt, md, pt, pd, plan, max_batch=2)
+    done = sess.serve([ServeRequest(i, prompts[i], 6) for i in range(3)])
+    refs = autoregressive_generate(mt, pt, jnp.asarray(prompts), 6,
+                                   use_cache=True)
+    for r in done:
+        np.testing.assert_array_equal(r.tokens, np.asarray(refs[r.rid]))
+
+
+def test_continuous_backend_feeds_alpha_back(pair):
+    """The runtime-feedback hook must observe acceptance on the ring
+    continuous backend too — serving updates Session.alpha_hat."""
+    mt, md, pt, pd, cfg = pair
+    prompts = np.random.default_rng(7).integers(0, cfg.vocab_size, (4, 6))
+    plan = _force_gamma(_plan(batch_size=2, prompt_lens=(6,), max_new=6,
+                              streaming=True), 2)
+    sess = Session(mt, md, pt, pd, plan, max_batch=2)
+    assert sess.backend_name == "continuous" and sess.alpha_hat is None
+    sess.serve([ServeRequest(i, prompts[i], 6) for i in range(4)])
+    assert sess.alpha_hat is not None and 0.0 <= sess.alpha_hat <= 1.0
+
+
+def test_pinned_knobs_fall_back_to_engine_backend(pair):
+    """per_row/continuous backends are greedy+cached+modular; a plan pinning
+    monolithic or no-cache must fall back to the engine backend that
+    honors those knobs instead of silently dropping them."""
+    mt, md, pt, pd, cfg = pair
+    mono = _plan(batch_size=4, prompt_lens=(6,), max_new=8,
+                 strategy="monolithic")
+    assert Session(mt, md, pt, pd, mono).backend_name == "engine"
+    nocache = _plan(batch_size=4, prompt_lens=(6,), max_new=8,
+                    use_cache=False)
+    assert Session(mt, md, pt, pd, nocache).backend_name == "engine"
+
+
+def test_session_adaptive_stays_lossless_and_tracks_alpha(pair):
+    mt, md, pt, pd, cfg = pair
+    prompt = jnp.asarray(np.random.default_rng(5).integers(
+        0, cfg.vocab_size, (1, 6)), jnp.int32)
+    plan = Planner(DeploymentSpec(batch_size=1, prompt_lens=(6,), max_new=12,
+                                  cost_coefficient=0.2,
+                                  adaptive_gamma=True)).plan()
+    sess = Session(mt, md, pt, pd, plan)
+    toks, stats = sess.generate(prompt, 12)
+    ref = autoregressive_generate(mt, pt, prompt, 12)
+    n = min(toks.shape[1], ref.shape[1])
+    assert (np.asarray(toks)[:, :n] == np.asarray(ref)[:, :n]).all()
+    assert stats["gamma_trace"] and sess.alpha_hat is not None
