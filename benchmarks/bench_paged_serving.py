@@ -9,6 +9,7 @@ a shared block pool. Reports tokens/s, rounds, and cache memory footprint.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -16,7 +17,7 @@ import numpy as np
 
 import dataclasses
 
-from benchmarks.common import emit, prompts, trained_pair
+from benchmarks.common import CACHE, emit, prompts, trained_pair
 from repro.api import DeploymentSpec, Planner, Session
 from repro.cache import paged_kv
 from repro.launch.continuous import ContinuousSpecServer, StreamRequest
@@ -94,6 +95,12 @@ def main():
     resident_bytes = (paged.alloc.peak_in_use * paged_pool_bytes
                       / scfg.num_blocks)
     s = paged.metrics.summary()
+    # per-round attention KV reads: live-block-bounded (the block-scan read
+    # path) vs the worst-case-capacity gather the old read path materialized
+    traffic = paged.kv_traffic()
+    rounds = max(paged.total_rounds, 1)
+    read_mb_round = traffic["read_bytes"] / rounds / 1e6
+    cap_mb_round = traffic["capacity_bytes"] / rounds / 1e6
 
     print(f"traffic: {R} ragged requests, prompt_len in {PROMPT_LENS}, "
           f"max_new in {MAX_NEWS} ({useful_tokens} requested tokens)")
@@ -111,13 +118,35 @@ def main():
           f"{useful_tokens / t_paged:.1f}; rounds "
           f"{fixed.total_rounds} -> {paged.total_rounds} "
           f"({fixed.total_rounds / max(paged.total_rounds, 1):.2f}x fewer)")
+    print(f"# per-round attention KV reads: {read_mb_round:.3f} MB live-"
+          f"bounded vs {cap_mb_round:.3f} MB at worst-case capacity "
+          f"({traffic['capacity_blocks'] / max(traffic['read_blocks'], 1):.2f}x"
+          f" less gather traffic; {traffic['read_blocks']} of "
+          f"{traffic['capacity_blocks']} capacity blocks touched)")
     print("# NOTE toy-scale wall-clock under-sells paging (host scheduling is"
           " a fixed per-round cost); ROUNDS is the device-time proxy — padded"
           " rows burn rounds decoding tokens nobody asked for.")
     emit("paged_serving", t_paged * 1e6 / max(paged.total_rounds, 1),
          f"rounds_fixed={fixed.total_rounds};rounds_paged={paged.total_rounds};"
          f"mem_fixed_mb={fixed_ring_bytes / 1e6:.2f};"
-         f"mem_paged_resident_mb={resident_bytes / 1e6:.2f}")
+         f"mem_paged_resident_mb={resident_bytes / 1e6:.2f};"
+         f"tokens_per_s_paged={useful_tokens / t_paged:.1f};"
+         f"kv_read_mb_per_round={read_mb_round:.3f};"
+         f"kv_capacity_mb_per_round={cap_mb_round:.3f}")
+    record = {
+        "tokens_per_s_paged": useful_tokens / t_paged,
+        "tokens_per_s_fixed": useful_tokens / t_fixed,
+        "rounds_paged": paged.total_rounds,
+        "rounds_fixed": fixed.total_rounds,
+        "us_per_round_paged": t_paged * 1e6 / max(paged.total_rounds, 1),
+        "kv_read_bytes_per_round": traffic["read_bytes"] / rounds,
+        "kv_capacity_bytes_per_round": traffic["capacity_bytes"] / rounds,
+        "kv_read_blocks": traffic["read_blocks"],
+        "kv_capacity_blocks": traffic["capacity_blocks"],
+        "mem_paged_resident_mb": resident_bytes / 1e6,
+        "mem_fixed_mb": fixed_ring_bytes / 1e6,
+    }
+    (CACHE / "paged_serving.json").write_text(json.dumps(record, indent=2))
 
 
 if __name__ == "__main__":

@@ -69,22 +69,22 @@ def is_paged(cache) -> bool:
     return isinstance(cache, dict) and "block_table" in cache
 
 
-def extend(layer_cache, k_new, v_new, block_table, index):
-    """Per-layer paged extension (the paged analogue of kv_cache.extend).
+def write(layer_cache, k_new, v_new, block_table, index):
+    """Per-layer paged WRITE (pool update only — the write half of the
+    write/read split; ``models.attention.attn_paged`` is the read half).
 
     layer_cache: {"k": [NB, BS, Kv, D], "v": ...} — this layer's pool slice.
     k_new/v_new: [B, Q, Kv, D] written at positions index..index+Q-1 per row.
 
-    Returns (k_all, v_all, kv_pos, new_layer_cache) where k_all/v_all are the
-    per-row gathered views [B, MB*BS, Kv, D] and kv_pos = arange(MB*BS): paged
-    slots store absolute positions directly (slot j of row b holds position j),
-    so no ring-congruence recovery is needed — the causal mask alone hides
-    stale and unallocated slots (their positions exceed every query position).
+    Returns the new layer cache. Deliberately does NOT return a gathered
+    per-row view: the old ``extend`` materialized ``[B, MB*BS, Kv, D]`` per
+    layer per step, so attention traffic scaled with worst-case row capacity
+    instead of live tokens. Readers scan blocks via the block table directly.
 
     Unlike the ring buffer, appends never evict: the write happens first and
-    attention runs over the post-write gathered view even for Q > 1.
+    attention reads the post-write pool even for Q > 1.
     """
-    NB, BS = layer_cache["k"].shape[0], layer_cache["k"].shape[1]
+    BS = layer_cache["k"].shape[1]
     B, Q = k_new.shape[0], k_new.shape[1]
     MB = block_table.shape[1]
     idx = jnp.asarray(index)
@@ -99,14 +99,7 @@ def extend(layer_cache, k_new, v_new, block_table, index):
     off = pos % BS
     k_buf = layer_cache["k"].at[blk, off].set(_to_buf_dtype(k_new, layer_cache["k"].dtype))
     v_buf = layer_cache["v"].at[blk, off].set(_to_buf_dtype(v_new, layer_cache["v"].dtype))
-    # gather per-row views: [B, MB, BS, Kv, D] -> [B, MB*BS, Kv, D]
-    k_all = _from_buf(k_buf[block_table], k_new.dtype)
-    v_all = _from_buf(v_buf[block_table], v_new.dtype)
-    Kv, D = k_new.shape[2], k_new.shape[3]
-    k_all = k_all.reshape(B, MB * BS, Kv, D)
-    v_all = v_all.reshape(B, MB * BS, Kv, D)
-    kv_pos = jnp.arange(MB * BS, dtype=jnp.int32)
-    return k_all, v_all, kv_pos, {"k": k_buf, "v": v_buf}
+    return {"k": k_buf, "v": v_buf}
 
 
 def rollback(cache, accepted_index):
@@ -144,6 +137,8 @@ class BlockAllocator:
         self.table = np.full((batch, max_blocks_per_row), NULL_BLOCK, np.int32)
         self.n_alloc = np.zeros((batch,), np.int64)      # allocated blocks/row
         self.peak_in_use = 0                             # residency high-water
+        self.version = 0     # bumped on every table mutation; callers gate
+                             # device pushes on it (see PagedSpecServer)
 
     # ------------------------------------------------------------- queries
     @property
@@ -176,6 +171,7 @@ class BlockAllocator:
             self.table[row, j] = self.free.popleft()
         self.n_alloc[row] = need
         self.peak_in_use = max(self.peak_in_use, int(self.n_alloc.sum()))
+        self.version += 1
         return True
 
     def free_tail(self, row: int, n_tokens: int) -> int:
@@ -187,6 +183,8 @@ class BlockAllocator:
             self.free.append(int(self.table[row, j]))
             self.table[row, j] = NULL_BLOCK
         self.n_alloc[row] = min(keep, have)
+        if have > keep:
+            self.version += 1
         return max(have - keep, 0)
 
     def free_row(self, row: int) -> int:

@@ -81,11 +81,22 @@ class BatchedSpecEngine:
         G = self.ecfg.gamma
         B = st.tokens.shape[0]
         t_last = _gather_last(st.tokens, st.length)
+        # round-level live-token bound for paged block-scan reads: the round
+        # writes at index length-1, so after i+1 single-token draft steps the
+        # batch-max resident length is max(length)+i; the gamma+1-token verify
+        # ends at max(length)+G. Only ACTIVE rows count — a finished row keeps
+        # its (possibly much larger) final length but commits nothing and its
+        # blocks are already freed, so letting it drive the bound would drag
+        # every remaining round back up to its dead length. Ring caches
+        # ignore the bound.
+        live0 = (jnp.max(jnp.where(st.active, st.length, 1))
+                 if st.active is not None else jnp.max(st.length))
 
-        def dstep(carry, _):
+        def dstep(carry, i):
             tok, cache = carry
             logits, cache, _ = self.drafter.apply(params_d, tok[:, None], cache,
-                                                  logits_slice="last")
+                                                  logits_slice="last",
+                                                  max_live=live0 + i)
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             return (nxt, cache), nxt
 
@@ -94,7 +105,8 @@ class BatchedSpecEngine:
         drafts = jnp.moveaxis(drafts, 0, 1)                  # [B, G]
 
         verify_in = jnp.concatenate([t_last[:, None], drafts], axis=1)
-        p_logits, tcache, _ = self.target.apply(params_t, verify_in, st.tcache)
+        p_logits, tcache, _ = self.target.apply(params_t, verify_in, st.tcache,
+                                                max_live=live0 + G)
         res = acceptance.verify_greedy(drafts, p_logits)
 
         active = (st.active if st.active is not None
@@ -135,7 +147,11 @@ class BatchedSpecEngine:
 
         target_len = P + max_new
         if self._round_jit is None:
-            self._round_jit = jax.jit(lambda pt, pd, s: self.round(pt, pd, s))
+            # donate the round state: the multi-GB caches update in place
+            # instead of being copied every round (callers snapshot host
+            # values BEFORE the call; the old buffers die with the donation)
+            self._round_jit = jax.jit(lambda pt, pd, s: self.round(pt, pd, s),
+                                      donate_argnums=(2,))
         while int(jnp.min(st.length)) < target_len:
             st = self._round_jit(params_t, params_d, st)
 

@@ -281,16 +281,23 @@ class SpecEngine:
         target_len = P + max_new_tokens
 
         if e.strategy == "monolithic":
-            key_ = (target_len, max_len, B)
+            # donate the generation state: the KV caches carried through the
+            # while_loop update in place instead of being copied at the jit
+            # boundary (stats are read from the returned state). Extras
+            # (patches / frames / cross KV) are caller-owned and may be
+            # reused across generate() calls, so states carrying them are
+            # not donated.
+            donate = not state.extras_t and not state.extras_d
+            key_ = (target_len, max_len, B, donate)
             if key_ not in self._run_jit:
-                @jax.jit
                 def run(pt, pd, s):
                     def cond(s):
                         return s.length < target_len
                     def body(s):
                         return round_fn(pt, pd, s)
                     return jax.lax.while_loop(cond, body, s)
-                self._run_jit[key_] = run
+                self._run_jit[key_] = jax.jit(
+                    run, donate_argnums=(2,) if donate else ())
             state = self._run_jit[key_](params_t, params_d, state)
         else:
             if self._round_jit is None:

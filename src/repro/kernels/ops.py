@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import int8_matmul as _imm
+from repro.kernels import paged_attention as _pa
 from repro.kernels import spec_verify as _sv
 from repro.kernels import ssd_scan as _ssd
 
@@ -71,6 +72,21 @@ def flash_attention(q, k, v, *, bq=256, bs=512, window=None, causal=True):
                               causal=causal, interpret=_interpret(),
                               s_valid=Skv)
     return out[:, :Sq]
+
+
+def paged_attention(q, k_pool, v_pool, block_table, index, *, window=None,
+                    max_live=None):
+    """Block-table-native paged attention (decode/verify path). Reads are
+    bounded by each row's live block count; the kernel resolves pool block
+    ids in-kernel from the prefetched table. int8 KV pools fall back to the
+    jnp oracle (the kernel reads float pools only)."""
+    if k_pool.dtype == jnp.int8:
+        from repro.models.attention import attn_paged
+        return attn_paged(q, k_pool, v_pool, block_table, index,
+                          window=window, max_live=max_live)
+    return _pa.paged_flash_attention(q, k_pool, v_pool, block_table, index,
+                                     window=window, interpret=_interpret(),
+                                     max_live=max_live)
 
 
 def ssd_scan(x, dA, Bm, Cm, *, chunk=128):

@@ -26,6 +26,14 @@ def flash_attention_ref(q, k, v, *, window=None, causal=True):
     return attn_dense(q, k, v, q_pos, kv_pos, window=window, causal=causal)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_table, index, *,
+                        window=None):
+    """Oracle via the model-level block-scan paged attention (itself
+    equivalence-tested against the dense gathered view)."""
+    from repro.models.attention import attn_paged
+    return attn_paged(q, k_pool, v_pool, block_table, index, window=window)
+
+
 def ssd_scan_ref(x, dA, Bm, Cm, chunk=128):
     """Oracle: the model-level chunked SSD (itself equivalence-tested against
     the sequential recurrence in tests/test_models)."""

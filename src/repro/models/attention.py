@@ -1,16 +1,22 @@
 """Attention: GQA with causal / sliding-window masking, cache-aware.
 
-Two execution paths with identical semantics (tests assert allclose):
+Three execution paths with identical semantics (tests assert allclose):
 
   * ``attn_dense``   — materializes the [B,H,Q,S] score matrix. Used for short
                        sequences and single-token decode.
   * ``attn_chunked`` — lax.scan over KV chunks with an online softmax
                        (flash-attention-style, O(S·chunk) memory). Used for long
                        prefill so the 32k/500k shapes lower without an S×S tensor.
+  * ``attn_paged``   — block-table-native read path for paged block-pool caches
+                       (cache/paged_kv.py): a bounded loop over KV *blocks* with
+                       an online softmax that stops at the batch-max live block,
+                       so per-step reads scale with resident tokens instead of
+                       ``max_blocks_per_row * block_size`` worst-case capacity.
 
-The Pallas TPU kernel in repro.kernels.flash_attention is the hardware-targeted
-drop-in for attn_chunked; model code selects it via ModelConfig when running on
-TPU. The pure-jnp paths here are the oracle and the CPU/dry-run path.
+The Pallas TPU kernels in repro.kernels.flash_attention (prefill) and
+repro.kernels.paged_attention (paged decode) are the hardware-targeted drop-ins;
+model code selects them on TPU via ``attention_paged`` below. The pure-jnp
+paths here are the oracles and the CPU/dry-run path.
 """
 from __future__ import annotations
 
@@ -65,6 +71,35 @@ def attn_dense(q, k, v, q_pos, kv_pos, *, window=None, scale=None, causal=True):
     return o.reshape(B, Q, H, D).astype(q.dtype)
 
 
+def _online_carry(B, Kv, G, Q, D):
+    return (jnp.zeros((B, Kv, G, Q, D), jnp.float32),
+            jnp.full((B, Kv, G, Q), NEG_INF, jnp.float32),
+            jnp.zeros((B, Kv, G, Q), jnp.float32))
+
+
+def _online_step(carry, qf, k_i, v_i, q_pos, kv_pos, window, scale,
+                 causal=True):
+    """One online-softmax update over a KV slab — the shared inner step of
+    attn_chunked (pre-chunked scan) and attn_paged (block-table fetch); the
+    Pallas kernels implement the same recurrence in-VMEM."""
+    acc, mx, den = carry
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_i.astype(jnp.float32)) * scale
+    m = _mask(q_pos, kv_pos, window, causal)
+    s = jnp.where(_expand_mask(m), s, NEG_INF)
+    mx_new = jnp.maximum(mx, s.max(axis=-1))
+    alpha = jnp.exp(mx - mx_new)
+    p = jnp.exp(s - mx_new[..., None])
+    den = den * alpha + p.sum(axis=-1)
+    acc = acc * alpha[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p,
+                                              v_i.astype(jnp.float32))
+    return acc, mx_new, den
+
+
+def _online_emit(acc, den, B, Q, H, D, dtype):
+    o = acc / jnp.maximum(den, 1e-30)[..., None]              # [B,Kv,G,Q,D]
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Q, H, D).astype(dtype)
+
+
 def attn_chunked(q, k, v, q_pos, kv_pos, *, window=None, scale=None, chunk=512, causal=True):
     """Online-softmax attention scanning over KV chunks. Same semantics as attn_dense."""
     B, Q, H, D = q.shape
@@ -82,24 +117,13 @@ def attn_chunked(q, k, v, q_pos, kv_pos, *, window=None, scale=None, chunk=512, 
     qf = q.reshape(B, Q, Kv, H // Kv, D).astype(jnp.float32)
 
     def step(carry, x):
-        acc, mx, den = carry
         k_i, v_i, p_i = x
-        s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_i.astype(jnp.float32)) * scale
-        m = _mask(q_pos, p_i, window, causal)
-        s = jnp.where(_expand_mask(m), s, NEG_INF)
-        mx_new = jnp.maximum(mx, s.max(axis=-1))
-        alpha = jnp.exp(mx - mx_new)
-        p = jnp.exp(s - mx_new[..., None])
-        den = den * alpha + p.sum(axis=-1)
-        acc = acc * alpha[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, v_i.astype(jnp.float32))
-        return (acc, mx_new, den), None
+        return _online_step(carry, qf, k_i, v_i, q_pos, p_i, window, scale,
+                            causal), None
 
-    acc0 = jnp.zeros((B, Kv, H // Kv, Q, D), jnp.float32)
-    mx0 = jnp.full((B, Kv, H // Kv, Q), NEG_INF, jnp.float32)
-    den0 = jnp.zeros((B, Kv, H // Kv, Q), jnp.float32)
-    (acc, _, den), _ = jax.lax.scan(step, (acc0, mx0, den0), (kc, vc, pc))
-    o = acc / jnp.maximum(den, 1e-30)[..., None]              # [B,Kv,G,Q,D]
-    return o.transpose(0, 3, 1, 2, 4).reshape(B, Q, H, D).astype(q.dtype)
+    (acc, _, den), _ = jax.lax.scan(step, _online_carry(B, Kv, H // Kv, Q, D),
+                                    (kc, vc, pc))
+    return _online_emit(acc, den, B, Q, H, D, q.dtype)
 
 
 def attention(q, k, v, q_pos, kv_pos, *, window=None, scale=None,
@@ -110,3 +134,74 @@ def attention(q, k, v, q_pos, kv_pos, *, window=None, scale=None,
         return attn_dense(q, k, v, q_pos, kv_pos, window=window, scale=scale, causal=causal)
     return attn_chunked(q, k, v, q_pos, kv_pos, window=window, scale=scale, chunk=chunk,
                         causal=causal)
+
+
+# ------------------------------------------------------------- paged read path
+def attn_paged(q, k_pool, v_pool, block_table, index, *, window=None,
+               scale=None, max_live=None, return_stats=False):
+    """Block-table-native attention over a paged KV pool (jnp oracle).
+
+    q:            [B, Q, H, D] queries at absolute positions index..index+Q-1
+                  (already written into the pool by ``paged_kv.write``).
+    k_pool/v_pool:[NB, BS, Kv, D] this layer's block pool, post-write.
+    block_table:  [B, MB] int32 row -> pool block ids (NULL block = 0).
+    index:        [B] (or scalar) committed tokens per row BEFORE this write.
+    max_live:     optional live-token bound (max over rows of index+Q); when
+                  None it is computed in-graph. Engines thread it down so one
+                  round-level bound drives every layer.
+
+    The loop runs ``ceil(max_live / BS)`` block steps — NOT ``MB`` — so KV
+    reads are bounded by the batch-max live block count, never the worst-case
+    row capacity. The gathered ``[B, MB*BS, Kv, D]`` view of the old read path
+    is never materialized. Slot j*BS+o of a row holds absolute position
+    j*BS+o, so the causal mask alone hides stale and unallocated slots.
+
+    return_stats=True also returns {"blocks_read", "max_blocks"}: the counter
+    is carried through the actual loop, so tests can assert the traffic bound.
+    """
+    from repro.cache.kv_cache import _from_buf
+
+    B, Q, H, D = q.shape
+    BS, Kv = k_pool.shape[1], k_pool.shape[2]
+    MB = block_table.shape[1]
+    G = H // Kv
+    scale = scale if scale is not None else D ** -0.5
+    idx = jnp.asarray(index)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (B,))
+    q_pos = idx[:, None] + jnp.arange(Q, dtype=jnp.int32)         # [B, Q]
+    live = (jnp.max(idx) + Q) if max_live is None else jnp.asarray(max_live)
+    n_blocks = jnp.clip((live + BS - 1) // BS, 1, MB).astype(jnp.int32)
+
+    qf = q.reshape(B, Q, Kv, G, D).astype(jnp.float32)
+
+    def body(j, carry):
+        softmax_carry, n_read = carry
+        blk = jnp.take(block_table, j, axis=1)                    # [B]
+        k_j = _from_buf(jnp.take(k_pool, blk, axis=0), q.dtype)   # [B, BS, Kv, D]
+        v_j = _from_buf(jnp.take(v_pool, blk, axis=0), q.dtype)
+        kv_pos = j * BS + jnp.arange(BS, dtype=jnp.int32)         # [BS]
+        softmax_carry = _online_step(softmax_carry, qf, k_j, v_j, q_pos,
+                                     kv_pos, window, scale)
+        return softmax_carry, n_read + B
+
+    (acc, _, den), n_read = jax.lax.fori_loop(
+        0, n_blocks, body, (_online_carry(B, Kv, G, Q, D),
+                            jnp.zeros((), jnp.int32)))
+    o = _online_emit(acc, den, B, Q, H, D, q.dtype)
+    if return_stats:
+        return o, {"blocks_read": n_read, "max_blocks": B * MB}
+    return o
+
+
+def attention_paged(q, k_pool, v_pool, block_table, index, *, window=None,
+                    scale=None, max_live=None):
+    """Paged-attention dispatch: Pallas kernel on TPU (float pools), jnp
+    oracle everywhere else (CPU, dry-run, int8 KV pools)."""
+    if jax.default_backend() == "tpu" and k_pool.dtype != jnp.int8 \
+            and scale is None:
+        from repro.kernels import ops
+        return ops.paged_attention(q, k_pool, v_pool, block_table, index,
+                                   window=window, max_live=max_live)
+    return attn_paged(q, k_pool, v_pool, block_table, index, window=window,
+                      scale=scale, max_live=max_live)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.cache import kv_cache, paged_kv
 from repro.models import layers as L
-from repro.models.attention import attention
+from repro.models.attention import attention, attention_paged
 
 
 # ---------------------------------------------------------------------- init
@@ -62,9 +62,13 @@ def init(cfg, rng):
 
 # ------------------------------------------------------------------- forward
 def attn_block(cfg, p, x, q_pos, layer_cache, index, window, use_rope=True,
-               block_table=None):
+               block_table=None, max_live=None):
     """Self-attention sub-block; returns (out, new_layer_cache or None).
-    ``block_table`` non-None selects the paged-pool cache path."""
+    ``block_table`` non-None selects the paged-pool cache path: the pool
+    write and the block-table-native read are split, so no gathered
+    ``[B, MB*BS, Kv, D]`` view is ever materialized and attention reads are
+    bounded by the live block count (``max_live`` threads the round-level
+    bound down from the engines; None recomputes it from ``index``)."""
     B, Q, _ = x.shape
     hd = cfg.head_dim
     h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
@@ -79,9 +83,9 @@ def attn_block(cfg, p, x, q_pos, layer_cache, index, window, use_rope=True,
         o = attention(q, k, v, q_pos, kv_pos, window=window)
         new_cache = None
     elif block_table is not None:
-        k_all, v_all, kv_pos, new_cache = paged_kv.extend(layer_cache, k, v,
-                                                          block_table, index)
-        o = attention(q, k_all, v_all, q_pos, kv_pos, window=window)
+        new_cache = paged_kv.write(layer_cache, k, v, block_table, index)
+        o = attention_paged(q, new_cache["k"], new_cache["v"], block_table,
+                            index, window=window, max_live=max_live)
     else:
         k_all, v_all, kv_pos, new_cache = kv_cache.extend(layer_cache, k, v, index)
         o = attention(q, k_all, v_all, q_pos, kv_pos, window=window)
@@ -89,9 +93,11 @@ def attn_block(cfg, p, x, q_pos, layer_cache, index, window, use_rope=True,
     return o, new_cache
 
 
-def dense_layer(cfg, p, x, q_pos, layer_cache, index, block_table=None):
+def dense_layer(cfg, p, x, q_pos, layer_cache, index, block_table=None,
+                max_live=None):
     o, new_cache = attn_block(cfg, p["attn"], x, q_pos, layer_cache, index,
-                              cfg.sliding_window, block_table=block_table)
+                              cfg.sliding_window, block_table=block_table,
+                              max_live=max_live)
     x = x + o
     x = x + L.swiglu(p["mlp"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
     return x, new_cache
@@ -124,12 +130,15 @@ def scan_layers(layer_fn, stacked_params, x, cache, remat=False, cfg=None):
     return h, new_kv
 
 
-def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=None):
+def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=None,
+            max_live=None):
     """tokens: [B, Q] int32 (or input_embeds [B, Q, D]).
 
     cache=None  -> full-sequence causal pass (train / paper-faithful no-cache mode)
     cache=dict  -> extend: write Q new tokens at cache["index"], return new cache
     logits_slice: if "last", only unembed the final position (decode fast-path).
+    max_live: paged caches only — live-token bound for the block-scan read
+              (ignored on the ring path; None derives it from the index).
     """
     x = input_embeds if input_embeds is not None else L.embed(params["embed"], tokens)
     x = x.astype(cfg.act_dtype)
@@ -141,7 +150,7 @@ def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=
         if jnp.asarray(index).ndim else index + jnp.arange(Q, dtype=jnp.int32)
 
     def layer_fn(lp, h, lc):
-        return dense_layer(cfg, lp, h, q_pos, lc, index, block_table)
+        return dense_layer(cfg, lp, h, q_pos, lc, index, block_table, max_live)
 
     x, new_kv = scan_layers(layer_fn, params["layers"], x, cache,
                             remat=cfg.remat, cfg=cfg)

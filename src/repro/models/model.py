@@ -46,19 +46,26 @@ class Model:
 
     # ----------------------------------------------------------------- apply
     def apply(self, params, tokens, cache=None, *, want_trail=False,
-              logits_slice=None, patches=None, frames=None, cross=None):
+              logits_slice=None, patches=None, frames=None, cross=None,
+              max_live=None):
+        """``max_live``: paged caches only — the engines' round-level
+        live-token bound for the block-scan attention read (KV families;
+        ignored elsewhere and on ring caches)."""
         cfg = self.cfg
         fam = self.family
         if fam == "dense":
             logits, new_cache = dense.forward(cfg, params, tokens, cache,
-                                              logits_slice=logits_slice)
+                                              logits_slice=logits_slice,
+                                              max_live=max_live)
             return logits, new_cache, {}
         if fam == "vlm":
             logits, new_cache = vlm.forward(cfg, params, tokens, cache,
-                                            patches=patches, logits_slice=logits_slice)
+                                            patches=patches, logits_slice=logits_slice,
+                                            max_live=max_live)
             return logits, new_cache, {}
         if fam == "moe":
-            return moe.forward(cfg, params, tokens, cache, logits_slice=logits_slice)
+            return moe.forward(cfg, params, tokens, cache, logits_slice=logits_slice,
+                               max_live=max_live)
         if fam == "ssm":
             logits, new_cache = ssm.forward(cfg, params, tokens, cache,
                                             want_trail=want_trail,

@@ -136,30 +136,36 @@ def moe_mlp(cfg, p, x):
     return y, {"load_balance": lb, "router_z": z}
 
 
-def moe_layer(cfg, p, x, q_pos, layer_cache, index, block_table=None):
+def moe_layer(cfg, p, x, q_pos, layer_cache, index, block_table=None,
+              max_live=None):
     o, new_cache = dense.attn_block(cfg, p["attn"], x, q_pos, layer_cache, index,
-                                    cfg.sliding_window, block_table=block_table)
+                                    cfg.sliding_window, block_table=block_table,
+                                    max_live=max_live)
     x = x + o
     y, aux = moe_mlp(cfg, p["moe"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
     return x + y, new_cache, aux
 
 
-def moe_block(cfg, bp, x, q_pos, block_cache, index, block_table=None):
+def moe_block(cfg, bp, x, q_pos, block_cache, index, block_table=None,
+              max_live=None):
     """(moe_every-1) dense layers + 1 MoE layer; caches keyed like params."""
     n_dense = max(cfg.moe_every - 1, 0)
     new_bc = {}
     for i in range(n_dense):
         key = f"dense{i}"
         lc = block_cache[key] if block_cache is not None else None
-        x, nc = dense.dense_layer(cfg, bp[key], x, q_pos, lc, index, block_table)
+        x, nc = dense.dense_layer(cfg, bp[key], x, q_pos, lc, index, block_table,
+                                  max_live)
         new_bc[key] = nc
     lc = block_cache["moe"] if block_cache is not None else None
-    x, nc, aux = moe_layer(cfg, bp["moe"], x, q_pos, lc, index, block_table)
+    x, nc, aux = moe_layer(cfg, bp["moe"], x, q_pos, lc, index, block_table,
+                           max_live)
     new_bc["moe"] = nc
     return x, (new_bc if block_cache is not None else None), aux
 
 
-def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=None):
+def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=None,
+            max_live=None):
     x = input_embeds if input_embeds is not None else L.embed(params["embed"], tokens)
     x = x.astype(cfg.act_dtype)
     B, Q = x.shape[0], x.shape[1]
@@ -172,7 +178,8 @@ def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=
     def step(carry, xs):
         h, lb, rz = carry
         lp, lc = xs
-        h, new_lc, aux = moe_block(cfg, lp, h, q_pos, lc, index, block_table)
+        h, new_lc, aux = moe_block(cfg, lp, h, q_pos, lc, index, block_table,
+                                   max_live)
         return (h, lb + aux["load_balance"], rz + aux["router_z"]), new_lc
 
     zero = jnp.zeros((), jnp.float32)

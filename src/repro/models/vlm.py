@@ -37,16 +37,21 @@ def project(cfg, params, patches):
     return L.linear(p["fc2"], jax.nn.gelu(L.linear(p["fc1"], h)))
 
 
-def forward(cfg, params, tokens, cache=None, *, patches=None, logits_slice=None):
+def forward(cfg, params, tokens, cache=None, *, patches=None, logits_slice=None,
+            max_live=None):
     """If ``patches`` is given (prefill), vision embeddings are prepended;
-    logits are returned for the text positions only."""
+    logits are returned for the text positions only. ``max_live`` threads the
+    paged-read live bound down to the LM's attention (vision tokens occupy
+    cache slots, so callers must include them in the bound)."""
     if patches is None:
-        return dense.forward(cfg, params, tokens, cache, logits_slice=logits_slice)
+        return dense.forward(cfg, params, tokens, cache, logits_slice=logits_slice,
+                             max_live=max_live)
     vis = project(cfg, params, patches)
     txt = L.embed(params["embed"], tokens).astype(cfg.act_dtype)
     embeds = jnp.concatenate([vis, txt], axis=1)
     logits, new_cache = dense.forward(cfg, params, None, cache,
-                                      input_embeds=embeds, logits_slice=logits_slice)
+                                      input_embeds=embeds, logits_slice=logits_slice,
+                                      max_live=max_live)
     n_vis = vis.shape[1]
     if logits_slice != "last":
         logits = logits[:, n_vis:]

@@ -64,9 +64,18 @@ class PagedSpecServer:
         self._engines: Dict[int, BatchedSpecEngine] = {}
         self._prefill_jit = None
         self._ar_jit = None
+        self._table_version = -1    # last allocator.version pushed to device
         self.gamma = None           # decided at batch formation
         self.done: List[ServeRequest] = []
         self.total_rounds = 0
+        # paged-attention read accounting (see kv_traffic()): per-round KV
+        # gathers, live-bounded vs worst-case row capacity, kept separately
+        # for the target (verify / AR read) and the drafter (gamma
+        # single-token draft reads per speculative round; none under AR)
+        self.kv_blocks_read_t = 0
+        self.kv_blocks_read_d = 0
+        self.kv_blocks_capacity_t = 0
+        self.kv_blocks_capacity_d = 0
 
     # ------------------------------------------------------------- plumbing
     def submit(self, req: ServeRequest):
@@ -76,7 +85,10 @@ class PagedSpecServer:
         if gamma not in self._engines:
             eng = BatchedSpecEngine(self.target, self.drafter,
                                     BatchedEngineConfig(gamma=gamma))
-            eng._round_jit = jax.jit(lambda pt, pd, s: eng.round(pt, pd, s))
+            # donate the round state: block pools update in place instead of
+            # being copied every round (host snapshots are taken pre-call)
+            eng._round_jit = jax.jit(lambda pt, pd, s: eng.round(pt, pd, s),
+                                     donate_argnums=(2,))
             self._engines[gamma] = eng
         return self._engines[gamma]
 
@@ -95,15 +107,27 @@ class PagedSpecServer:
                         jnp.zeros((B,), bool))
 
     def _sync_tables(self, state: RowState) -> RowState:
-        table = self.alloc.device_table()
-        return state._replace(tcache={**state.tcache, "block_table": table},
-                              dcache={**state.dcache, "block_table": table})
+        """Push the host block table to the device — only when it actually
+        changed since the last push (allocator.version gates the transfer;
+        admission/release bump it, idle rounds do not). Two separate device
+        arrays: tcache/dcache must not share one buffer or the donated round
+        state would donate it twice."""
+        if self._table_version == self.alloc.version:
+            return state
+        self._table_version = self.alloc.version
+        return state._replace(
+            tcache={**state.tcache, "block_table": self.alloc.device_table()},
+            dcache={**state.dcache, "block_table": self.alloc.device_table()})
 
     # -------------------------------------------------------------- prefill
     def _prefill_into(self, state: RowState, row: int, req: ServeRequest):
         """Length-bucketed one-row prefill written straight into the shared
         pools, then rolled back to the true prompt length (exact: the padded
-        tail is causally invisible to the real tokens and masked afterward)."""
+        tail is causally invisible to the real tokens and masked afterward).
+        The caller must have synced the block tables (``_refill`` does); the
+        row views below slice the already-pushed device tables instead of
+        re-uploading. The pool views are donated: prefill writes the shared
+        pools in place rather than copying them per admitted request."""
         padded = self.sched.pad_to_bucket(np.asarray(req.prompt, np.int32))
         P = req.prompt_len
         if self._prefill_jit is None:
@@ -111,18 +135,20 @@ class PagedSpecServer:
                 _, tc, _ = self.target.apply(pt, prompt[:, :-1], tc)
                 _, dc, _ = self.drafter.apply(pd, prompt[:, :-1], dc)
                 return tc, dc
-            self._prefill_jit = jax.jit(prefill)
-        table = self.alloc.device_table()
-        zero = jnp.zeros((1,), jnp.int32)
-        tc_view = {**state.tcache, "block_table": table[row:row + 1], "index": zero}
-        dc_view = {**state.dcache, "block_table": table[row:row + 1], "index": zero}
+            self._prefill_jit = jax.jit(prefill, donate_argnums=(3, 4))
+        t_table = state.tcache["block_table"]
+        d_table = state.dcache["block_table"]
+        tc_view = {**state.tcache, "block_table": t_table[row:row + 1],
+                   "index": jnp.zeros((1,), jnp.int32)}
+        dc_view = {**state.dcache, "block_table": d_table[row:row + 1],
+                   "index": jnp.zeros((1,), jnp.int32)}
         tc, dc = self._prefill_jit(self.params_t, self.params_d,
                                    jnp.asarray(padded[None]), tc_view, dc_view)
         # merge: pools carry the new rows; index rolls back to P-1 (bucket
         # padding beyond it is masked); tables re-broadcast to the full batch
-        tcache = {**tc, "block_table": table,
+        tcache = {**tc, "block_table": t_table,
                   "index": state.tcache["index"].at[row].set(P - 1)}
-        dcache = {**dc, "block_table": table,
+        dcache = {**dc, "block_table": d_table,
                   "index": state.dcache["index"].at[row].set(P - 1)}
         tokens = state.tokens.at[row].set(0).at[row, :P].set(
             jnp.asarray(req.prompt, jnp.int32))
@@ -141,9 +167,11 @@ class PagedSpecServer:
                 B, T = st.tokens.shape
                 rows = jnp.arange(B)
                 t_last = st.tokens[rows, st.length - 1]
-                logits, tcache, _ = self.target.apply(pt, t_last[:, None],
-                                                      st.tcache,
-                                                      logits_slice="last")
+                logits, tcache, _ = self.target.apply(
+                    pt, t_last[:, None], st.tcache, logits_slice="last",
+                    # bound over ACTIVE rows: finished rows keep their final
+                    # length but their blocks are freed and nothing commits
+                    max_live=jnp.max(jnp.where(st.active, st.length, 1)))
                 nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
                 cols = jnp.clip(st.length, 0, T - 1)
                 cur = st.tokens[rows, cols]
@@ -154,11 +182,12 @@ class PagedSpecServer:
                 return st._replace(tokens=tokens, length=new_len,
                                    tcache=tcache,
                                    n_rounds=st.n_rounds + 1)
-            self._ar_jit = jax.jit(ar)
+            self._ar_jit = jax.jit(ar, donate_argnums=(1,))
         return self._ar_jit(self.params_t, state)
 
     # -------------------------------------------------------------- serving
-    def _refill(self, state: RowState) -> RowState:
+    def _refill(self, state: RowState,
+                lengths: Optional[np.ndarray] = None) -> RowState:
         for b in range(self.B):
             if self._slots[b] is not None:
                 continue
@@ -167,11 +196,14 @@ class PagedSpecServer:
                 break                       # FCFS head-blocking
             state = self._sync_tables(state)
             state = self._prefill_into(state, b, req)
+            if lengths is not None:
+                lengths[b] = req.prompt_len  # keep the host mirror current
             self._slots[b] = req
         return state
 
-    def _harvest(self, state: RowState) -> RowState:
-        lengths = np.asarray(state.length)
+    def _harvest(self, state: RowState, lengths: np.ndarray) -> RowState:
+        """``lengths`` is the round's single host snapshot of state.length
+        (run() pulls it once; refill updates it in place for new rows)."""
         for b in range(self.B):
             req = self._slots[b]
             if req is None or lengths[b] < self._target_len[b]:
@@ -181,7 +213,54 @@ class PagedSpecServer:
             self.done.append(req)
             self._slots[b] = None
             state = state._replace(active=state.active.at[b].set(False))
-        return self._sync_tables(self._refill(state))
+        return self._sync_tables(self._refill(state, lengths))
+
+    def _account_round(self, prev_len: np.ndarray):
+        """Per-round paged-attention read bound (matches the block-scan read
+        path): with live = batch-max committed length, a speculative round
+        reads ceil((live+i)/BS) blocks/row for draft step i (gamma drafter
+        gathers) plus ceil((live+gamma)/BS) for the target verify; an AR
+        round reads ceil(live/BS) on the target only — vs max_blocks_per_row
+        per gather under the old full-pool read. Feeds kv_traffic(). Like the
+        engine bound, only occupied rows count."""
+        occupied = np.array([s is not None for s in self._slots])
+        live = int(prev_len[occupied].max()) if occupied.any() else 1
+        bs, mb = self.scfg.block_size, self.scfg.max_blocks_per_row
+
+        def blocks(tokens):
+            return min(-(-tokens // bs), mb)
+
+        if self.gamma > 0:
+            t_blocks, d_gathers = blocks(live + self.gamma), self.gamma
+            d_blocks = sum(blocks(live + i) for i in range(self.gamma))
+        else:
+            t_blocks, d_gathers, d_blocks = blocks(live), 0, 0
+        self.kv_blocks_read_t += t_blocks * self.B
+        self.kv_blocks_read_d += d_blocks * self.B
+        self.kv_blocks_capacity_t += mb * self.B
+        self.kv_blocks_capacity_d += d_gathers * mb * self.B
+
+    def kv_traffic(self) -> Dict[str, float]:
+        """KV bytes gathered by per-round attention reads, live-block-bounded
+        (actual) vs worst-case capacity (the old gathered-view read path).
+        Target and drafter gathers are charged against their own pool sizes."""
+        def per_block(cache):
+            total = 0
+            for leaf in jax.tree_util.tree_leaves(cache or {}):
+                if getattr(leaf, "ndim", 0) == 5:  # [L, NB, BS, Kv, D] pools
+                    L, _, BS, Kv, D = leaf.shape
+                    total += L * BS * Kv * D * jnp.dtype(leaf.dtype).itemsize
+            return total
+
+        pt = per_block(self._state.tcache) if self._state is not None else 0
+        pd = per_block(self._state.dcache) if self._state is not None else 0
+        return {"read_blocks": self.kv_blocks_read_t + self.kv_blocks_read_d,
+                "capacity_blocks": (self.kv_blocks_capacity_t
+                                    + self.kv_blocks_capacity_d),
+                "read_bytes": (self.kv_blocks_read_t * pt
+                               + self.kv_blocks_read_d * pd),
+                "capacity_bytes": (self.kv_blocks_capacity_t * pt
+                                   + self.kv_blocks_capacity_d * pd)}
 
     def run(self):
         """Drain the queue; returns completed requests (submission order is
@@ -199,6 +278,7 @@ class PagedSpecServer:
             self.gamma, _ = self.sched.choose_gamma(self._alpha_override,
                                                     self._c_override)
 
+        lengths = np.array(self._state.length)   # writable host mirror
         while any(r is not None for r in self._slots):
             # online re-decision: spec->spec retunes are safe (both caches are
             # maintained every speculative round) and spec->AR downgrades when
@@ -208,7 +288,8 @@ class PagedSpecServer:
             if self._gamma_override is None and self.gamma > 0:
                 self.gamma, _ = self.sched.choose_gamma(self._alpha_override,
                                                         self._c_override)
-            prev_len = np.asarray(self._state.length)
+            prev_len = lengths
+            self._account_round(prev_len)
             if self.gamma > 0:
                 eng = self._engine(self.gamma)
                 self._state = eng._round_jit(self.params_t, self.params_d,
@@ -216,10 +297,13 @@ class PagedSpecServer:
             else:
                 self._state = self._ar_round(self._state)
             self.total_rounds += 1
-            emitted = np.asarray(self._state.length) - prev_len
-            active = np.asarray(self._state.active)
+            # ONE host sync per round: lengths + active in a single pull; the
+            # harvest/refill below reuse the same snapshot
+            lengths, active = map(np.array, jax.device_get(
+                (self._state.length, self._state.active)))
+            emitted = lengths - prev_len
             rids = [r.rid if r is not None else None for r in self._slots]
             self.metrics.record_round(np.maximum(emitted - 1, 0), self.gamma,
                                       active, rids)
-            self._state = self._harvest(self._state)
+            self._state = self._harvest(self._state, lengths)
         return self.done

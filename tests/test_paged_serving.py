@@ -197,6 +197,23 @@ def test_scheduler_bucketing_pads_exactly():
     assert (padded[:5] == np.arange(1, 6)).all() and (padded[5:] == 0).all()
 
 
+def test_allocator_version_gates_table_pushes():
+    """The device block table is only re-pushed when the host table actually
+    changed: allocator.version bumps on allocation/release, not on no-ops."""
+    alloc = BlockAllocator(num_blocks=16, block_size=4, max_blocks_per_row=8,
+                           batch=2)
+    v0 = alloc.version
+    assert alloc.ensure(0, 8)            # allocates 2 blocks -> mutation
+    assert alloc.version == v0 + 1
+    assert alloc.ensure(0, 8)            # already covered -> no mutation
+    assert alloc.ensure(0, 5)            # shrink request never shrinks
+    assert alloc.version == v0 + 1
+    assert alloc.free_tail(0, 8) == 0    # nothing beyond 2 blocks -> no-op
+    assert alloc.version == v0 + 1
+    assert alloc.free_row(0) == 2        # releases blocks -> mutation
+    assert alloc.version == v0 + 2
+
+
 def test_metrics_alpha_and_histogram():
     m = ServingMetrics(gamma_max=4)
     assert m.alpha_hat() is None
