@@ -81,7 +81,8 @@ class EngineBackend:
                 self.target, self.drafter,
                 EngineConfig(gamma=gamma, greedy=p.greedy,
                              temperature=p.temperature, use_cache=p.use_cache,
-                             strategy=p.strategy))
+                             strategy=p.strategy,
+                             draft_policy=p.draft_policy, draft_k=p.draft_k))
         return self._engines[gamma]
 
     # ----------------------------------------------------------------- paths
@@ -98,7 +99,8 @@ class EngineBackend:
     def _generate_adaptive(self, prompt, max_new, key, extras_t=None,
                            extras_d=None):
         """The plan's runtime-feedback hook driving modular rounds: re-pick
-        gamma each round from the alpha EMA (core/adaptive.py, generalized)."""
+        gamma each round from the alpha EMA (GammaController over one
+        compiled round per candidate gamma)."""
         p = self.plan
         B, P = prompt.shape
         g_max = max(p.gamma.candidates)

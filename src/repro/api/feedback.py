@@ -4,9 +4,9 @@ The Planner fixes gamma offline from an *expected* acceptance rate; this hook
 closes the loop at run time, identically for every backend. It keeps an EMA
 of the measured acceptance rate and re-evaluates the same Eq. (1) cost model
 the planner used, over the plan's candidate gammas — so "adapt gamma to the
-prompt" (core/adaptive.py), "retune gamma per batch" (serving/scheduler.py),
-and "downgrade to AR when speculation stops paying" are all the one function
-``GammaController.gamma()``.
+prompt" (the engine backend's adaptive loop), "retune gamma per batch"
+(serving/scheduler.py), and "downgrade to AR when speculation stops paying"
+are all the one function ``GammaController.gamma()``.
 """
 from __future__ import annotations
 

@@ -21,6 +21,7 @@ PLAN_VERSION = 1
 STRATEGIES = ("monolithic", "modular")
 BATCHING_MODES = ("single", "per_row", "continuous")
 CACHE_KINDS = ("ring", "paged")
+DRAFT_POLICIES = ("linear", "multi")
 
 
 # ------------------------------------------------------------------ spec side
@@ -55,6 +56,14 @@ class DeploymentSpec:
     gamma_max: int = 8
     adaptive_gamma: Optional[bool] = None   # None = planner decides
     alpha_ema: float = 0.9
+    # draft-strategy evidence: alpha_topk = measured P[target argmax in the
+    # drafter's top-k] (bench_strategies.py reports it); None = no evidence,
+    # the planner keeps linear drafting. draft_policy pins the decision.
+    draft_policy: Optional[str] = None      # None = planner decides
+    draft_k: int = 2
+    alpha_topk: Optional[float] = None
+    stack_cost: Optional[float] = None      # measured marginal cost of one
+                                            # stacked candidate (None = prior)
 
     # sampling / execution knobs
     greedy: bool = True
@@ -75,6 +84,12 @@ class DeploymentSpec:
             raise ValueError(f"strategy must be one of {STRATEGIES}")
         if isinstance(self.max_new, tuple) and not self.max_new:
             raise ValueError("max_new tuple must be non-empty")
+        if (self.draft_policy is not None
+                and self.draft_policy not in DRAFT_POLICIES):
+            raise ValueError(f"draft_policy must be one of {DRAFT_POLICIES}")
+        if self.draft_k < 1 or (self.draft_policy == "multi"
+                                and self.draft_k < 2):
+            raise ValueError("draft_k must be >= 1 (>= 2 for 'multi')")
 
     # convenience views the planner keys its decisions on
     @property
@@ -156,6 +171,8 @@ class ExecutionPlan:
     cache: CacheLayout = CacheLayout()
     gamma: GammaSchedule = GammaSchedule()
     placement: PlacementPlan = PlacementPlan()
+    draft_policy: str = "linear"            # DRAFT_POLICIES (rounds seam)
+    draft_k: int = 2                        # candidates/row for "multi"
 
     # the economics the decisions were derived from (for audit/re-planning)
     alpha: float = 0.8
@@ -181,6 +198,18 @@ class ExecutionPlan:
             raise ValueError(f"cache.kind must be one of {CACHE_KINDS}")
         if self.cache.kind == "paged" and self.batching != "continuous":
             raise ValueError("paged cache layout requires continuous batching")
+        if self.draft_policy not in DRAFT_POLICIES:
+            raise ValueError(f"draft_policy must be one of {DRAFT_POLICIES}")
+        if self.draft_policy == "multi" and (not self.greedy or self.use_cache
+                                             or self.batching != "single"):
+            raise ValueError("multi-draft plans need greedy single-stream "
+                             "no-cache execution (cached k-candidate verify "
+                             "requires tree attention — roadmap)")
+        if self.draft_policy == "multi" and self.draft_k < 2:
+            raise ValueError("multi-draft plans need draft_k >= 2")
+        if self.draft_policy == "multi" and self.gamma.gamma == 0:
+            raise ValueError("multi-draft plans need a speculative gamma "
+                             "(gamma > 0) — there is no round to multi-draft")
 
     @property
     def speculative(self) -> bool:

@@ -10,7 +10,9 @@ This is where the paper's compile-time decisions live, in order:
   ④ whether/how much to speculate — Eq. (1): gamma* over 0..gamma_max
     (gamma*=0 = serve autoregressively);
   ⑤ execution shape   — batching mode, cache layout + block geometry, and
-    compilation strategy from the traffic shape.
+    compilation strategy from the traffic shape;
+  ⑥ draft strategy    — linear vs k-candidate multi-draft (the round core's
+    DraftPolicy seam) from top-k acceptance evidence (``alpha_topk``).
 
 The emitted ExecutionPlan is the system's control plane: Sessions execute
 it verbatim, and its GammaSchedule carries the runtime-feedback hook that
@@ -185,6 +187,58 @@ class Planner:
                            max_blocks_per_row=blocks_per_row,
                            prefill_buckets=buckets)
 
+    def choose_draft_policy(self, gamma: GammaSchedule, batching: str,
+                            c: float = DEFAULT_COST_COEFFICIENT):
+        """Decision ⑥: linear vs multi-candidate drafting (the round core's
+        DraftPolicy seam), from acceptance-rate evidence. Multi-draft
+        (k first-token alternates verified in one stacked target pass) pays
+        exactly when the drafter's argmax misses often but its top-k covers
+        — measured as alpha_topk — and is only executable on greedy
+        single-stream no-cache rounds (cached k-candidate verification
+        needs tree attention; see core/rounds.py)."""
+        s = self.spec
+        executable = (s.greedy and not s.use_cache and batching == "single"
+                      and gamma.gamma > 0)
+        if s.draft_policy is not None:
+            if s.draft_policy == "multi" and not executable:
+                if s.greedy and not s.use_cache and batching == "single":
+                    raise ValueError(
+                        "draft_policy='multi' pinned but the cost model "
+                        f"ruled speculation out (gamma*=0 at alpha={s.alpha})"
+                        " — there is no speculative round to multi-draft")
+                raise ValueError(
+                    "draft_policy='multi' pinned but multi-draft needs "
+                    "greedy single-stream no-cache execution (got "
+                    f"greedy={s.greedy}, use_cache={s.use_cache}, "
+                    f"batching={batching})")
+            self._notes.append(f"draft_policy={s.draft_policy} (given)")
+            return s.draft_policy, s.draft_k
+        if not executable:
+            self._notes.append(
+                "draft_policy=linear (multi-draft needs greedy single-stream "
+                "no-cache speculative rounds)")
+            return "linear", s.draft_k
+        if s.alpha_topk is None:
+            self._notes.append(
+                "draft_policy=linear (no top-k acceptance evidence; measure "
+                "alpha_topk — bench_strategies.py — to arm multi-draft)")
+            return "linear", s.draft_k
+        kw = {} if s.stack_cost is None else {"stack_cost": s.stack_cost}
+        rel = cost_model.multi_draft_speedup(s.alpha, s.alpha_topk,
+                                             max(gamma.gamma, 1), c,
+                                             s.draft_k, **kw)
+        if rel > 1.0:
+            self._notes.append(
+                f"draft_policy=multi k={s.draft_k} (alpha_topk={s.alpha_topk}"
+                f" vs alpha={s.alpha}: predicted round speedup {rel:.2f}x "
+                f"over linear)")
+            return "multi", s.draft_k
+        self._notes.append(
+            f"draft_policy=linear (multi-draft declined: predicted round "
+            f"speedup {rel:.2f}x <= 1 at alpha={s.alpha}, "
+            f"alpha_topk={s.alpha_topk}, k={s.draft_k})")
+        return "linear", s.draft_k
+
     def choose_strategy(self, batching: str, gamma: GammaSchedule) -> str:
         s = self.spec
         if s.strategy is not None:
@@ -209,13 +263,21 @@ class Planner:
         cache = self.choose_cache(batching, s.gamma_max)
         gamma = self.choose_gamma(c, paged=cache.kind == "paged")
         strategy = self.choose_strategy(batching, gamma)
+        draft_policy, draft_k = self.choose_draft_policy(gamma, batching, c)
         predicted = cost_model.speedup(s.alpha, gamma.gamma, c) \
             if gamma.gamma > 0 else 1.0
+        if draft_policy == "multi" and s.alpha_topk is not None:
+            # pinned multi without alpha_topk evidence keeps the linear
+            # prediction (no measured gain to fold in)
+            kw = {} if s.stack_cost is None else {"stack_cost": s.stack_cost}
+            predicted *= cost_model.multi_draft_speedup(
+                s.alpha, s.alpha_topk, max(gamma.gamma, 1), c, draft_k, **kw)
         if placement.predicted_speedup > 1.0:
             predicted = max(predicted, placement.predicted_speedup)
         return ExecutionPlan(
             strategy=strategy, batching=batching, cache=cache, gamma=gamma,
-            placement=placement, alpha=s.alpha, cost_coefficient=c,
+            placement=placement, draft_policy=draft_policy, draft_k=draft_k,
+            alpha=s.alpha, cost_coefficient=c,
             gamma_max=s.gamma_max, predicted_speedup=predicted,
             greedy=s.greedy, temperature=s.temperature, use_cache=s.use_cache,
             max_new=s.max_new_cap, rationale=tuple(self._notes))

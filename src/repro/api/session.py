@@ -8,12 +8,13 @@
     sess = Session(target, drafter, params_t, params_d, plan)
     done = sess.serve(requests)          # or .generate(...) / .generate_batch(...)
 
-The plan's (batching, cache) pair picks the backend; all four legacy entry
-points — SpecEngine, BatchedSpecEngine, ContinuousSpecServer, PagedSpecServer
-— are reachable, as is the plain-AR fallback when the cost model emitted
-gamma*=0. Legacy constructors remain importable as deprecated shims for one
-release; new code should not call them directly (docs/API.md has the
-migration table).
+The plan's (batching, cache) pair picks the backend; all four execution
+paths — SpecEngine, BatchedSpecEngine, ContinuousSpecServer, PagedSpecServer
+— are reachable (each a thin shell over the shared round core,
+core/rounds.py), as is the plain-AR fallback when the cost model emitted
+gamma*=0. The deprecated legacy wrappers (launch.serve.Server,
+core.adaptive.AdaptiveSpecEngine) scheduled for one-release removal are
+gone; docs/API.md keeps the migration table.
 """
 from __future__ import annotations
 
@@ -30,7 +31,7 @@ def _select_backend(plan: ExecutionPlan, target, drafter) -> str:
     """(batching, cache) -> backend name, with fallbacks to the
     batch-synchronized engine, which honors every plan knob:
 
-      * per-row rollback needs KV-cache families (docs/DESIGN.md §5b) —
+      * per-row rollback needs KV-cache families (docs/DESIGN.md §5) —
         recurrent targets fall back;
       * the per-row/continuous/paged backends are inherently greedy, cached,
         and host-orchestrated (modular) — a plan pinning stochastic sampling,

@@ -1,0 +1,113 @@
+"""CacheOps: the uniform cache surface behind the speculative round core.
+
+Both KV-cache layouts — the dense ring buffer (kv_cache.py) and the paged
+block pool (paged_kv.py) — implement one small protocol, so the round core
+(repro.core.rounds) and the engines are generic over layout:
+
+  init / spec    allocate real buffers / ShapeDtypeStructs for a model pair
+                 (family geometry stays inside Model.init_cache /
+                 Model.init_paged_cache — CacheOps routes to the right one);
+  write          the layer-level append primitive the attention stacks call
+                 (ring: extend, returning the read view; paged: pool write
+                 only — the read side is block-table-native, see
+                 models.attention.attn_paged);
+  rollback       O(1) speculative rollback to an accepted index (scalar or
+                 per-row [B]);
+  live_bound     the round-level max-live-token bound threaded into paged
+                 block-scan reads (``Model.apply(..., max_live=)``); ring
+                 buffers mask on positions and need no bound (None).
+
+``ops_for(cache)`` sniffs a live cache dict and returns the matching ops —
+the round core's only layout dispatch.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+from repro.cache import kv_cache, paged_kv
+
+
+@runtime_checkable
+class CacheOps(Protocol):
+    """What the round core and the engines need from a KV-cache layout."""
+    kind: str
+
+    def init(self, model, batch: int, **geometry) -> Any: ...
+
+    def spec(self, model, batch: int, **geometry) -> Any: ...
+
+    def write(self, layer_cache, k_new, v_new, *args, **kw) -> Any: ...
+
+    def rollback(self, cache, accepted_index) -> Any: ...
+
+    def live_bound(self, length, active=None) -> Optional[jnp.ndarray]: ...
+
+
+class _RingOps:
+    """Per-row ring buffers: [L, B, W, Kv, D], token p in slot p % W."""
+    kind = "ring"
+
+    @staticmethod
+    def init(model, batch, *, max_len, spec_slack=8, dtype=None):
+        return model.init_cache(batch, model.cache_len(max_len),
+                                spec_slack=spec_slack, dtype=dtype)
+
+    @staticmethod
+    def spec(model, batch, *, max_len, spec_slack=8, dtype=None):
+        return model.cache_spec(batch, model.cache_len(max_len),
+                                spec_slack=spec_slack, dtype=dtype)
+
+    write = staticmethod(kv_cache.extend)
+
+    @staticmethod
+    def rollback(cache, accepted_index):
+        return kv_cache.rollback(cache, accepted_index)
+
+    @staticmethod
+    def live_bound(length, active=None):
+        return None                      # position masking; no read bound
+
+
+class _PagedOps:
+    """Shared block pool + per-row block tables (vLLM-style paging)."""
+    kind = "paged"
+
+    @staticmethod
+    def init(model, batch, *, num_blocks, block_size, max_blocks_per_row,
+             dtype=None):
+        return model.init_paged_cache(batch, num_blocks, block_size,
+                                      max_blocks_per_row, dtype=dtype)
+
+    @staticmethod
+    def spec(model, batch, *, num_blocks, block_size, max_blocks_per_row,
+             dtype=None):
+        import jax
+        return jax.eval_shape(lambda: model.init_paged_cache(
+            batch, num_blocks, block_size, max_blocks_per_row, dtype=dtype))
+
+    write = staticmethod(paged_kv.write)
+
+    @staticmethod
+    def rollback(cache, accepted_index):
+        return paged_kv.rollback(cache, accepted_index)
+
+    @staticmethod
+    def live_bound(length, active=None):
+        # batch-max committed length over ACTIVE rows only: a finished row
+        # keeps its final length but commits nothing and its blocks are
+        # freed, so it must not drag the bound up (docs/DESIGN.md §3)
+        if active is not None:
+            return jnp.max(jnp.where(active, length, 1))
+        return jnp.max(length)
+
+
+RING: CacheOps = _RingOps()
+PAGED: CacheOps = _PagedOps()
+
+
+def ops_for(cache) -> CacheOps:
+    """Layout dispatch for a live cache tree (None -> ring: the no-cache
+    paths never touch rollback/live_bound, and ring is the benign default)."""
+    return PAGED if paged_kv.is_paged(cache) else RING

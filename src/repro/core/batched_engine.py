@@ -1,19 +1,22 @@
 """Per-row batched speculative decoding (beyond-paper serving extension).
 
-The base SpecEngine synchronizes rounds across the batch by committing the
-batch-MINIMUM acceptance — exact at the paper's B=1 operating point but
-wasteful when per-prompt acceptance rates diverge (a fast row waits for the
-slowest). This engine keeps PER-ROW cache indices/lengths: every row commits
-its own accepted prefix each round, so throughput tracks each row's own alpha.
+The per-row specialization of the shared round core (``core/rounds.py``):
+every round runs ``rounds.spec_round`` with ``commit="per_row"`` — each row
+commits its OWN accepted prefix, so throughput tracks each row's own alpha
+instead of the batch minimum (the batch-synchronized ``SpecEngine`` is the
+other specialization of the same core).
 
-Supported families: the KV-cache group (dense / moe / vlm) — per-row rollback
-is an index vector; recurrent-state families would need per-row state trails
-(see docs/DESIGN.md §5b). Greedy acceptance (the serving configuration).
+Supported families: the KV-cache group (dense / moe / vlm) — per-row
+rollback is an index-vector write through the CacheOps seam
+(repro.cache.ops), identical for ring buffers and paged block pools;
+recurrent-state families would need per-row state trails (docs/DESIGN.md
+§5). serving/paged_server.py drives this engine on paged caches for ragged
+continuous batching.
 
-Caches may be ring buffers (cache/kv_cache.py) or paged block pools
-(cache/paged_kv.py) — both expose per-row ``index`` rollback, so the round
-is layout-agnostic; serving/paged_server.py drives this engine on paged
-caches for ragged continuous batching.
+Sampling: greedy is the serving configuration; stochastic per-row
+acceptance is exact per row (each row is standard speculative sampling on
+its own stream) and available via ``BatchedEngineConfig(greedy=False)`` +
+``generate(..., key=)``.
 
 Invariant (tested): every row's output equals that row's OWN autoregressive
 greedy continuation, regardless of what other rows do.
@@ -21,49 +24,28 @@ greedy continuation, regardless of what other rows do.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import acceptance
+from repro.core import rounds
+from repro.core.rounds import RoundState
 
 KV_FAMILIES = ("dense", "moe", "vlm")
+
+# Back-compat alias: the per-row state IS the round core's state with [B]
+# lengths and an ``active`` mask.
+RowState = RoundState
 
 
 @dataclass(frozen=True)
 class BatchedEngineConfig:
     gamma: int = 4
     max_new_tokens: int = 32
-
-
-class RowState(NamedTuple):
-    tokens: jnp.ndarray      # [B, T]
-    length: jnp.ndarray      # [B] committed tokens per row
-    dcache: Any
-    tcache: Any
-    n_accepted: jnp.ndarray  # [B]
-    n_rounds: jnp.ndarray    # scalar
-    active: Optional[jnp.ndarray] = None  # [B] bool — frozen rows commit
-                                          # nothing; None = all rows live
-
-
-def _gather_last(tokens, length):
-    """tokens[b, length[b]-1] for each row."""
-    return jnp.take_along_axis(tokens, (length - 1)[:, None], axis=1)[:, 0]
-
-
-def _scatter_commit(tokens, length, out_tokens, n_emitted, gamma):
-    """Write each row's emitted prefix at its own offset."""
-    B, T = tokens.shape
-    pos = jnp.arange(gamma + 1)[None, :]                     # [1, G+1]
-    cols = length[:, None] + pos                             # [B, G+1]
-    keep = pos < n_emitted[:, None]
-    cols = jnp.clip(cols, 0, T - 1)
-    rows = jnp.arange(B)[:, None]
-    cur = tokens[rows, cols]
-    vals = jnp.where(keep, out_tokens, cur)
-    return tokens.at[rows, cols].set(vals.astype(tokens.dtype))
+    greedy: bool = True
+    temperature: float = 1.0
+    draft_policy: str = "linear"        # DraftPolicy seam (cached rounds are
+    draft_k: int = 2                    # linear today; multi = roadmap/tree)
 
 
 class BatchedSpecEngine:
@@ -74,56 +56,21 @@ class BatchedSpecEngine:
         self.target = target_model
         self.drafter = drafter_model
         self.ecfg = ecfg
+        self._round_spec = rounds.RoundSpec(
+            gamma=ecfg.gamma, greedy=ecfg.greedy,
+            temperature=ecfg.temperature, commit="per_row", use_cache=True,
+            policy=rounds.make_policy(ecfg.draft_policy, ecfg.draft_k))
         self._round_jit = None
 
     # --------------------------------------------------------------- round
     def round(self, params_t, params_d, st: RowState) -> RowState:
-        G = self.ecfg.gamma
-        B = st.tokens.shape[0]
-        t_last = _gather_last(st.tokens, st.length)
-        # round-level live-token bound for paged block-scan reads: the round
-        # writes at index length-1, so after i+1 single-token draft steps the
-        # batch-max resident length is max(length)+i; the gamma+1-token verify
-        # ends at max(length)+G. Only ACTIVE rows count — a finished row keeps
-        # its (possibly much larger) final length but commits nothing and its
-        # blocks are already freed, so letting it drive the bound would drag
-        # every remaining round back up to its dead length. Ring caches
-        # ignore the bound.
-        live0 = (jnp.max(jnp.where(st.active, st.length, 1))
-                 if st.active is not None else jnp.max(st.length))
-
-        def dstep(carry, i):
-            tok, cache = carry
-            logits, cache, _ = self.drafter.apply(params_d, tok[:, None], cache,
-                                                  logits_slice="last",
-                                                  max_live=live0 + i)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            return (nxt, cache), nxt
-
-        (_, dcache), drafts = jax.lax.scan(dstep, (t_last, st.dcache),
-                                           jnp.arange(G))
-        drafts = jnp.moveaxis(drafts, 0, 1)                  # [B, G]
-
-        verify_in = jnp.concatenate([t_last[:, None], drafts], axis=1)
-        p_logits, tcache, _ = self.target.apply(params_t, verify_in, st.tcache,
-                                                max_live=live0 + G)
-        res = acceptance.verify_greedy(drafts, p_logits)
-
-        active = (st.active if st.active is not None
-                  else jnp.ones((B,), bool))
-        n_emitted = jnp.where(active, res.n_emitted, 0)
-        tokens = _scatter_commit(st.tokens, st.length, res.out_tokens,
-                                 n_emitted, G)
-        new_len = st.length + n_emitted                      # PER ROW
-        # per-row rollback: cache index vectors point at committed-1 per row
-        tcache = {**tcache, "index": (new_len - 1).astype(jnp.int32)}
-        dcache = {**dcache, "index": (new_len - 1).astype(jnp.int32)}
-        return RowState(tokens, new_len, dcache, tcache,
-                        st.n_accepted + jnp.where(active, res.n_accepted, 0),
-                        st.n_rounds + 1, active)
+        return rounds.spec_round(self.target, self.drafter, params_t,
+                                 params_d, st, self._round_spec)
 
     # -------------------------------------------------------------- generate
-    def generate(self, params_t, params_d, prompt, max_new_tokens=None):
+    def generate(self, params_t, params_d, prompt, max_new_tokens=None,
+                 key=None):
+        from repro.cache.ops import RING
         e = self.ecfg
         max_new = max_new_tokens or e.max_new_tokens
         B, P = prompt.shape
@@ -132,18 +79,22 @@ class BatchedSpecEngine:
         buf = jax.lax.dynamic_update_slice(buf, prompt.astype(jnp.int32), (0, 0))
 
         slack = e.gamma + 2
-        tcache = self.target.init_cache(B, self.target.cache_len(max_len),
-                                        spec_slack=slack)
-        dcache = self.drafter.init_cache(B, self.drafter.cache_len(max_len),
-                                         spec_slack=slack)
+        tcache = RING.init(self.target, B, max_len=max_len, spec_slack=slack)
+        dcache = RING.init(self.drafter, B, max_len=max_len, spec_slack=slack)
         _, tcache, _ = self.target.apply(params_t, prompt[:, :-1], tcache)
         _, dcache, _ = self.drafter.apply(params_d, prompt[:, :-1], dcache)
         # promote shared scalar index -> per-row vector
         tcache = {**tcache, "index": jnp.full((B,), P - 1, jnp.int32)}
         dcache = {**dcache, "index": jnp.full((B,), P - 1, jnp.int32)}
-        st = RowState(buf, jnp.full((B,), P, jnp.int32), dcache, tcache,
-                      jnp.zeros((B,), jnp.int32), jnp.zeros((), jnp.int32),
-                      jnp.ones((B,), bool))
+        if key is None and not e.greedy:
+            key = jax.random.PRNGKey(0)
+        st = RowState(tokens=buf, length=jnp.full((B,), P, jnp.int32),
+                      dcache=dcache, tcache=tcache,
+                      key=key if not e.greedy else None,
+                      active=jnp.ones((B,), bool),
+                      n_rounds=jnp.zeros((), jnp.int32),
+                      n_accepted=jnp.zeros((B,), jnp.int32),
+                      n_drafted=jnp.zeros((), jnp.int32))
 
         target_len = P + max_new
         if self._round_jit is None:

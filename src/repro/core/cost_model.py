@@ -46,6 +46,45 @@ def expected_accepted(alpha: float, gamma: int) -> float:
     return (1.0 - alpha ** (gamma + 1)) / (1.0 - alpha)
 
 
+def multi_draft_gain(alpha: float, alpha_topk: float, gamma: int) -> float:
+    """Expected emitted-tokens multiplier of k-candidate drafting over linear
+    drafting at equal gamma (core.rounds.MultiDraftPolicy).
+
+    The k candidates differ only in their FIRST token (drafter top-k
+    alternates, greedy continuations), so the alternates recover exactly the
+    rounds where the drafter's argmax misses but its top-k covers: with
+    probability (alpha_topk − alpha) a recovered chain emits like a linear
+    chain whose head was accepted. k enters ONLY through alpha_topk, which
+    must be P[target argmax ∈ drafter top-k] measured at the SAME k the
+    policy will run (benchmarks/bench_strategies.py reports it).
+    """
+    e1 = expected_accepted(alpha, gamma)
+    lift = max(float(alpha_topk) - float(alpha), 0.0)
+    ek = e1 + lift * expected_accepted(alpha, max(gamma - 1, 0))
+    return ek / e1
+
+
+def multi_draft_speedup(alpha: float, alpha_topk: float, gamma: int,
+                        c: float, k: int,
+                        stack_cost: float = 0.35) -> float:
+    """Round-speedup of MultiDraftPolicy(k) over linear at equal (γ, c).
+
+    Per-phase cost in the recompute (no-cache) mode where multi-draft runs:
+    a linear round is γ drafter passes + 1 target verify = γ·c + 1; the
+    multi round's FIRST draft step runs unstacked (the chains branch on its
+    top-k), then γ−1 draft steps and the verify stack the k candidates on
+    the batch axis at ``m = 1 + (k−1)·stack_cost`` relative cost each —
+    ``stack_cost`` < 1 is the vectorization discount of widening a batch
+    instead of running a second pass (measure it: bench_strategies.py).
+    ``alpha_topk`` must be measured at this k (see multi_draft_gain).
+    Speedup = emitted gain / relative round cost."""
+    gain = multi_draft_gain(alpha, alpha_topk, gamma)
+    m = 1.0 + (k - 1) * float(stack_cost)
+    cost_lin = gamma * c + 1.0
+    cost_multi = c * (1.0 + (gamma - 1) * m) + m
+    return gain * cost_lin / cost_multi
+
+
 def feasible(alpha: float, c: float) -> bool:
     """Paper §II-B: c < α must hold for ANY γ to give S > 1."""
     return c < alpha

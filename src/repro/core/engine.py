@@ -1,38 +1,48 @@
-"""Speculative-sampling engines: the paper's §III-D compilation strategies.
+"""Single-stream speculative engine: the paper's §III-D compilation strategies.
+
+``SpecEngine`` is the batch-synchronized specialization of the shared
+speculative round core (``core/rounds.py``): every round drafts, verifies,
+commits and rolls back through ``rounds.spec_round`` with
+``commit="batch_min"`` — the batch-minimum emitted length is committed,
+which preserves the target distribution exactly (discarded acceptances are
+re-drafted) and is exact standard speculative sampling at B=1, the paper's
+operating point. The per-row generalization is ``core/batched_engine.py``;
+both engines are shells over the same round.
 
 Two strategies, mirroring Fig. 3 / Fig. 4:
 
-  * MONOLITHIC — the entire speculative round (draft loop + verification +
-    acceptance + cache rollback) is ONE jitted XLA program; drafter and target
-    carry their own shardings ("device affinities") and GSPMD stitches the
-    pipeline. This is the paper's single-module design that IREE 3.6 could not
-    yet deploy; XLA can.
-  * MODULAR — drafter step, target verify, and acceptance are SEPARATE jitted
-    callables orchestrated from host Python (the paper's shipped design). The
-    jit-boundary/host round-trips are the "API call overhead" the paper blames
-    for its 4% deviation; benchmarks/bench_strategies.py measures ours.
+  * MONOLITHIC — the entire speculative round loop is ONE jitted XLA
+    program; drafter and target carry their own shardings ("device
+    affinities") and GSPMD stitches the pipeline. This is the paper's
+    single-module design that IREE 3.6 could not yet deploy; XLA can.
+  * MODULAR — the round is a separate jitted callable orchestrated from
+    host Python (the paper's shipped design). The jit-boundary/host
+    round-trips are the "API call overhead" the paper blames for its 4%
+    deviation; benchmarks/bench_strategies.py measures ours.
 
 Two cache modes:
 
   * use_cache=False — paper-faithful (§IV: "no KV cache is enabled"): every
     forward recomputes the whole fixed-size token buffer. Used for the paper
-    validation benches.
-  * use_cache=True  — production path: KV/state caches with O(1)/trail rollback.
-
-Batching: rounds are batch-synchronized; with B > 1 the committed length per
-round is the batch-minimum emitted length. This preserves the target
-distribution exactly (discarded acceptances are simply re-drafted) and is exact
-standard speculative sampling at B=1, the paper's operating point.
+    validation benches, and the mode where ``draft_policy="multi"``
+    (k-candidate drafting) is available.
+  * use_cache=True  — production path: KV/state caches with O(1)/trail
+    rollback via the CacheOps seam (repro.cache.ops).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import acceptance
+from repro.core import rounds
+from repro.core.rounds import (RoundState, _slice_logits, _slice_tokens,
+                               _write_col)
+
+# Back-compat alias: the engine's generation state IS the round core's.
+GenState = RoundState
 
 
 @dataclass(frozen=True)
@@ -42,78 +52,8 @@ class EngineConfig:
     temperature: float = 1.0
     use_cache: bool = False             # False = paper-faithful mode
     strategy: str = "monolithic"        # or "modular"
-
-
-class GenState(NamedTuple):
-    tokens: jnp.ndarray     # [B, T] token buffer (committed prefix + scratch)
-    length: jnp.ndarray     # scalar int32 — committed tokens (batch-synchronized)
-    key: jnp.ndarray
-    n_rounds: jnp.ndarray   # scalar int32
-    n_accepted: jnp.ndarray # scalar int32 — total accepted draft tokens
-    n_drafted: jnp.ndarray  # scalar int32
-    dcache: Any = None
-    tcache: Any = None
-    extras_t: Any = None    # modality extras for the target (e.g. encdec cross)
-    extras_d: Any = None
-    t_off: Any = 0          # cache-index offset vs text length (VLM vision prefix)
-    d_off: Any = 0
-
-
-# ------------------------------------------------------------------- helpers
-def _write_col(tokens, pos, vals):
-    """tokens[:, pos] = vals (pos is a traced scalar)."""
-    return jax.lax.dynamic_update_slice(
-        tokens, vals.astype(tokens.dtype)[:, None], (0, pos))
-
-
-def _slice_logits(logits, start, width):
-    B, T, V = logits.shape
-    return jax.lax.dynamic_slice(logits, (0, start, 0), (B, width, V))
-
-
-def _slice_tokens(tokens, start, width):
-    B, T = tokens.shape
-    return jax.lax.dynamic_slice(tokens, (0, start), (B, width))
-
-
-def _commit(tokens, length, result, gamma):
-    """Write the batch-min emitted prefix back into the buffer."""
-    n_commit = jnp.min(result.n_emitted)                       # batch-synchronized
-    pos = jnp.arange(gamma + 1)[None, :]
-    window = _slice_tokens(tokens, length, gamma + 1)
-    new_window = jnp.where(pos < n_commit, result.out_tokens, window)
-    tokens = jax.lax.dynamic_update_slice(tokens, new_window.astype(tokens.dtype),
-                                          (0, length))
-    return tokens, length + n_commit, n_commit
-
-
-def _state_leaves(cache):
-    """Small recurrent-state leaves (state/conv) — the only parts of a cache
-    that need a per-step trail; KV ring buffers roll back by index."""
-    from repro.models.specs import _path_str
-    out = {}
-
-    def walk(path, leaf):
-        ps = _path_str(path)
-        if ps.split("/")[-1] in ("state", "conv"):
-            out[ps] = leaf
-        return leaf
-
-    jax.tree_util.tree_map_with_path(walk, cache)
-    return out
-
-
-def _restore_state_leaves(cache, snaps, j):
-    """Rebuild cache with state leaves from scan-stacked snapshot j."""
-    from repro.models.specs import _path_str
-
-    def fix(path, leaf):
-        ps = _path_str(path)
-        if ps in snaps:
-            return jnp.take(snaps[ps], j, axis=0)
-        return leaf
-
-    return jax.tree_util.tree_map_with_path(fix, cache)
+    draft_policy: str = "linear"        # or "multi" (greedy no-cache only)
+    draft_k: int = 2                    # candidates per row for "multi"
 
 
 # ==================================================================== engine
@@ -125,126 +65,54 @@ class SpecEngine:
         self.drafter = drafter_model
         self.ecfg = ecfg
         self.d_stateful = drafter_model.family in ("ssm", "hybrid")
+        self._policy = rounds.make_policy(ecfg.draft_policy, ecfg.draft_k)
+        self._specs: Dict[bool, rounds.RoundSpec] = {}
         self._round_jit = None
         self._run_jit = {}       # (target_len,) -> jitted monolithic generate
 
-    # -------------------------------------------------------- no-cache round
+    def _spec(self, use_cache: bool) -> rounds.RoundSpec:
+        if use_cache not in self._specs:
+            e = self.ecfg
+            self._specs[use_cache] = rounds.RoundSpec(
+                gamma=e.gamma, greedy=e.greedy, temperature=e.temperature,
+                commit="batch_min", use_cache=use_cache,
+                d_stateful=self.d_stateful if use_cache else False,
+                policy=self._policy)
+        return self._specs[use_cache]
+
+    # ------------------------------------------------------------- the round
+    # Both rounds are the shared core with batch-synchronized commits; the
+    # methods remain so callers can jit the mode they need directly.
     def round_nocache(self, params_t, params_d, state: GenState) -> GenState:
-        e = self.ecfg
-        G = e.gamma
-        tokens, key, length = state.tokens, state.key, state.length
-        ex_t = state.extras_t or {}
-        ex_d = state.extras_d or {}
+        return rounds.spec_round(self.target, self.drafter, params_t,
+                                 params_d, state, self._spec(False))
 
-        def dstep(carry, i):
-            toks, k = carry
-            logits, _, _ = self.drafter.apply(params_d, toks, **ex_d)
-            pos = length - 1 + i
-            q_i = _slice_logits(logits, pos, 1)[:, 0]          # [B, V]
-            k, ks = jax.random.split(k)
-            if e.greedy:
-                d_i = jnp.argmax(q_i, axis=-1)
-            else:
-                d_i = jax.random.categorical(ks, q_i / e.temperature, axis=-1)
-            toks = _write_col(toks, pos + 1, d_i)
-            return (toks, k), q_i
-
-        (tokens, key), q_logits = jax.lax.scan(dstep, (tokens, key), jnp.arange(G))
-        q_logits = jnp.moveaxis(q_logits, 0, 1)                # [B, G, V]
-
-        p_full, _, _ = self.target.apply(params_t, tokens, **ex_t)
-        p_logits = _slice_logits(p_full, length - 1, G + 1)
-        drafts = _slice_tokens(tokens, length, G)
-        key, kv = jax.random.split(key)
-        if e.greedy:
-            res = acceptance.verify_greedy(drafts, p_logits)
-        else:
-            res = acceptance.verify_stochastic(kv, drafts, q_logits, p_logits,
-                                               e.temperature)
-        tokens, new_len, n_commit = _commit(tokens, length, res, G)
-        return state._replace(tokens=tokens, length=new_len, key=key,
-                              n_rounds=state.n_rounds + 1,
-                              n_accepted=state.n_accepted + n_commit - 1,
-                              n_drafted=state.n_drafted + G)
-
-    # ---------------------------------------------------------- cached round
     def round_cached(self, params_t, params_d, state: GenState) -> GenState:
-        e = self.ecfg
-        G = e.gamma
-        ex_t = state.extras_t or {}
-        t_last = _slice_tokens(state.tokens, state.length - 1, 1)[:, 0]
-
-        # --- draft scan (gamma steps; +1 for stateful drafters to extend trail)
-        def dstep(carry, i):
-            tok, cache, k = carry
-            logits, cache, _ = self.drafter.apply(
-                params_d, tok[:, None], cache, logits_slice="last",
-                **(state.extras_d or {}))
-            q = logits[:, -1]
-            k, ks = jax.random.split(k)
-            if e.greedy:
-                nxt = jnp.argmax(q, axis=-1)
-            else:
-                nxt = jax.random.categorical(ks, q / e.temperature, axis=-1)
-            nxt = nxt.astype(jnp.int32)
-            snap = _state_leaves(cache) if self.d_stateful else 0
-            return (nxt, cache, k), (nxt, q, snap)
-
-        n_steps = G + 1 if self.d_stateful else G
-        (_, dcache, key), (drafts, q_logits, snaps) = jax.lax.scan(
-            dstep, (t_last, state.dcache, state.key), jnp.arange(n_steps))
-        drafts = jnp.moveaxis(drafts, 0, 1)[:, :G]             # [B, G]
-        q_logits = jnp.moveaxis(q_logits, 0, 1)[:, :G]
-
-        # --- target verify: consume [t_last, d_1..d_G]
-        verify_in = jnp.concatenate([t_last[:, None], drafts], axis=1)
-        p_logits, tcache, _ = self.target.apply(params_t, verify_in, state.tcache,
-                                                want_trail=True, **ex_t)
-        key, kv = jax.random.split(key)
-        if e.greedy:
-            res = acceptance.verify_greedy(drafts, p_logits)
-        else:
-            res = acceptance.verify_stochastic(kv, drafts, q_logits, p_logits,
-                                               e.temperature)
-        tokens, new_len, n_commit = _commit(state.tokens, state.length, res, G)
-        n_acc = n_commit - 1
-
-        # --- rollbacks: caches end at (committed length - 1) consumed inputs,
-        #     shifted by any modality prefix the cache also holds (VLM)
-        tcache = self.target.rollback(tcache, new_len - 1 + state.t_off, G + 1)
-        if self.d_stateful:
-            # snapshot j = state after consuming j+1 inputs; we need n_acc+1
-            dcache = _restore_state_leaves(dcache, snaps, n_acc)
-            dcache = {**dcache, "index": (new_len - 1 + state.d_off).astype(jnp.int32)}
-        else:
-            from repro.cache import kv_cache
-            dcache = kv_cache.rollback(dcache, new_len - 1 + state.d_off)
-        return state._replace(tokens=tokens, length=new_len, key=key,
-                              n_rounds=state.n_rounds + 1,
-                              n_accepted=state.n_accepted + n_acc,
-                              n_drafted=state.n_drafted + G,
-                              dcache=dcache, tcache=tcache)
+        return rounds.spec_round(self.target, self.drafter, params_t,
+                                 params_d, state, self._spec(True))
 
     # --------------------------------------------------------------- prefill
     def prefill(self, params_t, params_d, prompt, max_len, extras_t=None,
                 extras_d=None, key=None):
         """Build GenState from a [B, P] prompt. Caches consume prompt[:, :-1]."""
+        from repro.cache.ops import RING
         e = self.ecfg
         B, P = prompt.shape
         key = key if key is not None else jax.random.PRNGKey(0)
         buf = jnp.zeros((B, max_len), jnp.int32)
         buf = jax.lax.dynamic_update_slice(buf, prompt.astype(jnp.int32), (0, 0))
-        st = GenState(buf, jnp.asarray(P, jnp.int32), key,
-                      jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
-                      jnp.zeros((), jnp.int32), extras_t=extras_t,
-                      extras_d=extras_d)
+        # distinct zero buffers: the monolithic path donates the state, and
+        # donation rejects aliased leaves
+        st = GenState(tokens=buf, length=jnp.asarray(P, jnp.int32), key=key,
+                      n_rounds=jnp.zeros((), jnp.int32),
+                      n_accepted=jnp.zeros((), jnp.int32),
+                      n_drafted=jnp.zeros((), jnp.int32),
+                      extras_t=extras_t, extras_d=extras_d)
         if not e.use_cache:
             return st
         slack = e.gamma + 2
-        tcache = self.target.init_cache(B, self.target.cache_len(max_len),
-                                        spec_slack=slack)
-        dcache = self.drafter.init_cache(B, self.drafter.cache_len(max_len),
-                                         spec_slack=slack)
+        tcache = RING.init(self.target, B, max_len=max_len, spec_slack=slack)
+        dcache = RING.init(self.drafter, B, max_len=max_len, spec_slack=slack)
         _, tcache, aux_t = self.target.apply(params_t, prompt[:, :-1], tcache,
                                              **(extras_t or {}))
         _, dcache, aux_d = self.drafter.apply(params_d, prompt[:, :-1], dcache,

@@ -1,0 +1,535 @@
+"""One batch-native speculative round core: draft -> verify -> commit -> rollback.
+
+Every speculative execution path in the repo — the single-stream
+``SpecEngine`` (batch-synchronized commits), the per-row
+``BatchedSpecEngine``, the fixed-shape ``ContinuousSpecServer`` and the
+paged ``PagedSpecServer`` — drives THIS module's ``spec_round()`` /
+``ar_round()``. The round is generic over three seams:
+
+  * **cache layout** via the ``CacheOps`` protocol (``repro.cache.ops``):
+    ring buffers and paged block pools both expose
+    init/spec/write/rollback/live_bound, so the round neither knows nor
+    cares where the KV lives;
+  * **draft strategy** via ``DraftPolicy``: ``LinearDraftPolicy`` is classic
+    γ-step speculative sampling (Leviathan et al.); ``MultiDraftPolicy``
+    drafts k candidate chains per row (top-k first-token alternates, greedy
+    continuations), verifies all k in ONE stacked target pass, and commits
+    the best accepted prefix — greedy mode, recompute (no-cache)
+    verification (cached k-candidate verification needs tree attention —
+    roadmap);
+  * **commit semantics**: ``"per_row"`` (each row commits its own accepted
+    prefix — serving) or ``"batch_min"`` (batch-synchronized commit of the
+    batch-minimum emitted length — exact standard speculative sampling at
+    B=1, the paper's operating point).
+
+Greedy verification dispatches to the fused Pallas argmax kernel
+(``kernels.spec_verify``) on TPU and to the jnp oracle
+(``core.acceptance``) elsewhere; both are token-identical (tested in
+interpret mode).
+
+The three phases are exposed separately (``phase_fns``) so
+``benchmarks/bench_strategies.py`` can time draft/verify/commit
+individually — the phase functions ARE the round: ``spec_round`` is their
+composition, nothing more.
+
+CI grep guard: the draft-loop body is called ``dstep`` and must exist only
+in this file — a second copy anywhere else is the duplication this module
+deleted growing back.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache import ops as cache_ops
+from repro.core import acceptance
+
+COMMIT_MODES = ("batch_min", "per_row")
+
+
+# ==================================================================== state
+class RoundState(NamedTuple):
+    """The one generation state every engine threads through the round core.
+
+    ``length`` (and the derived stats) may be a scalar (batch-synchronized
+    engines: all rows share one committed length) or a per-row ``[B]``
+    vector (per-row/serving engines). ``active`` marks serving rows that
+    still commit (frozen slots draft along but commit nothing); ``None``
+    means all rows are live. ``t_off``/``d_off`` shift cache indices past
+    any modality prefix the cache also holds (VLM vision tokens).
+    """
+    tokens: jnp.ndarray            # [B, T] token buffer
+    length: jnp.ndarray            # scalar or [B] committed tokens
+    dcache: Any = None
+    tcache: Any = None
+    key: Any = None                # PRNG key (sampled mode; None if greedy)
+    active: Any = None             # [B] bool or None (= all rows live)
+    n_rounds: Any = 0              # scalar
+    n_accepted: Any = 0            # scalar (batch_min) or [B] (per_row)
+    n_drafted: Any = 0             # scalar
+    extras_t: Any = None           # modality extras (encdec cross, ...)
+    extras_d: Any = None
+    t_off: Any = 0                 # cache-index offset vs text length (VLM)
+    d_off: Any = 0
+
+
+class DraftOut(NamedTuple):
+    """Draft-phase output: K candidate chains of gamma tokens per row."""
+    drafts: jnp.ndarray            # [B, K, G] drafted tokens
+    q_logits: Any                  # [B, K, G, V] drafter logits or None
+    cand_tokens: Any               # [B, K, T] no-cache candidate buffers
+    t_last: Any                    # [B] last committed token (cached path)
+    dcache: Any = None
+    snaps: Any = None              # stateful-drafter state trail (or 0)
+    key: Any = None
+
+
+class VerifyOut(NamedTuple):
+    """Verify-phase output: per-row acceptance + the commit base buffer."""
+    res: acceptance.VerifyResult   # n_accepted/out_tokens/n_emitted, [B]-shaped
+    base_tokens: jnp.ndarray       # [B, T] buffer the commit scatters into
+    tcache: Any = None
+    key: Any = None
+
+
+# ================================================================== helpers
+def _write_col(tokens, pos, vals):
+    """tokens[:, pos] = vals (pos is a traced scalar)."""
+    return jax.lax.dynamic_update_slice(
+        tokens, vals.astype(tokens.dtype)[:, None], (0, pos))
+
+
+def _slice_logits(logits, start, width):
+    B, T, V = logits.shape
+    return jax.lax.dynamic_slice(logits, (0, start, 0), (B, width, V))
+
+
+def _slice_tokens(tokens, start, width):
+    B, T = tokens.shape
+    return jax.lax.dynamic_slice(tokens, (0, start), (B, width))
+
+
+def _gather_last(tokens, length):
+    """tokens[b, length[b]-1] per row (length scalar or [B])."""
+    B = tokens.shape[0]
+    lvec = jnp.broadcast_to(jnp.asarray(length), (B,))
+    return jnp.take_along_axis(tokens, (lvec - 1)[:, None], axis=1)[:, 0]
+
+
+def _state_leaves(cache):
+    """Small recurrent-state leaves (state/conv) — the only parts of a cache
+    that need a per-step trail; KV ring buffers roll back by index."""
+    from repro.models.specs import _path_str
+    out = {}
+
+    def walk(path, leaf):
+        ps = _path_str(path)
+        if ps.split("/")[-1] in ("state", "conv"):
+            out[ps] = leaf
+        return leaf
+
+    jax.tree_util.tree_map_with_path(walk, cache)
+    return out
+
+
+def _restore_state_leaves(cache, snaps, j):
+    """Rebuild cache with state leaves from scan-stacked snapshot j."""
+    from repro.models.specs import _path_str
+
+    def fix(path, leaf):
+        ps = _path_str(path)
+        if ps in snaps:
+            return jnp.take(snaps[ps], j, axis=0)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(fix, cache)
+
+
+def _take_candidate(x, win):
+    """x: [B, K, ...] -> winner candidate per row: [B, ...]."""
+    B, K = x.shape[:2]
+    idx = win.reshape((B,) + (1,) * (x.ndim - 1))
+    return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+
+# ================================================================= policies
+@dataclass(frozen=True)
+class LinearDraftPolicy:
+    """Classic speculative sampling: ONE chain of gamma sequential draft
+    steps per row. Works cached (single-token incremental steps) and
+    no-cache (full-buffer recompute per step), greedy or sampled."""
+    name: str = "linear"
+    k: int = 1
+
+    def draft_cached(self, drafter, params_d, state: RoundState, spec,
+                     live0) -> DraftOut:
+        G = spec.gamma
+        ex_d = state.extras_d or {}
+        t_last = _gather_last(state.tokens, state.length)
+
+        def dstep(carry, i):
+            tok, cache, k = carry
+            ml = None if live0 is None else live0 + i
+            logits, cache, _ = drafter.apply(params_d, tok[:, None], cache,
+                                             logits_slice="last",
+                                             max_live=ml, **ex_d)
+            q = logits[:, -1]
+            if spec.greedy:
+                nxt = jnp.argmax(q, axis=-1)
+            else:
+                k, ks = jax.random.split(k)
+                nxt = jax.random.categorical(ks, q / spec.temperature,
+                                             axis=-1)
+            nxt = nxt.astype(jnp.int32)
+            snap = _state_leaves(cache) if spec.d_stateful else 0
+            return (nxt, cache, k), (nxt, q, snap)
+
+        # +1 step for stateful drafters so the snapshot trail covers the
+        # full-acceptance rollback target
+        n_steps = G + 1 if spec.d_stateful else G
+        (_, dcache, key), (drafts, q_logits, snaps) = jax.lax.scan(
+            dstep, (t_last, state.dcache, state.key), jnp.arange(n_steps))
+        drafts = jnp.moveaxis(drafts, 0, 1)[:, :G]             # [B, G]
+        q_logits = jnp.moveaxis(q_logits, 0, 1)[:, :G]
+        return DraftOut(drafts=drafts[:, None], q_logits=q_logits[:, None],
+                        cand_tokens=None, t_last=t_last, dcache=dcache,
+                        snaps=snaps, key=key)
+
+    def draft_nocache(self, drafter, params_d, state: RoundState,
+                      spec) -> DraftOut:
+        G = spec.gamma
+        ex_d = state.extras_d or {}
+        length = state.length
+
+        def dstep(carry, i):
+            toks, k = carry
+            logits, _, _ = drafter.apply(params_d, toks, **ex_d)
+            pos = length - 1 + i
+            q_i = _slice_logits(logits, pos, 1)[:, 0]          # [B, V]
+            if spec.greedy:
+                d_i = jnp.argmax(q_i, axis=-1)
+            else:
+                k, ks = jax.random.split(k)
+                d_i = jax.random.categorical(ks, q_i / spec.temperature,
+                                             axis=-1)
+            toks = _write_col(toks, pos + 1, d_i)
+            return (toks, k), q_i
+
+        (cand, key), q_logits = jax.lax.scan(
+            dstep, (state.tokens, state.key), jnp.arange(G))
+        q_logits = jnp.moveaxis(q_logits, 0, 1)                # [B, G, V]
+        drafts = _slice_tokens(cand, length, G)
+        return DraftOut(drafts=drafts[:, None], q_logits=q_logits[:, None],
+                        cand_tokens=cand[:, None], t_last=None, key=key)
+
+
+@dataclass(frozen=True)
+class MultiDraftPolicy:
+    """k parallel draft candidates per row: the drafter's top-k FIRST tokens
+    each continued greedily, all k verified in ONE stacked target pass, the
+    best accepted prefix committed. Recovers first-position drafter misses
+    the target's argmax would have covered — the low-acceptance regime where
+    linear drafting stalls at ~1 token/round.
+
+    Greedy-only (best-of-k selection is not distribution-preserving under
+    stochastic acceptance) and no-cache only (a cached verify would need
+    k-replicated target rows or tree attention — the seam this policy
+    proves is exactly where tree speculation plugs in, see ROADMAP).
+    Token-identity: every candidate's emission is a prefix of THE target
+    greedy continuation (accepted drafts equal the target argmax at each
+    position given the shared committed prefix), so committing the longest
+    one is still exact greedy decoding.
+    """
+    name: str = "multi"
+    k: int = 2
+
+    def draft_cached(self, drafter, params_d, state, spec, live0):
+        raise NotImplementedError(
+            "multi-draft needs recompute (no-cache) verification; cached "
+            "k-candidate verify requires tree attention (roadmap)")
+
+    def draft_nocache(self, drafter, params_d, state: RoundState,
+                      spec) -> DraftOut:
+        assert spec.greedy, "MultiDraftPolicy is greedy-only"
+        K, G = self.k, spec.gamma
+        tokens, length = state.tokens, state.length
+        B, T = tokens.shape
+        ex_d = state.extras_d or {}
+        ex_k = {kk: jnp.repeat(v, K, axis=0) for kk, v in ex_d.items()}
+
+        # chain heads: the drafter's top-k next tokens after the prefix
+        logits, _, _ = drafter.apply(params_d, tokens, **ex_d)
+        q0 = _slice_logits(logits, length - 1, 1)[:, 0]        # [B, V]
+        _, heads = jax.lax.top_k(q0, K)                        # [B, K]
+        cand = jnp.repeat(tokens[:, None], K, axis=1)          # [B, K, T]
+        cand = _write_col(cand.reshape(B * K, T), length,
+                          heads.reshape(B * K)).reshape(B, K, T)
+
+        def dstep(cand, i):
+            flat = cand.reshape(B * K, T)
+            lg, _, _ = drafter.apply(params_d, flat, **ex_k)
+            pos = length - 1 + i
+            q_i = _slice_logits(lg, pos, 1)[:, 0]              # [B*K, V]
+            d_i = jnp.argmax(q_i, axis=-1).astype(jnp.int32)
+            return _write_col(flat, pos + 1, d_i).reshape(B, K, T), None
+
+        if G > 1:
+            cand, _ = jax.lax.scan(dstep, cand, jnp.arange(1, G))
+        drafts = _slice_tokens(cand.reshape(B * K, T),
+                               length, G).reshape(B, K, G)
+        return DraftOut(drafts=drafts, q_logits=None, cand_tokens=cand,
+                        t_last=None, key=state.key)
+
+
+def make_policy(name: str, k: int = 2):
+    if name == "linear":
+        return LinearDraftPolicy()
+    if name == "multi":
+        if k < 2:
+            raise ValueError(f"multi-draft needs k >= 2 candidates, got {k}")
+        return MultiDraftPolicy(k=k)
+    raise ValueError(f"unknown draft policy {name!r} "
+                     f"(expected 'linear' or 'multi')")
+
+
+# ===================================================================== spec
+@dataclass(frozen=True)
+class RoundSpec:
+    """Static parameterization of one speculative round."""
+    gamma: int = 4
+    greedy: bool = True
+    temperature: float = 1.0
+    commit: str = "batch_min"              # COMMIT_MODES
+    use_cache: bool = True
+    d_stateful: bool = False               # drafter carries recurrent state
+    policy: Any = field(default_factory=LinearDraftPolicy)
+    fused_verify: Optional[bool] = None    # None = auto (TPU only)
+
+    def __post_init__(self):
+        if self.commit not in COMMIT_MODES:
+            raise ValueError(f"commit must be one of {COMMIT_MODES}")
+        if self.policy.k > 1:
+            if not self.greedy:
+                raise ValueError("multi-draft is greedy-only")
+            if self.use_cache:
+                raise ValueError("multi-draft needs no-cache verification")
+        if self.commit == "per_row" and not self.use_cache:
+            raise ValueError("per-row commits need per-row cache indices "
+                             "(use_cache=True)")
+        if self.d_stateful and (not self.use_cache
+                                or self.commit != "batch_min"):
+            raise ValueError("stateful drafters need the cached "
+                             "batch-synchronized path (docs/DESIGN.md §5)")
+
+    @property
+    def drafted_per_round(self) -> int:
+        # CHAIN-length accounting, independent of policy.k: alpha_hat =
+        # accepted/drafted must estimate the per-position acceptance rate of
+        # the verified (winning) chain — the alpha Eq. (1) and the
+        # GammaController consume. k-candidate work cost is the cost model's
+        # stack_cost concern, not an acceptance-rate deflator.
+        return self.gamma
+
+
+def _live0(state: RoundState, spec: RoundSpec):
+    """Round-level live-token bound for paged block-scan reads (None for
+    ring caches and batch-synchronized rounds, which mask on positions)."""
+    if not spec.use_cache or spec.commit != "per_row":
+        return None
+    return cache_ops.ops_for(state.tcache).live_bound(state.length,
+                                                      state.active)
+
+
+# =================================================================== phases
+def draft_phase(drafter, params_d, state: RoundState,
+                spec: RoundSpec) -> DraftOut:
+    """Phase 1: run the draft policy (the ONLY draft loop in the repo)."""
+    if spec.use_cache:
+        return spec.policy.draft_cached(drafter, params_d, state, spec,
+                                        _live0(state, spec))
+    return spec.policy.draft_nocache(drafter, params_d, state, spec)
+
+
+def _greedy_verify(drafts, p_logits, spec: RoundSpec):
+    """Greedy acceptance: fused Pallas argmax kernel on TPU (or when forced
+    — interpret-mode parity tests), jnp oracle elsewhere."""
+    fused = (spec.fused_verify if spec.fused_verify is not None
+             else jax.default_backend() == "tpu")
+    if fused:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.verify_greedy(drafts, p_logits)
+    return acceptance.verify_greedy(drafts, p_logits)
+
+
+def verify_phase(target, params_t, state: RoundState, d: DraftOut,
+                 spec: RoundSpec) -> VerifyOut:
+    """Phase 2: one target pass over the draft(s) + acceptance + (for k>1)
+    best-candidate selection."""
+    G = spec.gamma
+    K = d.drafts.shape[1]
+    ex_t = state.extras_t or {}
+    key = d.key
+
+    if spec.use_cache:                     # incremental: [t_last, d_1..d_G]
+        drafts = d.drafts[:, 0]
+        verify_in = jnp.concatenate([d.t_last[:, None], drafts], axis=1)
+        live0 = _live0(state, spec)
+        ml = None if live0 is None else live0 + G
+        p_logits, tcache, _ = target.apply(params_t, verify_in, state.tcache,
+                                           want_trail=True, max_live=ml,
+                                           **ex_t)
+        if spec.greedy:
+            res = _greedy_verify(drafts, p_logits, spec)
+        else:
+            key, kv = jax.random.split(key)
+            res = acceptance.verify_stochastic(kv, drafts, d.q_logits[:, 0],
+                                               p_logits, spec.temperature)
+        return VerifyOut(res=res, base_tokens=state.tokens, tcache=tcache,
+                         key=key)
+
+    # recompute: full-buffer target pass over the K stacked candidates
+    B, _, T = d.cand_tokens.shape
+    flat = d.cand_tokens.reshape(B * K, T)
+    ex_flat = (ex_t if K == 1 else
+               {kk: jnp.repeat(v, K, axis=0) for kk, v in ex_t.items()})
+    p_full, _, _ = target.apply(params_t, flat, **ex_flat)
+    p_logits = _slice_logits(p_full, state.length - 1, G + 1)  # [B*K, G+1, V]
+    drafts_flat = d.drafts.reshape(B * K, G)
+    if spec.greedy:
+        res = _greedy_verify(drafts_flat, p_logits, spec)
+        if K > 1:
+            # best accepted prefix wins; ties prefer the drafter-greedy
+            # chain (candidate 0 — jnp.argmax takes the first maximum)
+            win = jnp.argmax(res.n_emitted.reshape(B, K), axis=1)
+            res = acceptance.VerifyResult(
+                _take_candidate(res.n_accepted.reshape(B, K), win),
+                _take_candidate(res.out_tokens.reshape(B, K, G + 1), win),
+                _take_candidate(res.n_emitted.reshape(B, K), win))
+            base = _take_candidate(d.cand_tokens, win)
+            return VerifyOut(res=res, base_tokens=base, tcache=state.tcache,
+                             key=key)
+    else:
+        key, kv = jax.random.split(key)
+        res = acceptance.verify_stochastic(kv, drafts_flat,
+                                           d.q_logits[:, 0], p_logits,
+                                           spec.temperature)
+    return VerifyOut(res=res, base_tokens=d.cand_tokens[:, 0],
+                     tcache=state.tcache, key=key)
+
+
+def _scatter_commit(tokens, length, out_tokens, n_eff, gamma):
+    """THE commit: write each row's emitted prefix at its own offset.
+    ``length`` may be scalar (batch-synchronized) or [B]; the batch-min mode
+    is just this scatter with ``n_eff`` broadcast to the batch minimum."""
+    B, T = tokens.shape
+    pos = jnp.arange(gamma + 1)[None, :]                     # [1, G+1]
+    lvec = jnp.broadcast_to(jnp.asarray(length), (B,))
+    cols = jnp.clip(lvec[:, None] + pos, 0, T - 1)           # [B, G+1]
+    keep = pos < n_eff[:, None]
+    rows = jnp.arange(B)[:, None]
+    cur = tokens[rows, cols]
+    vals = jnp.where(keep, out_tokens, cur)
+    return tokens.at[rows, cols].set(vals.astype(tokens.dtype))
+
+
+def commit_phase(target, state: RoundState, d: DraftOut, v: VerifyOut,
+                 spec: RoundSpec) -> RoundState:
+    """Phase 3: commit the accepted prefix + roll both caches back."""
+    G = spec.gamma
+    res = v.res
+    B = state.tokens.shape[0]
+    ops_d = cache_ops.ops_for(d.dcache)
+    ops_t = cache_ops.ops_for(v.tcache)
+
+    if spec.commit == "per_row":
+        active = (state.active if state.active is not None
+                  else jnp.ones((B,), bool))
+        n_eff = jnp.where(active, res.n_emitted, 0)
+        tokens = _scatter_commit(v.base_tokens, state.length,
+                                 res.out_tokens, n_eff, G)
+        new_len = state.length + n_eff                       # PER ROW
+        tcache = ops_t.rollback(v.tcache, new_len - 1)
+        dcache = ops_d.rollback(d.dcache, new_len - 1)
+        return state._replace(
+            tokens=tokens, length=new_len, key=v.key,
+            dcache=dcache, tcache=tcache,
+            n_rounds=state.n_rounds + 1,
+            n_accepted=state.n_accepted + jnp.where(active, res.n_accepted, 0),
+            n_drafted=state.n_drafted + spec.drafted_per_round)
+
+    # batch_min: commit the batch-minimum emitted length (discarded
+    # acceptances are simply re-drafted; exact at B=1)
+    n_commit = jnp.min(res.n_emitted)
+    n_eff = jnp.broadcast_to(n_commit, (B,))
+    tokens = _scatter_commit(v.base_tokens, state.length, res.out_tokens,
+                             n_eff, G)
+    new_len = state.length + n_commit                        # stays scalar
+    n_acc = n_commit - 1
+    st = state._replace(tokens=tokens, length=new_len, key=v.key,
+                        n_rounds=state.n_rounds + 1,
+                        n_accepted=state.n_accepted + n_acc,
+                        n_drafted=state.n_drafted + spec.drafted_per_round)
+    if not spec.use_cache:
+        return st
+    # caches end at (committed length - 1) consumed inputs, shifted by any
+    # modality prefix the cache also holds (VLM vision tokens)
+    tcache = target.rollback(v.tcache, new_len - 1 + state.t_off, G + 1)
+    if spec.d_stateful:
+        # snapshot j = state after consuming j+1 inputs; we need n_acc+1
+        dcache = _restore_state_leaves(d.dcache, d.snaps, n_acc)
+        dcache = {**dcache,
+                  "index": (new_len - 1 + state.d_off).astype(jnp.int32)}
+    else:
+        dcache = ops_d.rollback(d.dcache, new_len - 1 + state.d_off)
+    return st._replace(dcache=dcache, tcache=tcache)
+
+
+# ==================================================================== rounds
+def spec_round(target, drafter, params_t, params_d, state: RoundState,
+               spec: RoundSpec) -> RoundState:
+    """ONE speculative round: the composition of the three phases."""
+    d = draft_phase(drafter, params_d, state, spec)
+    v = verify_phase(target, params_t, state, d, spec)
+    return commit_phase(target, state, d, v, spec)
+
+
+def ar_round(target, params_t, state: RoundState) -> RoundState:
+    """γ*=0 fallback round: one committed greedy token per active row,
+    target model only (the cost model said drafting does not pay)."""
+    B, T = state.tokens.shape
+    rows = jnp.arange(B)
+    ops_t = cache_ops.ops_for(state.tcache)
+    lvec = jnp.broadcast_to(jnp.asarray(state.length), (B,))
+    t_last = state.tokens[rows, lvec - 1]
+    logits, tcache, _ = target.apply(
+        params_t, t_last[:, None], state.tcache, logits_slice="last",
+        max_live=ops_t.live_bound(state.length, state.active),
+        **(state.extras_t or {}))
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    active = (state.active if state.active is not None
+              else jnp.ones((B,), bool))
+    cols = jnp.clip(lvec, 0, T - 1)
+    cur = state.tokens[rows, cols]
+    tokens = state.tokens.at[rows, cols].set(jnp.where(active, nxt, cur))
+    new_len = state.length + active.astype(jnp.int32)
+    tcache = ops_t.rollback(tcache, new_len - 1)
+    return state._replace(tokens=tokens, length=new_len, tcache=tcache,
+                          n_rounds=state.n_rounds + 1)
+
+
+def phase_fns(target, drafter, spec: RoundSpec):
+    """(draft, verify, commit) callables over the SAME phase code
+    ``spec_round`` composes — jit each for per-phase benchmarking."""
+    def draft(params_d, state):
+        return draft_phase(drafter, params_d, state, spec)
+
+    def verify(params_t, state, d):
+        return verify_phase(target, params_t, state, d, spec)
+
+    def commit(state, d, v):
+        return commit_phase(target, state, d, v, spec)
+
+    return draft, verify, commit

@@ -130,9 +130,12 @@ class ContinuousSpecServer:
         _, dc, _ = eng.drafter.apply(self.params_d, jnp.asarray(prompts[:, :-1]), dc)
         tc = {**tc, "index": jnp.full((B,), P - 1, jnp.int32)}
         dc = {**dc, "index": jnp.full((B,), P - 1, jnp.int32)}
-        self._state = RowState(buf, jnp.full((B,), P, jnp.int32), dc, tc,
-                               jnp.zeros((B,), jnp.int32), jnp.zeros((), jnp.int32),
-                               jnp.ones((B,), bool))
+        self._state = RowState(tokens=buf, length=jnp.full((B,), P, jnp.int32),
+                               dcache=dc, tcache=tc,
+                               active=jnp.ones((B,), bool),
+                               n_rounds=jnp.zeros((), jnp.int32),
+                               n_accepted=jnp.zeros((B,), jnp.int32),
+                               n_drafted=jnp.zeros((), jnp.int32))
         self._slots = first
 
     def run(self):

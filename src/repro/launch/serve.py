@@ -5,85 +5,21 @@ stream of synthetic requests on CPU with the reduced configs; on hardware the
 same loop runs the full configs with the DSE-selected drafter placement.
 
 The driver plans with ``repro.api.Planner`` and executes through the
-``Session`` facade; the ``Server`` class below is the legacy fixed-batch
-wrapper, kept as a deprecated shim for one release (migration: docs/API.md).
+``Session`` facade. (The legacy fixed-batch ``Server`` wrapper this module
+once carried is gone — ``Session.serve`` runs the same grouping loop for
+single/per-row plans; migration: docs/API.md.)
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import EngineConfig, SpecEngine
 from repro.launch import cli_args
-
-
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray
-    max_new_tokens: int
-    submitted: float = 0.0
-    completed: float = 0.0
-    tokens: Optional[np.ndarray] = None
-    stats: dict = field(default_factory=dict)
-
-
-class Server:
-    """DEPRECATED shim: batches compatible requests and drives SpecEngine
-    round-robin. Use ``repro.api.Session.serve`` instead — the facade runs
-    the same grouping loop for single/per-row plans."""
-
-    def __init__(self, target, drafter, params_t, params_d, ecfg: EngineConfig,
-                 max_batch: int = 8):
-        self.engine = SpecEngine(target, drafter, ecfg)
-        self.params_t, self.params_d = params_t, params_d
-        self.max_batch = max_batch
-        self.queue: Deque[Request] = deque()
-        self.done: List[Request] = []
-
-    def submit(self, req: Request):
-        req.submitted = time.time()
-        self.queue.append(req)
-
-    def _batchable(self):
-        """Group by (prompt_len, max_new) so shapes match."""
-        if not self.queue:
-            return []
-        key = (len(self.queue[0].prompt), self.queue[0].max_new_tokens)
-        batch = [r for r in self.queue
-                 if (len(r.prompt), r.max_new_tokens) == key][: self.max_batch]
-        return batch
-
-    def step(self):
-        batch = self._batchable()
-        if not batch:
-            return 0
-        drop = set(id(r) for r in batch)
-        self.queue = deque(r for r in self.queue if id(r) not in drop)
-        prompts = jnp.asarray(np.stack([r.prompt for r in batch]))
-        toks, stats = self.engine.generate(self.params_t, self.params_d,
-                                           prompts, batch[0].max_new_tokens)
-        toks = np.asarray(toks)
-        now = time.time()
-        for i, r in enumerate(batch):
-            r.tokens = toks[i]
-            r.stats = stats
-            r.completed = now
-            self.done.append(r)
-        return len(batch)
-
-    def run(self):
-        while self.queue:
-            self.step()
-        return self.done
 
 
 def main():

@@ -176,8 +176,12 @@ def build_spec_round_step(target: Model, drafter: Model, mesh,
                           shape: ShapeConfig, gamma: int = 4):
     """One monolithic speculative round (draft scan + verify + acceptance +
     rollback) with per-partition device affinities — the paper's technique as a
-    first-class serving step, lowered in the dry-run like any other step."""
-    from repro.core import acceptance
+    first-class serving step, lowered in the dry-run like any other step.
+    Draft and verify are the shared round core's phases (core/rounds.py);
+    only the buffer-less commit epilogue (emit tokens, roll indices) is
+    dry-run-specific."""
+    from repro.cache import ops as cache_ops
+    from repro.core import rounds
     B = shape.global_batch
     S = decode_cache_len(target.cfg, shape)
     pt_shape, pd_shape = params_shape(target), params_shape(drafter)
@@ -189,26 +193,22 @@ def build_spec_round_step(target: Model, drafter: Model, mesh,
     cd_specs = cache_specs(drafter.cfg, cd_shape, pol_d, B)
     tok_spec, _ = io_specs(pol_t, B)
 
-    def spec_round(params_t, params_d, t_last, tcache, dcache):
-        def dstep(carry, _):
-            tok, cache = carry
-            logits, cache, _ = drafter.apply(params_d, tok[:, None], cache,
-                                             logits_slice="last")
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            return (nxt, cache), nxt
+    spec = rounds.RoundSpec(gamma=gamma, greedy=True, commit="batch_min",
+                            use_cache=True)
 
-        (_, dcache), drafts = jax.lax.scan(dstep, (t_last, dcache),
-                                           jnp.arange(gamma))
-        drafts = jnp.moveaxis(drafts, 0, 1)                    # [B, G]
-        verify_in = jnp.concatenate([t_last[:, None], drafts], axis=1)
-        p_logits, tcache, _ = target.apply(params_t, verify_in, tcache)
-        res = acceptance.verify_greedy(drafts, p_logits)
-        n_commit = jnp.min(res.n_emitted)
-        from repro.cache import kv_cache
-        new_index = tcache["index"] - (gamma + 1) + n_commit
-        tcache = kv_cache.rollback(tcache, new_index)
-        dcache = kv_cache.rollback(dcache, new_index)
-        return res.out_tokens, n_commit, tcache, dcache
+    def spec_round(params_t, params_d, t_last, tcache, dcache):
+        # minimal state: the last committed token is the whole visible
+        # buffer (length 1); draft/verify only ever read t_last from it
+        state = rounds.RoundState(tokens=t_last[:, None],
+                                  length=jnp.ones((), jnp.int32),
+                                  dcache=dcache, tcache=tcache)
+        d = rounds.draft_phase(drafter, params_d, state, spec)
+        v = rounds.verify_phase(target, params_t, state, d, spec)
+        n_commit = jnp.min(v.res.n_emitted)
+        new_index = v.tcache["index"] - (gamma + 1) + n_commit
+        tcache = cache_ops.ops_for(v.tcache).rollback(v.tcache, new_index)
+        dcache = cache_ops.ops_for(d.dcache).rollback(d.dcache, new_index)
+        return v.res.out_tokens, n_commit, tcache, dcache
 
     jitted = jax.jit(spec_round,
                      in_shardings=(_ns(mesh, pt_specs), _ns(mesh, pd_specs),

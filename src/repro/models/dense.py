@@ -15,7 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.cache import kv_cache, paged_kv
+from repro.cache.ops import PAGED, RING
 from repro.models import layers as L
 from repro.models.attention import attention, attention_paged
 
@@ -83,11 +83,11 @@ def attn_block(cfg, p, x, q_pos, layer_cache, index, window, use_rope=True,
         o = attention(q, k, v, q_pos, kv_pos, window=window)
         new_cache = None
     elif block_table is not None:
-        new_cache = paged_kv.write(layer_cache, k, v, block_table, index)
+        new_cache = PAGED.write(layer_cache, k, v, block_table, index)
         o = attention_paged(q, new_cache["k"], new_cache["v"], block_table,
                             index, window=window, max_live=max_live)
     else:
-        k_all, v_all, kv_pos, new_cache = kv_cache.extend(layer_cache, k, v, index)
+        k_all, v_all, kv_pos, new_cache = RING.write(layer_cache, k, v, index)
         o = attention(q, k_all, v_all, q_pos, kv_pos, window=window)
     o = L.linear(p["o"], o.reshape(B, Q, cfg.num_heads * hd))
     return o, new_cache

@@ -93,18 +93,20 @@ class PagedSpecServer:
         return self._engines[gamma]
 
     def _empty_state(self) -> RowState:
+        from repro.cache.ops import PAGED
         B = self.B
-        tcache = self.target.init_paged_cache(B, self.scfg.num_blocks,
-                                              self.scfg.block_size,
-                                              self.scfg.max_blocks_per_row)
-        dcache = self.drafter.init_paged_cache(B, self.scfg.num_blocks,
-                                               self.scfg.block_size,
-                                               self.scfg.max_blocks_per_row)
-        return RowState(jnp.zeros((B, self.T), jnp.int32),
-                        jnp.ones((B,), jnp.int32),      # length-1 must be >= 0
-                        dcache, tcache,
-                        jnp.zeros((B,), jnp.int32), jnp.zeros((), jnp.int32),
-                        jnp.zeros((B,), bool))
+        geom = dict(num_blocks=self.scfg.num_blocks,
+                    block_size=self.scfg.block_size,
+                    max_blocks_per_row=self.scfg.max_blocks_per_row)
+        tcache = PAGED.init(self.target, B, **geom)
+        dcache = PAGED.init(self.drafter, B, **geom)
+        return RowState(tokens=jnp.zeros((B, self.T), jnp.int32),
+                        length=jnp.ones((B,), jnp.int32),  # length-1 >= 0
+                        dcache=dcache, tcache=tcache,
+                        active=jnp.zeros((B,), bool),
+                        n_rounds=jnp.zeros((), jnp.int32),
+                        n_accepted=jnp.zeros((B,), jnp.int32),
+                        n_drafted=jnp.zeros((), jnp.int32))
 
     def _sync_tables(self, state: RowState) -> RowState:
         """Push the host block table to the device — only when it actually
@@ -161,28 +163,13 @@ class PagedSpecServer:
     # ------------------------------------------------------------- AR round
     def _ar_round(self, state: RowState) -> RowState:
         """gamma* = 0 fallback: one committed token per active row per round,
-        target model only (the cost model said drafting does not pay)."""
+        target model only (the cost model said drafting does not pay).
+        The round is the shared core's ``ar_round`` (core/rounds.py)."""
         if self._ar_jit is None:
-            def ar(pt, st: RowState) -> RowState:
-                B, T = st.tokens.shape
-                rows = jnp.arange(B)
-                t_last = st.tokens[rows, st.length - 1]
-                logits, tcache, _ = self.target.apply(
-                    pt, t_last[:, None], st.tcache, logits_slice="last",
-                    # bound over ACTIVE rows: finished rows keep their final
-                    # length but their blocks are freed and nothing commits
-                    max_live=jnp.max(jnp.where(st.active, st.length, 1)))
-                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-                cols = jnp.clip(st.length, 0, T - 1)
-                cur = st.tokens[rows, cols]
-                tokens = st.tokens.at[rows, cols].set(
-                    jnp.where(st.active, nxt, cur))
-                new_len = st.length + st.active.astype(jnp.int32)
-                tcache = {**tcache, "index": (new_len - 1).astype(jnp.int32)}
-                return st._replace(tokens=tokens, length=new_len,
-                                   tcache=tcache,
-                                   n_rounds=st.n_rounds + 1)
-            self._ar_jit = jax.jit(ar, donate_argnums=(1,))
+            from repro.core import rounds
+            self._ar_jit = jax.jit(
+                lambda pt, st: rounds.ar_round(self.target, pt, st),
+                donate_argnums=(1,))
         return self._ar_jit(self.params_t, state)
 
     # -------------------------------------------------------------- serving

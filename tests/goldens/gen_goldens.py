@@ -1,0 +1,96 @@
+"""Generate the cross-engine token-parity goldens (rounds_parity.json).
+
+Run ONCE against a known-good tree (it was run against the pre-round-core
+engines when the round core landed) and commit the JSON; the parity matrix in
+tests/test_rounds_parity.py replays the same seeds through the refactored
+engines and asserts token identity. Regenerate only when an INTENTIONAL
+output-changing modification lands (and say so in the commit):
+
+    PYTHONPATH=src python tests/goldens/gen_goldens.py
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.batched_engine import BatchedEngineConfig, BatchedSpecEngine
+from repro.core.engine import EngineConfig, SpecEngine
+from repro.launch.continuous import ContinuousSpecServer, StreamRequest
+from repro.models.model import build_model
+from repro.serving import PagedSpecServer, SchedulerConfig, ServeRequest
+
+OUT = pathlib.Path(__file__).resolve().parent / "rounds_parity.json"
+
+GAMMA = 3
+MAX_NEW = 10
+
+
+def pair():
+    cfg_t = registry.smoke_config("llama3.2-1b")
+    cfg_d = cfg_t.replace(num_layers=max(1, cfg_t.num_layers - 1), name="draft")
+    mt, md = build_model(cfg_t), build_model(cfg_d)
+    return mt, md, mt.init(jax.random.PRNGKey(0)), md.init(jax.random.PRNGKey(7)), cfg_t
+
+
+def prompts(cfg, n, length, seed):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, (n, length)).astype(np.int32)
+
+
+def main():
+    mt, md, pt, pd, cfg = pair()
+    gold = {"meta": {"arch": "llama3.2-1b", "gamma": GAMMA, "max_new": MAX_NEW}}
+
+    # --- single-stream SpecEngine: cache mode x sampling mode
+    for use_cache in (False, True):
+        for greedy in (True, False):
+            ps = jnp.asarray(prompts(cfg, 2, 6, seed=0))
+            eng = SpecEngine(mt, md, EngineConfig(
+                gamma=GAMMA, greedy=greedy, temperature=1.0,
+                use_cache=use_cache, strategy="modular"))
+            toks, stats = eng.generate(pt, pd, ps, MAX_NEW,
+                                       key=jax.random.PRNGKey(11))
+            name = (f"single_{'greedy' if greedy else 'sampled'}_"
+                    f"{'cached' if use_cache else 'nocache'}")
+            gold[name] = {"tokens": np.asarray(toks).tolist(),
+                          "rounds": stats["rounds"],
+                          "accepted": stats["accepted"]}
+
+    # --- per-row BatchedSpecEngine (ring cache, greedy)
+    ps = jnp.asarray(prompts(cfg, 4, 6, seed=1))
+    eng = BatchedSpecEngine(mt, md, BatchedEngineConfig(gamma=GAMMA))
+    toks, lengths, _ = eng.generate(pt, pd, ps, MAX_NEW)
+    gold["per_row_greedy_ring"] = {
+        "tokens": [np.asarray(toks)[b, :6 + MAX_NEW].tolist() for b in range(4)],
+        "lengths": np.asarray(lengths).tolist()}
+
+    # --- continuous ring server (slot refill)
+    pr = prompts(cfg, 5, 6, seed=2)
+    srv = ContinuousSpecServer(mt, md, pt, pd, batch=2, prompt_len=6,
+                               max_new=MAX_NEW, gamma=GAMMA)
+    for i in range(5):
+        srv.submit(StreamRequest(i, pr[i]))
+    done = {r.rid: np.asarray(r.tokens).tolist() for r in srv.run()}
+    gold["continuous_greedy_ring"] = {"tokens": [done[i] for i in range(5)]}
+
+    # --- paged ragged server
+    ragged = [(5, 6), (9, 10), (6, 4), (11, 8)]
+    rng = np.random.default_rng(3)
+    reqs = [ServeRequest(i, rng.integers(0, cfg.vocab_size, P).astype(np.int32),
+                         new) for i, (P, new) in enumerate(ragged)]
+    srv = PagedSpecServer(mt, md, pt, pd, SchedulerConfig(max_batch=2),
+                          gamma=GAMMA)
+    for r in reqs:
+        srv.submit(r)
+    done = {r.rid: np.asarray(r.tokens).tolist() for r in srv.run()}
+    gold["paged_greedy"] = {"tokens": [done[i] for i in range(len(ragged))]}
+
+    OUT.write_text(json.dumps(gold, indent=1))
+    print(f"wrote {OUT} ({len(gold) - 1} golden entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,13 @@
-"""Adaptive draft length: gamma tracks the online alpha estimate via Eq (1),
-while output remains exactly the target's greedy continuation."""
+"""Adaptive draft length through the plan's runtime-feedback hook: gamma
+tracks the online alpha estimate via Eq. (1) while output remains exactly
+the target's greedy continuation. (The legacy AdaptiveSpecEngine shim is
+gone — DeploymentSpec(adaptive_gamma=True) plans the same loop, driven by
+api.feedback.GammaController over the shared round core.)"""
 import jax
 import jax.numpy as jnp
 
+from repro.api import DeploymentSpec, Planner, Session
 from repro.configs import registry
-from repro.core.adaptive import AdaptiveConfig, AdaptiveSpecEngine
 from repro.core.engine import autoregressive_generate
 from repro.models.model import build_model
 
@@ -15,17 +18,26 @@ def _setup():
     pt = mt.init(jax.random.PRNGKey(0))
     prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 5), 0,
                                 cfg_t.vocab_size)
-    ref = autoregressive_generate(mt, pt, prompt, 20)
+    ref = autoregressive_generate(mt, pt, prompt, 40)
     return mt, pt, prompt, ref
+
+
+def _adaptive_plan():
+    # fast EMA so the online alpha estimate converges within one generation
+    return Planner(DeploymentSpec(batch_size=1, prompt_lens=(5,), max_new=40,
+                                  cost_coefficient=0.1, adaptive_gamma=True,
+                                  alpha_ema=0.5, use_cache=False)).plan()
 
 
 def test_gamma_climbs_with_perfect_drafter():
     mt, pt, prompt, ref = _setup()
-    eng = AdaptiveSpecEngine(mt, mt, AdaptiveConfig(c=0.1))
-    toks, stats = eng.generate(pt, pt, prompt, 20)
+    plan = _adaptive_plan()
+    assert plan.gamma.adaptive and plan.gamma.candidates
+    sess = Session(mt, mt, pt, pt, plan)
+    toks, stats = sess.generate(prompt, 40)
     n = min(toks.shape[1], ref.shape[1])
     assert (toks[:, :n] == ref[:, :n]).all()
-    assert stats["gamma_trace"][-1] == max(AdaptiveConfig().gammas)
+    assert stats["gamma_trace"][-1] == max(plan.gamma.candidates)
 
 
 def test_gamma_falls_with_bad_drafter_and_stays_lossless():
@@ -33,19 +45,20 @@ def test_gamma_falls_with_bad_drafter_and_stays_lossless():
     pd_bad = jax.tree.map(
         lambda w: w + 0.5 * jax.random.normal(jax.random.PRNGKey(99), w.shape,
                                               jnp.float32).astype(w.dtype), pt)
-    eng = AdaptiveSpecEngine(mt, mt, AdaptiveConfig(c=0.1))
-    toks, stats = eng.generate(pt, pd_bad, prompt, 20)
+    plan = _adaptive_plan()
+    sess = Session(mt, mt, pt, pd_bad, plan)
+    toks, stats = sess.generate(prompt, 40)
     n = min(toks.shape[1], ref.shape[1])
     assert (toks[:, :n] == ref[:, :n]).all()       # lossless regardless
-    assert stats["gamma_trace"][-1] == min(AdaptiveConfig().gammas)
+    assert stats["gamma_trace"][-1] == min(plan.gamma.candidates)
     assert stats["alpha_hat"] < 0.2
 
 
-def test_pick_gamma_matches_cost_model():
+def test_controller_gamma_matches_cost_model_argmax():
+    from repro.api.feedback import best_gamma
     from repro.core import cost_model
-    mt, pt, prompt, ref = _setup()
-    eng = AdaptiveSpecEngine(mt, mt, AdaptiveConfig(c=0.3, gammas=(1, 2, 4, 6)))
     for alpha in (0.2, 0.5, 0.8, 0.95):
-        g = eng.pick_gamma(alpha)
-        best = max((1, 2, 4, 6), key=lambda gg: cost_model.speedup(alpha, gg, 0.3))
+        g = best_gamma((1, 2, 4, 6), alpha, 0.3)
+        best = max((1, 2, 4, 6),
+                   key=lambda gg: cost_model.speedup(alpha, gg, 0.3))
         assert g == best
