@@ -16,6 +16,8 @@ constructors.
 """
 from repro.api.backends import SpecBackend
 from repro.api.feedback import AlphaEma, GammaController, best_gamma
+from repro.api.placement import (Placement, PlacementError, RolePlacement,
+                                 lower, lower_or_degenerate)
 from repro.api.plan import (CacheLayout, DeploymentSpec, ExecutionPlan,
                             GammaSchedule, PlacementPlan, SubmeshSpec)
 from repro.api.planner import Planner
@@ -24,6 +26,7 @@ from repro.api.session import Session
 from repro.serving.scheduler import ServeRequest
 
 __all__ = ["AlphaEma", "CacheLayout", "DeploymentSpec", "ExecutionPlan",
-           "GammaController", "GammaSchedule", "PlacementPlan", "Planner",
-           "ServeRequest", "Session", "SpecBackend", "SubmeshSpec",
-           "best_gamma", "plan_deployment"]
+           "GammaController", "GammaSchedule", "Placement", "PlacementError",
+           "PlacementPlan", "Planner", "RolePlacement", "ServeRequest",
+           "Session", "SpecBackend", "SubmeshSpec", "best_gamma", "lower",
+           "lower_or_degenerate", "plan_deployment"]

@@ -66,11 +66,12 @@ class EngineBackend:
     name = "engine"
 
     def __init__(self, target, drafter, params_t, params_d,
-                 plan: ExecutionPlan, max_batch: int = 8):
+                 plan: ExecutionPlan, max_batch: int = 8, placement=None):
         self.target, self.drafter = target, drafter
         self.params_t, self.params_d = params_t, params_d
         self.plan = plan
         self.max_batch = max_batch
+        self.placement = placement
         self.controller = GammaController(plan.gamma, plan.cost_coefficient)
         self._engines: Dict[int, SpecEngine] = {}
 
@@ -82,7 +83,8 @@ class EngineBackend:
                 EngineConfig(gamma=gamma, greedy=p.greedy,
                              temperature=p.temperature, use_cache=p.use_cache,
                              strategy=p.strategy,
-                             draft_policy=p.draft_policy, draft_k=p.draft_k))
+                             draft_policy=p.draft_policy, draft_k=p.draft_k),
+                placement=self.placement)
         return self._engines[gamma]
 
     # ----------------------------------------------------------------- paths
@@ -168,20 +170,23 @@ class PerRowBackend:
     name = "per_row"
 
     def __init__(self, target, drafter, params_t, params_d,
-                 plan: ExecutionPlan, max_batch: int = 8):
+                 plan: ExecutionPlan, max_batch: int = 8, placement=None):
         from repro.core.batched_engine import (BatchedEngineConfig,
                                                BatchedSpecEngine)
         self.target, self.drafter = target, drafter
         self.params_t, self.params_d = params_t, params_d
         self.plan = plan
         self.max_batch = max_batch
+        self.placement = placement
         # gamma is consulted at batch boundaries, where the AR path is
         # reachable (g==0 branch below) — let the controller downgrade
         self.controller = GammaController(plan.gamma, plan.cost_coefficient,
                                           allow_ar=True)
         self._engines: Dict[int, Any] = {}
         self._mk = lambda g: BatchedSpecEngine(
-            target, drafter, BatchedEngineConfig(gamma=g, max_new_tokens=plan.max_new))
+            target, drafter,
+            BatchedEngineConfig(gamma=g, max_new_tokens=plan.max_new),
+            placement=placement)
 
     def _engine(self, gamma: int):
         if gamma not in self._engines:
@@ -225,11 +230,12 @@ class ContinuousBackend:
     name = "continuous"
 
     def __init__(self, target, drafter, params_t, params_d,
-                 plan: ExecutionPlan, max_batch: int = 4):
+                 plan: ExecutionPlan, max_batch: int = 4, placement=None):
         self.target, self.drafter = target, drafter
         self.params_t, self.params_d = params_t, params_d
         self.plan = plan
         self.max_batch = max_batch
+        self.placement = placement
         # consulted per uniform group, where the g==0 AR branch is reachable
         self.controller = GammaController(plan.gamma, plan.cost_coefficient,
                                           allow_ar=True)
@@ -240,7 +246,8 @@ class ContinuousBackend:
                                                BatchedSpecEngine)
         if gamma not in self._engines:
             self._engines[gamma] = BatchedSpecEngine(
-                self.target, self.drafter, BatchedEngineConfig(gamma=gamma))
+                self.target, self.drafter, BatchedEngineConfig(gamma=gamma),
+                placement=self.placement)
         return self._engines[gamma]
 
     def serve(self, requests):
@@ -254,7 +261,8 @@ class ContinuousBackend:
             srv = ContinuousSpecServer(
                 self.target, self.drafter, self.params_t, self.params_d,
                 batch=min(self.max_batch, len(group)), prompt_len=P,
-                max_new=max_new, gamma=g, engine=self._engine(g))
+                max_new=max_new, gamma=g, engine=self._engine(g),
+                placement=self.placement)
             for r in group:
                 srv.submit(StreamRequest(r.rid, np.asarray(r.prompt, np.int32)))
             by_rid = {r.rid: r for r in group}
@@ -285,9 +293,10 @@ class PagedBackend:
     name = "paged"
 
     def __init__(self, target, drafter, params_t, params_d,
-                 plan: ExecutionPlan, max_batch: int = 4):
+                 plan: ExecutionPlan, max_batch: int = 4, placement=None):
         from repro.serving import PagedSpecServer, SchedulerConfig
         self.plan = plan
+        self.placement = placement
         cache = plan.cache
         scfg = SchedulerConfig(
             max_batch=max_batch, block_size=cache.block_size,
@@ -299,7 +308,8 @@ class PagedBackend:
             cost_coefficient=plan.cost_coefficient)
         gamma_override = None if plan.gamma.adaptive else plan.gamma.gamma
         self.server = PagedSpecServer(target, drafter, params_t, params_d,
-                                      scfg, gamma=gamma_override)
+                                      scfg, gamma=gamma_override,
+                                      placement=placement)
 
     @property
     def metrics(self):

@@ -76,6 +76,14 @@ class DeploymentSpec:
     shape: str = "decode_32k"               # configs.base.INPUT_SHAPES key
     chips: int = 1
     explore_placement: bool = False
+    # DSE option sets (None = core/partition.py pod defaults) and MEASURED
+    # per-submesh step-time evidence: {submesh name -> seconds}, fed back by
+    # benchmarks/bench_dse.py so decision ③ closes the predict->measure loop.
+    drafter_submeshes: Optional[Tuple["SubmeshSpec", ...]] = None
+    target_submeshes: Optional[Tuple["SubmeshSpec", ...]] = None
+    submesh_t_draft: Optional[dict] = None
+    submesh_t_target: Optional[dict] = None
+    dispatch_overhead: Optional[float] = None  # host round-trip, t_target units
 
     def __post_init__(self):
         if not self.prompt_lens:
@@ -127,11 +135,27 @@ class SubmeshSpec:
 
 @dataclass(frozen=True)
 class PlacementPlan:
-    """Where drafter and target live (the DSE's winning mapping)."""
+    """Where drafter and target live (the DSE's winning mapping).
+
+    ``overlap`` arms the placed runtime's async-dispatch pipelining (the
+    next round's draft is dispatched onto the drafter submesh while the
+    target submesh still verifies — the paper's idle-PU elimination);
+    ``predicted_round_time`` is the overlapped-round cost term the planner
+    scored the mapping with, in t_target units (0.0 = unscored).
+    ``api/placement.py`` lowers this plan to concrete per-role meshes.
+    """
     drafter: SubmeshSpec = SubmeshSpec()
     target: SubmeshSpec = SubmeshSpec()
     explored_variants: int = 1
     predicted_speedup: float = 1.0
+    overlap: bool = False
+    predicted_round_time: float = 0.0
+
+    @property
+    def heterogeneous(self) -> bool:
+        """Drafter and target on distinct submeshes (the paper's two-PU
+        mapping) — the case the lowering layer realizes with two meshes."""
+        return self.drafter != self.target
 
 
 @dataclass(frozen=True)

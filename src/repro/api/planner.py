@@ -76,16 +76,52 @@ class Planner:
                           t_draft_fn: Optional[Callable] = None,
                           t_target_fn: Optional[Callable] = None
                           ) -> PlacementPlan:
-        """Decision ③: submesh DSE. Step times scale with submesh chips via
-        the roofline (arch known) or ideal 1/chips scaling from the unit c."""
+        """Decision ③: submesh DSE, scored with the overlapped-round term.
+
+        Step-time evidence, best first: MEASURED per-submesh step times
+        (``spec.submesh_t_draft/submesh_t_target``, fed back by
+        benchmarks/bench_dse.py — the predict->measure loop), the roofline
+        (arch known), or ideal 1/chips scaling from the unit c. Heterogeneous
+        mappings are credited ``cost_model.overlap_gain`` — the placed
+        runtime dispatches the next draft under the in-flight verify, hiding
+        the per-round host/handoff overhead (the paper's idle-PU
+        elimination); the chosen mapping's ``overlap``/``predicted_round_time``
+        are recorded on the plan for the lowering layer.
+        """
         s = self.spec
         if not s.explore_placement:
             return PlacementPlan(predicted_speedup=1.0)
         from repro.core import partition
+
+        def as_submesh(spec: SubmeshSpec) -> Submesh:
+            return Submesh(spec.name, tuple(spec.axes), tuple(spec.sizes))
+
+        if drafter_options is None and s.drafter_submeshes is not None:
+            drafter_options = [as_submesh(x) for x in s.drafter_submeshes]
+        if target_options is None and s.target_submeshes is not None:
+            target_options = [as_submesh(x) for x in s.target_submeshes]
         d_opts = list(drafter_options or partition.default_drafter_options())
         t_opts = list(target_options or partition.default_target_options())
+        # measured evidence is usable only when it covers every option name —
+        # a partial/mismatched dict falls through to roofline/unit scaling
+        # with the gap recorded, instead of a KeyError inside the DSE
+        measured = (s.submesh_t_draft is not None
+                    and s.submesh_t_target is not None)
+        if measured:
+            missing = ([o.name for o in d_opts
+                        if o.name not in s.submesh_t_draft]
+                       + [o.name for o in t_opts
+                          if o.name not in s.submesh_t_target])
+            if missing:
+                self._notes.append(
+                    f"measured submesh times ignored: no entry for "
+                    f"{sorted(set(missing))}")
+                measured = False
         if t_draft_fn is None or t_target_fn is None:
-            if s.arch is not None:
+            if measured:
+                t_draft_fn = lambda sub: float(s.submesh_t_draft[sub.name])
+                t_target_fn = lambda sub: float(s.submesh_t_target[sub.name])
+            elif s.arch is not None:
                 from repro.configs import registry
                 from repro.configs.base import INPUT_SHAPES
                 shape = INPUT_SHAPES[s.shape]
@@ -98,20 +134,38 @@ class Planner:
                 # unitless: t_target=1 on one chip, drafter = c, ideal scaling
                 t_target_fn = lambda sub: 1.0 / max(sub.chips, 1)
                 t_draft_fn = lambda sub: c / max(sub.chips, 1)
+        h = (cost_model.DISPATCH_OVERHEAD_DEFAULT
+             if s.dispatch_overhead is None else float(s.dispatch_overhead))
         space = DesignSpace(d_opts, t_opts)
-        best = space.best(s.alpha, t_draft_fn, t_target_fn,
-                          gamma_max=s.gamma_max)
+        rows = space.evaluate(s.alpha, t_draft_fn, t_target_fn,
+                              gamma_max=s.gamma_max, overlap=True,
+                              dispatch_overhead=h)
+        best = max(rows, key=lambda r: r.speedup)
+        hetero = (best.mapping.drafter.name != best.mapping.target.name
+                  and best.use_speculation)
         self._notes.append(
             f"placement: drafter@{best.mapping.drafter.name} "
             f"target@{best.mapping.target.name} "
-            f"({len(space.mappings())} variants explored, "
-            f"S={best.speedup:.2f})")
+            f"({len(rows)} variants explored, S={best.speedup:.2f}, "
+            f"{'measured' if measured else 'predicted'} step times)")
+        # the DSE prices h per mapping (seconds-constant host cost); report
+        # the chosen mapping's own terms
+        t_round_units = best.t_round / best.t_target
+        if hetero:
+            self._notes.append(
+                f"overlapped-round: t_round={t_round_units:.3f}·t_target "
+                f"(γc+1+max(h−1,0); up to one verify-length of dispatch "
+                f"overhead h={h:.3f}·t_target_baseline hidden under the "
+                f"in-flight verify, ×{best.overlap_gain:.3f} vs serialized)")
+
         def mirror(sub: Submesh) -> SubmeshSpec:
             return SubmeshSpec(sub.name, tuple(sub.axes), tuple(sub.sizes))
         return PlacementPlan(drafter=mirror(best.mapping.drafter),
                              target=mirror(best.mapping.target),
-                             explored_variants=len(space.mappings()),
-                             predicted_speedup=best.speedup)
+                             explored_variants=len(rows),
+                             predicted_speedup=best.speedup,
+                             overlap=hetero,
+                             predicted_round_time=t_round_units)
 
     def choose_gamma(self, c: float, paged: bool = False) -> GammaSchedule:
         """Decision ④: Eq. (1) gamma* (0 = AR) + the runtime-feedback hook."""

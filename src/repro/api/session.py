@@ -57,15 +57,25 @@ class Session:
                  "continuous": ContinuousBackend, "paged": PagedBackend}
 
     def __init__(self, target, drafter, params_t, params_d,
-                 plan: ExecutionPlan, *, max_batch: Optional[int] = None):
+                 plan: ExecutionPlan, *, max_batch: Optional[int] = None,
+                 placement=None):
+        """``placement``: a pre-lowered ``api.placement.Placement``; None
+        lowers the plan's PlacementPlan against the visible devices (plans
+        whose submeshes do not fit fall back to the degenerate single-mesh
+        lowering, with the reason on ``session.placement.note``)."""
+        from repro.api import placement as placement_mod
         self.target, self.drafter = target, drafter
         self.params_t, self.params_d = params_t, params_d
         self.plan = plan
+        if placement is None:
+            placement = placement_mod.lower_or_degenerate(plan.placement)
+        self.placement = placement
         self.backend_name = _select_backend(plan, target, drafter)
         if max_batch is None:
             max_batch = 4 if self.backend_name in ("continuous", "paged") else 8
         self.backend: SpecBackend = self._BACKENDS[self.backend_name](
-            target, drafter, params_t, params_d, plan, max_batch=max_batch)
+            target, drafter, params_t, params_d, plan, max_batch=max_batch,
+            placement=placement)
 
     # --------------------------------------------------------- construction
     @classmethod
@@ -119,5 +129,6 @@ class Session:
                  f"gamma={p.gamma.gamma}"
                  f"{' (adaptive ' + str(p.gamma.candidates) + ')' if p.gamma.adaptive else ''} "
                  f"predicted_S={p.predicted_speedup:.2f}"]
+        lines.append(f"  {self.placement.describe()}")
         lines += [f"  - {r}" for r in p.rationale]
         return "\n".join(lines)

@@ -65,6 +65,12 @@ class ModelConfig:
     param_dtype: str = "bfloat16"
     norm_eps: float = 1e-5
     tie_embeddings: bool = False
+    # embedding-table init std; None keeps the historical 1.0 (goldens).
+    # Tied-embedding models trained from scratch want ~d_model**-0.5: at
+    # scale 1.0 the tied lm_head emits logits of std ~sqrt(d_model), an
+    # init-scale shock that collapses small models to the uniform
+    # distribution (the benchmarks/common.py trained_pair failure mode).
+    embed_init_scale: Optional[float] = None
     # --- provenance ---
     source: str = ""                       # citation for the assignment
 

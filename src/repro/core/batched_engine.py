@@ -49,7 +49,14 @@ class BatchedEngineConfig:
 
 
 class BatchedSpecEngine:
-    def __init__(self, target_model, drafter_model, ecfg: BatchedEngineConfig):
+    def __init__(self, target_model, drafter_model, ecfg: BatchedEngineConfig,
+                 placement=None):
+        """``placement`` (api/placement.py): run per-row rounds placed —
+        draft on the drafter submesh, verify/commit on the target submesh
+        (core/rounds.PlacedRound). ``_round_jit`` then IS the placed round,
+        so the continuous/paged servers that drive it inherit placement
+        transparently. Linear cached per-row rounds only (validated by
+        PlacedRound)."""
         assert target_model.family in KV_FAMILIES, \
             f"per-row speculation needs a KV-cache family, got {target_model.family}"
         assert drafter_model.family in KV_FAMILIES
@@ -61,6 +68,11 @@ class BatchedSpecEngine:
             temperature=ecfg.temperature, commit="per_row", use_cache=True,
             policy=rounds.make_policy(ecfg.draft_policy, ecfg.draft_k))
         self._round_jit = None
+        self.placement = (placement if placement is not None
+                          and placement.heterogeneous else None)
+        if self.placement is not None:
+            self._round_jit = rounds.PlacedRound(
+                self.target, self.drafter, self._round_spec, self.placement)
 
     # --------------------------------------------------------------- round
     def round(self, params_t, params_d, st: RowState) -> RowState:
@@ -97,6 +109,12 @@ class BatchedSpecEngine:
                       n_drafted=jnp.zeros((), jnp.int32))
 
         target_len = P + max_new
+        if self.placement is not None:
+            params_t = self.placement.target.put_params(self.target, params_t)
+            params_d = self.placement.drafter.put_params(self.drafter,
+                                                         params_d)
+            st = rounds.place_state(st, self.placement, self.target,
+                                    self.drafter)
         if self._round_jit is None:
             # donate the round state: the multi-GB caches update in place
             # instead of being copied every round (callers snapshot host

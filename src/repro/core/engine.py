@@ -58,9 +58,23 @@ class EngineConfig:
 
 # ==================================================================== engine
 class SpecEngine:
-    """Drives a (target, drafter) pair with speculative sampling."""
+    """Drives a (target, drafter) pair with speculative sampling.
 
-    def __init__(self, target_model, drafter_model, ecfg: EngineConfig):
+    ``placement`` (api/placement.py, lowered from the plan's PlacementPlan)
+    switches generation onto the placed round: draft jitted on the drafter
+    submesh, verify/commit on the target submesh, explicit gamma-token
+    handoff, and — when the plan armed ``overlap`` — one-round-lookahead
+    dispatch so the next draft is enqueued while the verify is in flight.
+    Placed generation is inherently host-orchestrated (per-phase programs),
+    so it takes precedence over a ``strategy='monolithic'`` pin — the fused
+    single-program design and per-role meshes are mutually exclusive.
+    Configurations the placed round cannot honor (no-cache, multi-draft,
+    stateful drafters, degenerate placements) keep the single-mesh path;
+    ``placement_note`` records why.
+    """
+
+    def __init__(self, target_model, drafter_model, ecfg: EngineConfig,
+                 placement=None):
         self.target = target_model
         self.drafter = drafter_model
         self.ecfg = ecfg
@@ -69,6 +83,20 @@ class SpecEngine:
         self._specs: Dict[bool, rounds.RoundSpec] = {}
         self._round_jit = None
         self._run_jit = {}       # (target_len,) -> jitted monolithic generate
+        self.placement = None
+        self.placement_note = ""
+        self._placed_round = None
+        if placement is not None and placement.heterogeneous:
+            if not ecfg.use_cache:
+                self.placement_note = "no-cache rounds are single-mesh"
+            elif ecfg.draft_policy != "linear":
+                self.placement_note = "multi-draft rounds are single-mesh"
+            elif self.d_stateful:
+                self.placement_note = "stateful drafters are single-mesh"
+            else:
+                self.placement = placement
+                self._placed_round = rounds.PlacedRound(
+                    self.target, self.drafter, self._spec(True), placement)
 
     def _spec(self, use_cache: bool) -> rounds.RoundSpec:
         if use_cache not in self._specs:
@@ -134,6 +162,32 @@ class SpecEngine:
         d_off = dcache["index"] - (P - 1)
         return st._replace(tcache=tcache, dcache=dcache, t_off=t_off, d_off=d_off)
 
+    # ----------------------------------------------------- placed generation
+    def _generate_placed(self, params_t, params_d, state, target_len):
+        """Round loop on the placed round (per-role submeshes). Params are
+        pinned onto their role's submesh (a no-op when already resident);
+        with ``placement.overlap`` the loop runs one round of lookahead —
+        round k+1's draft is DISPATCHED before the host blocks on round k's
+        committed length, so the drafter submesh starts the moment the
+        handoff lands instead of waiting out a host round-trip (at the cost
+        of one speculatively-dispatched round at the end, whose results are
+        discarded)."""
+        pm = self.placement
+        params_t = pm.target.put_params(self.target, params_t)
+        params_d = pm.drafter.put_params(self.drafter, params_d)
+        state = rounds.place_state(state, pm, self.target, self.drafter)
+        placed = self._placed_round
+        if pm.overlap:
+            prev = state
+            pending = placed(params_t, params_d, prev)
+            while int(prev.length) < target_len:
+                prev = pending
+                pending = placed(params_t, params_d, prev)
+            return prev
+        while int(state.length) < target_len:
+            state = placed(params_t, params_d, state)
+        return state
+
     # -------------------------------------------------------------- generate
     def generate(self, params_t, params_d, prompt, max_new_tokens, key=None,
                  extras_t=None, extras_d=None):
@@ -148,7 +202,11 @@ class SpecEngine:
         round_fn = self.round_cached if e.use_cache else self.round_nocache
         target_len = P + max_new_tokens
 
-        if e.strategy == "monolithic":
+        if self._placed_round is not None and not state.extras_t \
+                and not state.extras_d:
+            state = self._generate_placed(params_t, params_d, state,
+                                          target_len)
+        elif e.strategy == "monolithic":
             # donate the generation state: the KV caches carried through the
             # while_loop update in place instead of being copied at the jit
             # boundary (stats are read from the returned state). Extras

@@ -437,11 +437,16 @@ def _scatter_commit(tokens, length, out_tokens, n_eff, gamma):
 
 def commit_phase(target, state: RoundState, d: DraftOut, v: VerifyOut,
                  spec: RoundSpec) -> RoundState:
-    """Phase 3: commit the accepted prefix + roll both caches back."""
+    """Phase 3: commit the accepted prefix + roll both caches back.
+
+    ``d.dcache is None`` marks a PLACED round (the drafter cache lives on
+    its own submesh): the drafter rollback is skipped here and dispatched
+    separately on the drafter mesh (``PlacedRound``); the committed state
+    then carries ``dcache=None`` until the runner reattaches it.
+    """
     G = spec.gamma
     res = v.res
     B = state.tokens.shape[0]
-    ops_d = cache_ops.ops_for(d.dcache)
     ops_t = cache_ops.ops_for(v.tcache)
 
     if spec.commit == "per_row":
@@ -452,7 +457,8 @@ def commit_phase(target, state: RoundState, d: DraftOut, v: VerifyOut,
                                  res.out_tokens, n_eff, G)
         new_len = state.length + n_eff                       # PER ROW
         tcache = ops_t.rollback(v.tcache, new_len - 1)
-        dcache = ops_d.rollback(d.dcache, new_len - 1)
+        dcache = (None if d.dcache is None else
+                  cache_ops.ops_for(d.dcache).rollback(d.dcache, new_len - 1))
         return state._replace(
             tokens=tokens, length=new_len, key=v.key,
             dcache=dcache, tcache=tcache,
@@ -477,13 +483,16 @@ def commit_phase(target, state: RoundState, d: DraftOut, v: VerifyOut,
     # caches end at (committed length - 1) consumed inputs, shifted by any
     # modality prefix the cache also holds (VLM vision tokens)
     tcache = target.rollback(v.tcache, new_len - 1 + state.t_off, G + 1)
+    if d.dcache is None:                   # placed round: drafter-mesh rollback
+        return st._replace(dcache=None, tcache=tcache)
     if spec.d_stateful:
         # snapshot j = state after consuming j+1 inputs; we need n_acc+1
         dcache = _restore_state_leaves(d.dcache, d.snaps, n_acc)
         dcache = {**dcache,
                   "index": (new_len - 1 + state.d_off).astype(jnp.int32)}
     else:
-        dcache = ops_d.rollback(d.dcache, new_len - 1 + state.d_off)
+        dcache = cache_ops.ops_for(d.dcache).rollback(
+            d.dcache, new_len - 1 + state.d_off)
     return st._replace(dcache=dcache, tcache=tcache)
 
 
@@ -518,6 +527,135 @@ def ar_round(target, params_t, state: RoundState) -> RoundState:
     tcache = ops_t.rollback(tcache, new_len - 1)
     return state._replace(tokens=tokens, length=new_len, tcache=tcache,
                           n_rounds=state.n_rounds + 1)
+
+
+# =========================================================== placed execution
+def place_state(state: RoundState, placement, target_model=None,
+                drafter_model=None) -> RoundState:
+    """Pin a RoundState onto a realized Placement (api/placement.py): the
+    drafter cache moves to the drafter submesh, everything else — tokens,
+    lengths, target cache, counters — to the target submesh (where verify
+    and commit run). No-op for the degenerate lowering.
+
+    NOTE: device_put may ALIAS source shards that already sit on a member
+    device, and PlacedRound donates the caches — treat the input state as
+    consumed (and don't place the same state twice expecting independent
+    buffers)."""
+    if not placement.heterogeneous:
+        return state
+    if state.extras_t or state.extras_d:
+        raise NotImplementedError(
+            "placed rounds do not carry decode-time modality extras "
+            "(encdec cross-KV) — use the degenerate placement")
+    B = state.tokens.shape[0]
+    dcache = (placement.drafter.put_cache(drafter_model, state.dcache, B)
+              if drafter_model is not None
+              else placement.to_drafter(state.dcache))
+    tcache = (placement.target.put_cache(target_model, state.tcache, B)
+              if target_model is not None
+              else placement.to_target(state.tcache))
+    rest = placement.to_target(state._replace(dcache=None, tcache=None))
+    return rest._replace(dcache=dcache, tcache=tcache)
+
+
+class PlacedRound:
+    """ONE speculative round with plan-carried placement: the same three
+    phases as ``spec_round``, split at the draft/verify handoff and jitted
+    per role —
+
+        drafter submesh : draft scan (``draft_phase``) + drafter rollback
+        target submesh  : verify + commit (``verify_phase``/``commit_phase``)
+
+    with the gamma-token package (γ drafts + the last committed token; plus
+    drafter logits and the PRNG key in sampled mode) explicitly transferred
+    across submeshes between them — the paper's tiny PU-to-PU handoff.
+
+    Because each side is its own async-dispatched program on its own device
+    set, the host can enqueue the drafter rollback and the NEXT round's
+    draft while the current verify is still in flight on the target submesh
+    (``SpecEngine``'s overlap loop) — the idle-PU elimination the planner's
+    overlapped-round term (``cost_model.round_time``) prices.
+
+    Token-identity: phases run the SAME code ``spec_round`` composes, so a
+    placed round commits exactly the tokens the fused round would
+    (goldens-tested); only device residency and dispatch order change.
+
+    Supported: cached linear rounds (both commit modes, greedy or sampled),
+    KV-family drafters. Multi-draft (no-cache) and stateful drafters keep
+    the single-mesh path.
+    """
+
+    def __init__(self, target, drafter, spec: RoundSpec, placement):
+        if spec.policy.k > 1:
+            raise ValueError("placed rounds are linear-draft only")
+        if not spec.use_cache:
+            raise ValueError("placed rounds need cached execution "
+                             "(no-cache rounds recompute on one buffer)")
+        if spec.d_stateful:
+            raise ValueError("placed rounds need KV-family drafters "
+                             "(state-trail rollback is single-mesh)")
+        self.target, self.drafter = target, drafter
+        self.spec, self.placement = spec, placement
+        sp = spec
+
+        def draft(params_d, t_last, length, dcache, key, active):
+            # the cached linear draft reads ONLY the last committed token
+            # from the buffer — a [B] vector is the whole visible prefix
+            # (the real ``length`` feeds the paged live-block bound)
+            live0 = None
+            if sp.commit == "per_row":
+                live0 = cache_ops.ops_for(dcache).live_bound(length, active)
+            st = RoundState(tokens=t_last[:, None],
+                            length=jnp.ones((), jnp.int32),
+                            dcache=dcache, key=key, active=active)
+            d = sp.policy.draft_cached(drafter, params_d, st, sp, live0)
+            q = None if sp.greedy else d.q_logits[:, 0]
+            return d.drafts[:, 0], q, d.dcache, d.key
+
+        def verify_commit(params_t, state, tcache, drafts, t_last, q_logits,
+                          key):
+            state = state._replace(tcache=tcache)
+            d = DraftOut(drafts=drafts[:, None],
+                         q_logits=None if q_logits is None
+                         else q_logits[:, None],
+                         cand_tokens=None, t_last=t_last, dcache=None,
+                         snaps=None, key=key)
+            v = verify_phase(target, params_t, state, d, sp)
+            return commit_phase(target, state, d, v, sp)
+
+        def drafter_rollback(dcache, new_len, d_off):
+            return cache_ops.ops_for(dcache).rollback(dcache,
+                                                      new_len - 1 + d_off)
+
+        # the CACHES are donated (updated in place at each jit boundary,
+        # like the unplaced engines' donated round state); the small leaves
+        # (tokens/length/counters) are NOT, so callers may still read e.g.
+        # a prior state's committed length after dispatching the next round
+        # (the overlap lookahead loop does exactly that)
+        self._draft_jit = jax.jit(draft, donate_argnums=(3,))
+        self._vc_jit = jax.jit(verify_commit, donate_argnums=(2,))
+        self._drb_jit = jax.jit(drafter_rollback, donate_argnums=(0,))
+
+    def __call__(self, params_t, params_d, state: RoundState) -> RoundState:
+        pm = self.placement
+        # last committed token + row lengths -> drafter submesh: a [B]
+        # vector each, NOT the [B, T] buffer — the whole cross-domain
+        # traffic really is gamma-token sized
+        t_last_t = _gather_last(state.tokens, state.length)
+        t_last_d, length_d, active_d, key_d, d_off_d = pm.to_drafter(
+            (t_last_t, state.length, state.active, state.key, state.d_off))
+        drafts, q_log, dcache, key2 = self._draft_jit(
+            params_d, t_last_d, length_d, state.dcache, key_d, active_d)
+        # the gamma-token handoff -> target submesh
+        drafts_t, q_t, key_t = pm.to_target((drafts, q_log, key2))
+        new = self._vc_jit(params_t,
+                           state._replace(dcache=None, tcache=None),
+                           state.tcache, drafts_t, t_last_t, q_t, key_t)
+        # commit result -> drafter submesh; rollback dispatches there while
+        # the caller is free to enqueue the next round (async dispatch)
+        new_len_d = pm.to_drafter(new.length)
+        dcache = self._drb_jit(dcache, new_len_d, d_off_d)
+        return new._replace(dcache=dcache)
 
 
 def phase_fns(target, drafter, spec: RoundSpec):

@@ -24,22 +24,30 @@ class DataConfig:
     global_batch: int
     seed: int = 0
     branching: int = 12      # out-degree of the Markov graph (task difficulty)
+    # context order. order=2 hashes (t-2, t-1) — from the MODEL's seat that
+    # is ~V^2 arbitrary contexts to memorize (the hash is not learnable
+    # structure), which needs a token budget far beyond the CPU benches;
+    # order=1 keys on t-1 alone (V contexts), learnable in a few hundred
+    # steps — the benchmarks/common.py trained-pair workload.
+    order: int = 2
 
 
 class MarkovSource:
-    """Order-2 Markov chain with sparse random transitions."""
+    """Order-1/2 Markov chain with sparse random transitions."""
 
     def __init__(self, cfg: DataConfig):
         self.cfg = cfg
         rng = np.random.default_rng(cfg.seed)
         V, B = cfg.vocab_size, cfg.branching
         # successor table: for each (prev2 hash) a set of candidates + probs
-        self.n_states = min(V * 4, 65536)
+        self.n_states = V if cfg.order == 1 else min(V * 4, 65536)
         self.succ = rng.integers(0, V, size=(self.n_states, B), dtype=np.int64)
         p = rng.dirichlet(np.ones(B) * 0.5, size=self.n_states)
         self.cum = np.cumsum(p, axis=1)
 
     def _state(self, t1, t2):
+        if self.cfg.order == 1:
+            return t2 % self.n_states
         return (t1 * 31 + t2 * 7) % self.n_states
 
     def sample(self, rng, batch: int, length: int) -> np.ndarray:

@@ -36,7 +36,29 @@ def add_spec_args(ap: argparse.ArgumentParser, *, gamma: int = None
                     help="expected acceptance rate fed to the planner")
     ap.add_argument("--cost-coefficient", type=float, default=None,
                     help="c = t_draft/t_target fed to the gamma decision")
+    ap.add_argument("--placement", default=None, metavar="DxT",
+                    help="force a heterogeneous placement: drafter on D "
+                         "devices, target on T (e.g. '2x6'; needs D+T "
+                         "visible devices — on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N). The "
+                         "plan's PlacementPlan is lowered to per-role "
+                         "meshes by repro.api.placement.")
     return ap
+
+
+def apply_placement_arg(plan, placement_arg):
+    """Replace the plan's PlacementPlan from a ``DxT`` CLI string (overlap
+    armed — the placed runtime's async draft dispatch). None = no-op."""
+    if not placement_arg:
+        return plan
+    import dataclasses
+
+    from repro.api.plan import PlacementPlan, SubmeshSpec
+    d, t = (int(x) for x in placement_arg.lower().split("x"))
+    return dataclasses.replace(plan, placement=PlacementPlan(
+        drafter=SubmeshSpec(f"d{d}", ("dx",), (d,)),
+        target=SubmeshSpec(f"t{t}", ("tx",), (t,)),
+        overlap=True))
 
 
 def build_pair(arch: str, smoke: bool) -> Tuple[object, object, dict, dict, object]:

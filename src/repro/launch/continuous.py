@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import rounds
 from repro.core.batched_engine import (BatchedEngineConfig, BatchedSpecEngine,
                                        RowState)
 
@@ -43,12 +44,30 @@ class StreamRequest:
 class ContinuousSpecServer:
     def __init__(self, target, drafter, params_t, params_d, *,
                  batch: int = 4, prompt_len: int = 12, max_new: int = 24,
-                 gamma: int = 4, engine: Optional[BatchedSpecEngine] = None):
+                 gamma: int = 4, engine: Optional[BatchedSpecEngine] = None,
+                 placement=None):
         """``engine`` lets callers share one (jit-cached) engine across
-        server instances; it must have been built with the same gamma."""
+        server instances; it must have been built with the same gamma.
+        ``placement`` (api/placement.py) runs the rounds placed — per-role
+        submeshes with the drafter cache resident on the drafter mesh; slot
+        refills pin the one-row prefill onto the right submesh before the
+        scatter."""
         assert engine is None or engine.ecfg.gamma == gamma
-        self.engine = engine or BatchedSpecEngine(target, drafter,
-                                                  BatchedEngineConfig(gamma=gamma))
+        if engine is not None and placement is not None \
+                and placement.heterogeneous:
+            ep = engine.placement
+            if ep is None or (ep.drafter.devices, ep.target.devices) != \
+                    (placement.drafter.devices, placement.target.devices):
+                raise ValueError(
+                    "shared engine was built without this placement — build "
+                    "it with BatchedSpecEngine(..., placement=...) or drop one")
+        self.engine = engine or BatchedSpecEngine(
+            target, drafter, BatchedEngineConfig(gamma=gamma),
+            placement=placement)
+        self.placement = self.engine.placement
+        if self.placement is not None:
+            params_t = self.placement.target.put_params(target, params_t)
+            params_d = self.placement.drafter.put_params(drafter, params_d)
         self.params_t, self.params_d = params_t, params_d
         self.B, self.P, self.max_new, self.gamma = batch, prompt_len, max_new, gamma
         self.max_len = prompt_len + max_new + gamma + 2
@@ -63,30 +82,53 @@ class ContinuousSpecServer:
 
     # ------------------------------------------------------------ plumbing
     def _prefill_one(self, prompt):
-        """B=1 prefill -> (buf_row [T], dcache1, tcache1) with per-row index."""
+        """B=1 prefill -> (buf_row [T], dcache1, tcache1) with per-row index.
+        Placed serving runs each role's prefill as its own program on its
+        own submesh (one jit cannot span two meshes)."""
         if self._prefill_jit is None:
             eng = self.engine
+            slack = self.gamma + 2
 
-            def prefill(pt, pd, prompt):
+            def prefill_t(pt, prompt):
                 buf = jnp.zeros((1, self.max_len), jnp.int32)
                 buf = jax.lax.dynamic_update_slice(buf, prompt, (0, 0))
-                slack = self.gamma + 2
                 tc = eng.target.init_cache(1, eng.target.cache_len(self.max_len),
                                            spec_slack=slack)
+                _, tc, _ = eng.target.apply(pt, prompt[:, :-1], tc)
+                return buf, tc
+
+            def prefill_d(pd, prompt):
                 dc = eng.drafter.init_cache(1, eng.drafter.cache_len(self.max_len),
                                             spec_slack=slack)
-                _, tc, _ = eng.target.apply(pt, prompt[:, :-1], tc)
                 _, dc, _ = eng.drafter.apply(pd, prompt[:, :-1], dc)
-                return buf, dc, tc
+                return dc
 
-            self._prefill_jit = jax.jit(prefill)
+            if self.placement is None:
+                def prefill(pt, pd, prompt):
+                    buf, tc = prefill_t(pt, prompt)
+                    return buf, prefill_d(pd, prompt), tc
+                self._prefill_jit = jax.jit(prefill)
+            else:
+                t_jit, d_jit = jax.jit(prefill_t), jax.jit(prefill_d)
+                pm = self.placement
+
+                def prefill(pt, pd, prompt):
+                    buf, tc = t_jit(pt, pm.to_target(prompt))
+                    return buf, d_jit(pd, pm.to_drafter(prompt)), tc
+                self._prefill_jit = prefill
         return self._prefill_jit(self.params_t, self.params_d,
                                  jnp.asarray(prompt[None], jnp.int32))
 
     def _insert_row(self, state: RowState, b: int, buf1, dc1, tc1):
         """Scatter a one-row prefill into live batch state at slot b.
         Structural rule: KV caches are [L, B, ...] -> batch axis 1; per-row
-        index vectors are [B] -> axis 0."""
+        index vectors are [B] -> axis 0. Placed serving pins the one-row
+        pieces onto their role submeshes first so the scatters stay
+        colocated with the live state."""
+        if self.placement is not None:
+            buf1 = self.placement.to_target(buf1)
+            tc1 = self.placement.to_target(tc1)
+            dc1 = self.placement.to_drafter(dc1)
         def put_cache(batched, one):
             if batched.ndim >= 2 and one.ndim == batched.ndim \
                     and one.shape[1] == 1 and batched.shape[0] == one.shape[0]:
@@ -130,12 +172,16 @@ class ContinuousSpecServer:
         _, dc, _ = eng.drafter.apply(self.params_d, jnp.asarray(prompts[:, :-1]), dc)
         tc = {**tc, "index": jnp.full((B,), P - 1, jnp.int32)}
         dc = {**dc, "index": jnp.full((B,), P - 1, jnp.int32)}
-        self._state = RowState(tokens=buf, length=jnp.full((B,), P, jnp.int32),
-                               dcache=dc, tcache=tc,
-                               active=jnp.ones((B,), bool),
-                               n_rounds=jnp.zeros((), jnp.int32),
-                               n_accepted=jnp.zeros((B,), jnp.int32),
-                               n_drafted=jnp.zeros((), jnp.int32))
+        st = RowState(tokens=buf, length=jnp.full((B,), P, jnp.int32),
+                      dcache=dc, tcache=tc,
+                      active=jnp.ones((B,), bool),
+                      n_rounds=jnp.zeros((), jnp.int32),
+                      n_accepted=jnp.zeros((B,), jnp.int32),
+                      n_drafted=jnp.zeros((), jnp.int32))
+        if self.placement is not None:
+            st = rounds.place_state(st, self.placement, eng.target,
+                                    eng.drafter)
+        self._state = st
         self._slots = first
 
     def run(self):
@@ -207,7 +253,10 @@ def main():
         plan = _dc.replace(plan,
                            gamma=_dc.replace(plan.gamma, gamma=args.gamma))
     gamma = plan.gamma.gamma
+    plan = cli_args.apply_placement_arg(plan, args.placement)
     sess = Session(mt, md, pt, pd, plan, max_batch=args.batch)
+    if args.placement:
+        print(sess.placement.describe())
 
     rng = np.random.default_rng(0)
     reqs = [sess.request(rng.integers(0, cfg_t.vocab_size, args.prompt_len),

@@ -56,7 +56,10 @@ def main():
         forced = plan.gamma.gamma
     plan = dataclasses.replace(
         plan, gamma=dataclasses.replace(plan.gamma, gamma=forced))
+    plan = cli_args.apply_placement_arg(plan, args.placement)
     sess = Session(mt, md, pt, pd, plan, max_batch=args.batch)
+    if args.placement:
+        print(sess.placement.describe())
 
     if not args.speculative:
         # plain autoregressive serving baseline (one fixed batch)

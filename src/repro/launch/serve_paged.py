@@ -64,7 +64,10 @@ def main():
                                   max_blocks_per_row=args.max_blocks_per_row),
         gamma=(plan.gamma if args.gamma is None else
                dataclasses.replace(plan.gamma, gamma=args.gamma)))
+    plan = cli_args.apply_placement_arg(plan, args.placement)
     sess = Session(mt, md, pt, pd, plan, max_batch=args.batch)
+    if args.placement:
+        print(sess.placement.describe())
     if sess.backend_name != "paged":
         raise SystemExit(
             f"--arch {args.arch} (family {mt.family!r}) cannot take the paged "

@@ -3,6 +3,12 @@
 Each builder returns (step_fn, input_specs_dict) where input_specs are
 ShapeDtypeStructs with shardings attached — exactly what .lower(...) consumes
 in the dry-run, and what device_put uses in real runs.
+
+Sharding-tree assembly (``ns_tree``/``sds_with``) lives beside the spec
+builders in ``models/specs.py``, shared with the placement lowering layer
+(``repro.api.placement``): these builders consume a caller-supplied mesh
+(the dry-run's production mesh), while inference-time per-role meshes come
+from lowering the plan's PlacementPlan.
 """
 from __future__ import annotations
 
@@ -14,20 +20,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
 from repro.models.model import Model, build_model
-from repro.models.specs import ShardingPolicy, cache_specs, io_specs, param_specs
+from repro.models.specs import (ShardingPolicy, cache_specs, io_specs,
+                                ns_tree as _ns, param_specs,
+                                sds_with as _sds_with)
 from repro.training import optimizer as opt
 from repro.training.train_loop import make_train_step, opt_state_specs
-
-
-def _ns(mesh, spec_tree):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
-                        is_leaf=lambda x: isinstance(x, P))
-
-
-def _sds_with(shard_tree, shape_tree):
-    return jax.tree.map(lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
-                                                             sharding=sh),
-                        shape_tree, shard_tree)
 
 
 def params_shape(model: Model, quantized: bool = False):

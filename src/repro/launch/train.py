@@ -27,7 +27,7 @@ from repro.training import optimizer as opt
 
 
 def train(cfg, *, steps_n=200, batch=8, seq=64, lr=1e-3, seed=0, ckpt_path=None,
-          mesh=None, log_every=20, data_seed=0):
+          mesh=None, log_every=20, data_seed=0, data_order=2):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     ocfg = opt.AdamWConfig(lr=lr, warmup_steps=max(10, steps_n // 20),
@@ -35,7 +35,8 @@ def train(cfg, *, steps_n=200, batch=8, seq=64, lr=1e-3, seed=0, ckpt_path=None,
     opt_state = opt.init(params)
 
     dcfg = pipeline.DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
-                               global_batch=batch, seed=data_seed)
+                               global_batch=batch, seed=data_seed,
+                               order=data_order)
     stream = pipeline.batches(dcfg)
 
     from repro.training.train_loop import make_train_step

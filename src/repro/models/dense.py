@@ -51,7 +51,8 @@ def _stack_layers(key, cfg, init_one, n):
 def init(cfg, rng):
     ke, kl, kh = jax.random.split(rng, 3)
     params = {
-        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype),
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype,
+                                  scale=cfg.embed_init_scale),
         "layers": _stack_layers(kl, cfg, init_layer, cfg.num_layers),
         "final_norm": L.init_rmsnorm(cfg.d_model, cfg.weight_dtype),
     }

@@ -45,7 +45,8 @@ def init_dec_layer(key, cfg):
 def init(cfg, rng):
     ke, kenc, kdec, kn = jax.random.split(rng, 4)
     return {
-        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype),
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype,
+                                  scale=cfg.embed_init_scale),
         "enc_layers": dense._stack_layers(kenc, cfg, init_enc_layer, cfg.num_encoder_layers),
         "enc_norm": L.init_rmsnorm(cfg.d_model, cfg.weight_dtype),
         "dec_layers": dense._stack_layers(kdec, cfg, init_dec_layer, cfg.num_layers),

@@ -71,7 +71,8 @@ def init(cfg, rng):
                 for i, kind in enumerate(pat)}
 
     params = {
-        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype),
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype,
+                                  scale=cfg.embed_init_scale),
         "blocks": jax.vmap(init_block)(jax.random.split(kb, n_blocks)),
         "final_norm": L.init_rmsnorm(cfg.d_model, cfg.weight_dtype),
     }

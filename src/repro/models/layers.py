@@ -85,8 +85,11 @@ def gelu_mlp(p, x):
 
 
 # --------------------------------------------------------------------------- embeddings
-def init_embedding(key, vocab, d_model, dtype):
-    return {"table": _dense_init(key, (vocab, d_model), dtype, scale=1.0)}
+def init_embedding(key, vocab, d_model, dtype, scale=None):
+    """``scale=None`` keeps the historical std-1.0 table (golden-pinned);
+    models thread ``cfg.embed_init_scale`` through here."""
+    return {"table": _dense_init(key, (vocab, d_model), dtype,
+                                 scale=1.0 if scale is None else scale)}
 
 
 def embed(p, tokens):

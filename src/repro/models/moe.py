@@ -55,7 +55,8 @@ def init(cfg, rng):
     ke, kl, kh = jax.random.split(rng, 3)
     n_blocks = cfg.num_layers // max(cfg.moe_every, 1)
     params = {
-        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype),
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype,
+                                  scale=cfg.embed_init_scale),
         "layers": dense._stack_layers(kl, cfg, init_block, n_blocks),
         "final_norm": L.init_rmsnorm(cfg.d_model, cfg.weight_dtype),
     }

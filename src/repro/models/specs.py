@@ -210,3 +210,21 @@ def io_specs(pol: ShardingPolicy, batch: int):
     """(tokens_spec, logits_spec) for step functions."""
     b_ax = pol.batch_axis(batch)
     return P(b_ax, None), P(b_ax, None, pol.model)
+
+
+# ---------------------------------------------------------------------------
+# spec-tree -> sharding-tree assembly (shared by the dry-run step builders in
+# launch/steps.py and the placement lowering layer in api/placement.py)
+# ---------------------------------------------------------------------------
+def ns_tree(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree on ``mesh``."""
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sds_with(shard_tree, shape_tree):
+    """Attach a sharding tree to a ShapeDtypeStruct tree (dry-run inputs)."""
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        shape_tree, shard_tree)

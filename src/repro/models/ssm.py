@@ -44,7 +44,8 @@ def init(cfg, rng):
     ke, kl = jax.random.split(rng)
     from repro.models.dense import _stack_layers
     return {
-        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype),
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, cfg.weight_dtype,
+                                  scale=cfg.embed_init_scale),
         "layers": _stack_layers(kl, cfg, init_layer, cfg.num_layers),
         "final_norm": L.init_rmsnorm(cfg.d_model, cfg.weight_dtype),
     }

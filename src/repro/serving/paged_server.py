@@ -39,12 +39,21 @@ class PagedSpecServer:
                  scfg: Optional[SchedulerConfig] = None, *,
                  gamma: Optional[int] = None,
                  alpha: Optional[float] = None,
-                 cost_coefficient: Optional[float] = None):
+                 cost_coefficient: Optional[float] = None,
+                 placement=None):
         """``gamma``/``alpha``/``cost_coefficient`` override the scheduler's
-        cost-model decision (None = decide online from telemetry)."""
+        cost-model decision (None = decide online from telemetry).
+        ``placement`` (api/placement.py) pins each model's params and block
+        pool onto its own submesh and runs speculative rounds placed; AR
+        rounds run target-only on the target submesh."""
         assert target.family in KV_FAMILIES and drafter.family in KV_FAMILIES, \
             "paged speculative serving needs KV-cache families"
         self.target, self.drafter = target, drafter
+        self.placement = (placement if placement is not None
+                          and placement.heterogeneous else None)
+        if self.placement is not None:
+            params_t = self.placement.target.put_params(target, params_t)
+            params_d = self.placement.drafter.put_params(drafter, params_d)
         self.params_t, self.params_d = params_t, params_d
         self.scfg = scfg or SchedulerConfig()
         self.metrics = ServingMetrics(gamma_max=self.scfg.gamma_max)
@@ -84,11 +93,15 @@ class PagedSpecServer:
     def _engine(self, gamma: int) -> BatchedSpecEngine:
         if gamma not in self._engines:
             eng = BatchedSpecEngine(self.target, self.drafter,
-                                    BatchedEngineConfig(gamma=gamma))
-            # donate the round state: block pools update in place instead of
-            # being copied every round (host snapshots are taken pre-call)
-            eng._round_jit = jax.jit(lambda pt, pd, s: eng.round(pt, pd, s),
-                                     donate_argnums=(2,))
+                                    BatchedEngineConfig(gamma=gamma),
+                                    placement=self.placement)
+            if eng._round_jit is None:
+                # donate the round state: block pools update in place instead
+                # of being copied every round (host snapshots pre-call); the
+                # placed round manages its own per-submesh residency instead
+                eng._round_jit = jax.jit(
+                    lambda pt, pd, s: eng.round(pt, pd, s),
+                    donate_argnums=(2,))
             self._engines[gamma] = eng
         return self._engines[gamma]
 
@@ -100,13 +113,17 @@ class PagedSpecServer:
                     max_blocks_per_row=self.scfg.max_blocks_per_row)
         tcache = PAGED.init(self.target, B, **geom)
         dcache = PAGED.init(self.drafter, B, **geom)
-        return RowState(tokens=jnp.zeros((B, self.T), jnp.int32),
-                        length=jnp.ones((B,), jnp.int32),  # length-1 >= 0
-                        dcache=dcache, tcache=tcache,
-                        active=jnp.zeros((B,), bool),
-                        n_rounds=jnp.zeros((), jnp.int32),
-                        n_accepted=jnp.zeros((B,), jnp.int32),
-                        n_drafted=jnp.zeros((), jnp.int32))
+        st = RowState(tokens=jnp.zeros((B, self.T), jnp.int32),
+                      length=jnp.ones((B,), jnp.int32),  # length-1 >= 0
+                      dcache=dcache, tcache=tcache,
+                      active=jnp.zeros((B,), bool),
+                      n_rounds=jnp.zeros((), jnp.int32),
+                      n_accepted=jnp.zeros((B,), jnp.int32),
+                      n_drafted=jnp.zeros((), jnp.int32))
+        if self.placement is not None:
+            from repro.core.rounds import place_state
+            st = place_state(st, self.placement, self.target, self.drafter)
+        return st
 
     def _sync_tables(self, state: RowState) -> RowState:
         """Push the host block table to the device — only when it actually
@@ -117,9 +134,19 @@ class PagedSpecServer:
         if self._table_version == self.alloc.version:
             return state
         self._table_version = self.alloc.version
+        # two INDEPENDENT uploads on purpose: a single host array pinned onto
+        # both roles can alias one device buffer on shared devices
+        # (device_put reuses resident shards), and the speculative round
+        # DONATES the drafter cache — a shared buffer would be deleted out
+        # from under the target's table
+        t_table = self.alloc.device_table()
+        d_table = self.alloc.device_table()
+        if self.placement is not None:
+            t_table = self.placement.to_target(t_table)
+            d_table = self.placement.to_drafter(d_table)
         return state._replace(
-            tcache={**state.tcache, "block_table": self.alloc.device_table()},
-            dcache={**state.dcache, "block_table": self.alloc.device_table()})
+            tcache={**state.tcache, "block_table": t_table},
+            dcache={**state.dcache, "block_table": d_table})
 
     # -------------------------------------------------------------- prefill
     def _prefill_into(self, state: RowState, row: int, req: ServeRequest):
@@ -133,11 +160,29 @@ class PagedSpecServer:
         padded = self.sched.pad_to_bucket(np.asarray(req.prompt, np.int32))
         P = req.prompt_len
         if self._prefill_jit is None:
-            def prefill(pt, pd, prompt, tc, dc):
-                _, tc, _ = self.target.apply(pt, prompt[:, :-1], tc)
-                _, dc, _ = self.drafter.apply(pd, prompt[:, :-1], dc)
-                return tc, dc
-            self._prefill_jit = jax.jit(prefill, donate_argnums=(3, 4))
+            if self.placement is None:
+                def prefill(pt, pd, prompt, tc, dc):
+                    _, tc, _ = self.target.apply(pt, prompt[:, :-1], tc)
+                    _, dc, _ = self.drafter.apply(pd, prompt[:, :-1], dc)
+                    return tc, dc
+                self._prefill_jit = jax.jit(prefill, donate_argnums=(3, 4))
+            else:
+                # placed: each role's prefill is its own program on its own
+                # submesh (one jit cannot span two meshes)
+                t_jit = jax.jit(
+                    lambda pt, prompt, tc:
+                        self.target.apply(pt, prompt[:, :-1], tc)[1],
+                    donate_argnums=(2,))
+                d_jit = jax.jit(
+                    lambda pd, prompt, dc:
+                        self.drafter.apply(pd, prompt[:, :-1], dc)[1],
+                    donate_argnums=(2,))
+                pm = self.placement
+
+                def prefill(pt, pd, prompt, tc, dc):
+                    return (t_jit(pt, pm.to_target(prompt), tc),
+                            d_jit(pd, pm.to_drafter(prompt), dc))
+                self._prefill_jit = prefill
         t_table = state.tcache["block_table"]
         d_table = state.dcache["block_table"]
         tc_view = {**state.tcache, "block_table": t_table[row:row + 1],
@@ -170,6 +215,11 @@ class PagedSpecServer:
             self._ar_jit = jax.jit(
                 lambda pt, st: rounds.ar_round(self.target, pt, st),
                 donate_argnums=(1,))
+        if self.placement is not None:
+            # the drafter cache lives on its own submesh; AR rounds are
+            # target-only, so detach it, run placed, reattach untouched
+            out = self._ar_jit(self.params_t, state._replace(dcache=None))
+            return out._replace(dcache=state.dcache)
         return self._ar_jit(self.params_t, state)
 
     # -------------------------------------------------------------- serving

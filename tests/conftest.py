@@ -1,5 +1,8 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
-(the 512-device override belongs exclusively to launch/dryrun.py)."""
+"""Shared fixtures. NOTE: no XLA_FLAGS here — the default suite runs on
+1 CPU device (the 512-device override belongs to launch/dryrun.py). The
+placement suite's distinct-submesh cases need 8 forced host devices and
+skip otherwise; CI runs them in a dedicated step with
+XLA_FLAGS=--xla_force_host_platform_device_count=8."""
 import jax
 import pytest
 
