@@ -50,22 +50,36 @@ def run(strategy, use_cache, mt, md, pt, pd, ps):
     return t, stats["rounds"]
 
 
-def phase_times(mt, md, pt, pd, ps):
-    """Per-phase (draft/verify/commit) steady-state times from the shared
-    core, on the cached modular configuration."""
+def phase_times(mt, md, pt, pd, ps, iters=10):
+    """Per-phase (draft/verify/commit) steady-state times on the cached
+    modular configuration, measured through the SAME traced execution the
+    servers use (obs tracing -> rounds.TracedRound) on rolling state —
+    each iteration advances a real generation instead of re-running one
+    frozen round. A DriftMonitor validates the bench's c prior against the
+    measured phase split and returns the drift report alongside."""
+    from repro.obs import DriftConfig, DriftMonitor, Tracer
+
     eng = SpecEngine(mt, md, EngineConfig(gamma=GAMMA, greedy=True,
                                           use_cache=True, strategy="modular"))
-    state = eng.prefill(pt, pd, ps, ps.shape[1] + MAX_NEW + GAMMA + 2)
-    draft, verify, commit = rounds.phase_fns(mt, md, eng._spec(True))
-    draft_j, verify_j = jax.jit(draft), jax.jit(verify)
-    commit_j = jax.jit(commit)
-    d = draft_j(pd, state)
-    v = verify_j(pt, state, d)
-    return {
-        "draft_ms": time_call(lambda: draft_j(pd, state), iters=10) * 1e3,
-        "verify_ms": time_call(lambda: verify_j(pt, state, d), iters=10) * 1e3,
-        "commit_ms": time_call(lambda: commit_j(state, d, v), iters=10) * 1e3,
-    }
+    # state must hold the full rolling run: one accept-all round commits
+    # gamma+1 tokens, and the warmup round decodes too
+    max_len = ps.shape[1] + (iters + 2) * (GAMMA + 1) + GAMMA + 2
+    state = eng.prefill(pt, pd, ps, max_len)
+    tracer = Tracer()
+    rnd = rounds.TracedRound(mt, md, eng._spec(True), tracer, role="bench")
+    state = rnd(pt, pd, state, round=0)          # compile + warmup
+    tracer.clear()
+    drift = DriftMonitor(GAMMA, c=0.1,           # the bench's planner prior
+                         cfg=DriftConfig(warmup_rounds=1,
+                                         calibration_rounds=3))
+    for k in range(iters):
+        state = rnd(pt, pd, state, round=k + 1)
+        t = rnd.last_phase_times
+        drift.observe(t_round=sum(t.values()), t_draft=t["draft"],
+                      t_verify=t["verify"], t_commit=t["commit"])
+    out = {f"{ph}_ms": tracer.total(name=ph) / iters * 1e3
+           for ph in ("draft", "verify", "commit")}
+    return out, drift
 
 
 def measure_topk_acceptance(mt, md, pt, pd, ps, n_new=48):
@@ -169,10 +183,17 @@ def main():
         print(f"# cache={cache}: modular boundary overhead "
               f"{ovh*1e3:+.2f} ms/round ({(t_mod/t_mono-1)*100:+.1f}%)")
 
-    phases = phase_times(mt, md, pt, pd, ps)
+    phases, drift = phase_times(mt, md, pt, pd, ps)
     print(f"# round phases (cached): draft {phases['draft_ms']:.2f} ms, "
           f"verify {phases['verify_ms']:.2f} ms, "
           f"commit {phases['commit_ms']:.2f} ms")
+    ev = drift.evidence()
+    if ev:
+        print(f"# measured cost model: c={ev['c']:.3f} "
+              f"(t_draft={ev['t_draft'] * 1e3:.2f} ms/token, "
+              f"t_target={ev['t_target'] * 1e3:.2f} ms) vs prior c=0.10")
+    for msg in drift.alerts():
+        print(f"# drift: {msg}")
 
     pol = draft_policy_bench(mt, md, pt, pd, ps)
     print(f"# low-acceptance workload: alpha={pol['alpha']:.2f}, "
@@ -195,6 +216,7 @@ def main():
                        {"total_ms": t * 1e3, "rounds": rr}
                        for (s, c), (t, rr) in rows.items()},
         "phases_ms": phases,
+        "phase_drift": drift.to_dict(),
         "draft_policy": pol,
     }
     (CACHE / "strategies.json").write_text(json.dumps(record, indent=1))

@@ -15,7 +15,8 @@ See docs/API.md for the lifecycle and the migration table from legacy
 constructors.
 """
 from repro.api.backends import SpecBackend
-from repro.api.feedback import AlphaEma, GammaController, best_gamma
+from repro.api.feedback import (AlphaEma, GammaController, best_gamma,
+                                respec_from_drift)
 from repro.api.placement import (Placement, PlacementError, RolePlacement,
                                  lower, lower_or_degenerate)
 from repro.api.plan import (CacheLayout, DeploymentSpec, ExecutionPlan,
@@ -29,4 +30,4 @@ __all__ = ["AlphaEma", "CacheLayout", "DeploymentSpec", "ExecutionPlan",
            "GammaController", "GammaSchedule", "Placement", "PlacementError",
            "PlacementPlan", "Planner", "RolePlacement", "ServeRequest",
            "Session", "SpecBackend", "SubmeshSpec", "best_gamma", "lower",
-           "lower_or_degenerate", "plan_deployment"]
+           "lower_or_degenerate", "plan_deployment", "respec_from_drift"]

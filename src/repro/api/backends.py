@@ -66,12 +66,14 @@ class EngineBackend:
     name = "engine"
 
     def __init__(self, target, drafter, params_t, params_d,
-                 plan: ExecutionPlan, max_batch: int = 8, placement=None):
+                 plan: ExecutionPlan, max_batch: int = 8, placement=None,
+                 tracer=None):
         self.target, self.drafter = target, drafter
         self.params_t, self.params_d = params_t, params_d
         self.plan = plan
         self.max_batch = max_batch
         self.placement = placement
+        self.tracer = tracer
         self.controller = GammaController(plan.gamma, plan.cost_coefficient)
         self._engines: Dict[int, SpecEngine] = {}
 
@@ -84,7 +86,7 @@ class EngineBackend:
                              temperature=p.temperature, use_cache=p.use_cache,
                              strategy=p.strategy,
                              draft_policy=p.draft_policy, draft_k=p.draft_k),
-                placement=self.placement)
+                placement=self.placement, tracer=self.tracer)
         return self._engines[gamma]
 
     # ----------------------------------------------------------------- paths
@@ -170,7 +172,8 @@ class PerRowBackend:
     name = "per_row"
 
     def __init__(self, target, drafter, params_t, params_d,
-                 plan: ExecutionPlan, max_batch: int = 8, placement=None):
+                 plan: ExecutionPlan, max_batch: int = 8, placement=None,
+                 tracer=None):
         from repro.core.batched_engine import (BatchedEngineConfig,
                                                BatchedSpecEngine)
         self.target, self.drafter = target, drafter
@@ -178,6 +181,7 @@ class PerRowBackend:
         self.plan = plan
         self.max_batch = max_batch
         self.placement = placement
+        self.tracer = tracer
         # gamma is consulted at batch boundaries, where the AR path is
         # reachable (g==0 branch below) — let the controller downgrade
         self.controller = GammaController(plan.gamma, plan.cost_coefficient,
@@ -186,7 +190,7 @@ class PerRowBackend:
         self._mk = lambda g: BatchedSpecEngine(
             target, drafter,
             BatchedEngineConfig(gamma=g, max_new_tokens=plan.max_new),
-            placement=placement)
+            placement=placement, tracer=tracer)
 
     def _engine(self, gamma: int):
         if gamma not in self._engines:
@@ -230,12 +234,14 @@ class ContinuousBackend:
     name = "continuous"
 
     def __init__(self, target, drafter, params_t, params_d,
-                 plan: ExecutionPlan, max_batch: int = 4, placement=None):
+                 plan: ExecutionPlan, max_batch: int = 4, placement=None,
+                 tracer=None):
         self.target, self.drafter = target, drafter
         self.params_t, self.params_d = params_t, params_d
         self.plan = plan
         self.max_batch = max_batch
         self.placement = placement
+        self.tracer = tracer
         # consulted per uniform group, where the g==0 AR branch is reachable
         self.controller = GammaController(plan.gamma, plan.cost_coefficient,
                                           allow_ar=True)
@@ -247,7 +253,7 @@ class ContinuousBackend:
         if gamma not in self._engines:
             self._engines[gamma] = BatchedSpecEngine(
                 self.target, self.drafter, BatchedEngineConfig(gamma=gamma),
-                placement=self.placement)
+                placement=self.placement, tracer=self.tracer)
         return self._engines[gamma]
 
     def serve(self, requests):
@@ -262,7 +268,7 @@ class ContinuousBackend:
                 self.target, self.drafter, self.params_t, self.params_d,
                 batch=min(self.max_batch, len(group)), prompt_len=P,
                 max_new=max_new, gamma=g, engine=self._engine(g),
-                placement=self.placement)
+                placement=self.placement, tracer=self.tracer)
             for r in group:
                 srv.submit(StreamRequest(r.rid, np.asarray(r.prompt, np.int32)))
             by_rid = {r.rid: r for r in group}
@@ -293,7 +299,8 @@ class PagedBackend:
     name = "paged"
 
     def __init__(self, target, drafter, params_t, params_d,
-                 plan: ExecutionPlan, max_batch: int = 4, placement=None):
+                 plan: ExecutionPlan, max_batch: int = 4, placement=None,
+                 tracer=None):
         from repro.serving import PagedSpecServer, SchedulerConfig
         self.plan = plan
         self.placement = placement
@@ -309,11 +316,19 @@ class PagedBackend:
         gamma_override = None if plan.gamma.adaptive else plan.gamma.gamma
         self.server = PagedSpecServer(target, drafter, params_t, params_d,
                                       scfg, gamma=gamma_override,
-                                      placement=placement)
+                                      placement=placement, tracer=tracer)
 
     @property
     def metrics(self):
         return self.server.metrics
+
+    @property
+    def events(self):
+        return self.server.events
+
+    @property
+    def drift(self):
+        return self.server.drift
 
     def serve(self, requests):
         for r in requests:

@@ -54,6 +54,32 @@ class AlphaEma:
         return default if self.value is None else self.value
 
 
+def respec_from_drift(spec, monitor, alpha: Optional[float] = None):
+    """Fold a DriftMonitor's measured evidence back into a DeploymentSpec.
+
+    The re-planning half of the observability loop (docs/DESIGN.md §7): a
+    traced run's drift monitor measures t_draft (per token), t_target, and
+    the dispatch overhead; this replaces the spec's priors with those
+    measurements and clears ``cost_coefficient`` so the Planner re-derives
+    c = t_draft/t_target from them. Pass the run's measured acceptance EMA
+    as ``alpha`` (e.g. ``session.alpha_hat``) to replace that prior too.
+    Returns ``spec`` unchanged when the monitor has no evidence yet (not
+    calibrated, or no draft phase observed).
+    """
+    import dataclasses
+
+    ev = monitor.evidence() if monitor is not None else None
+    if not ev:
+        return spec
+    updates = dict(cost_coefficient=None, t_draft=ev["t_draft"],
+                   t_target=ev["t_target"])
+    if ev.get("dispatch_overhead") is not None:
+        updates["dispatch_overhead"] = ev["dispatch_overhead"]
+    if alpha is not None:
+        updates["alpha"] = min(max(float(alpha), 1e-3), 0.999)
+    return dataclasses.replace(spec, **updates)
+
+
 class GammaController:
     """Per-session gamma controller driven by a GammaSchedule.
 

@@ -58,15 +58,24 @@ class Session:
 
     def __init__(self, target, drafter, params_t, params_d,
                  plan: ExecutionPlan, *, max_batch: Optional[int] = None,
-                 placement=None):
+                 placement=None, tracer=None):
         """``placement``: a pre-lowered ``api.placement.Placement``; None
         lowers the plan's PlacementPlan against the visible devices (plans
         whose submeshes do not fit fall back to the degenerate single-mesh
-        lowering, with the reason on ``session.placement.note``)."""
+        lowering, with the reason on ``session.placement.note``).
+
+        ``tracer``: a ``repro.obs.Tracer`` the Session owns for its
+        lifetime and threads through the backend (None = disabled tracing,
+        which is free). An ENABLED tracer switches speculative rounds onto
+        the phase-split traced execution (draft/verify/commit spans,
+        per-phase round events, cost-model drift monitoring) — inspect via
+        ``session.telemetry()``."""
         from repro.api import placement as placement_mod
+        from repro.obs.trace import NULL_TRACER
         self.target, self.drafter = target, drafter
         self.params_t, self.params_d = params_t, params_d
         self.plan = plan
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         if placement is None:
             placement = placement_mod.lower_or_degenerate(plan.placement)
         self.placement = placement
@@ -75,7 +84,7 @@ class Session:
             max_batch = 4 if self.backend_name in ("continuous", "paged") else 8
         self.backend: SpecBackend = self._BACKENDS[self.backend_name](
             target, drafter, params_t, params_d, plan, max_batch=max_batch,
-            placement=placement)
+            placement=placement, tracer=self.tracer)
 
     # --------------------------------------------------------- construction
     @classmethod
@@ -121,6 +130,25 @@ class Session:
             return ctl.alpha_hat
         metrics = getattr(self.backend, "metrics", None)
         return metrics.alpha_hat() if metrics is not None else None
+
+    def telemetry(self) -> dict:
+        """The session's telemetry bundle (repro.obs):
+
+            tracer  — the Session-owned Tracer (export via .export(path))
+            events  — per-round RoundEventLog (paged backend; else None)
+            drift   — cost-model DriftMonitor (paged backend, None until a
+                      speculative round has run)
+            metrics — ServingMetrics counters (serving backends; else None)
+
+        Live objects, not snapshots: call .report()/.summary()/.alerts()
+        on them as the run progresses."""
+        srv = getattr(self.backend, "server", None)
+        return {
+            "tracer": self.tracer,
+            "events": getattr(srv or self.backend, "events", None),
+            "drift": getattr(srv or self.backend, "drift", None),
+            "metrics": getattr(self.backend, "metrics", None),
+        }
 
     def describe(self) -> str:
         p = self.plan

@@ -50,19 +50,26 @@ class BatchedEngineConfig:
 
 class BatchedSpecEngine:
     def __init__(self, target_model, drafter_model, ecfg: BatchedEngineConfig,
-                 placement=None):
+                 placement=None, tracer=None):
         """``placement`` (api/placement.py): run per-row rounds placed —
         draft on the drafter submesh, verify/commit on the target submesh
         (core/rounds.PlacedRound). ``_round_jit`` then IS the placed round,
         so the continuous/paged servers that drive it inherit placement
         transparently. Linear cached per-row rounds only (validated by
-        PlacedRound)."""
+        PlacedRound).
+
+        An ENABLED ``tracer`` (repro.obs) switches the single-mesh round
+        onto ``rounds.TracedRound`` — phase-split, host-blocked per phase,
+        emitting draft/verify/commit spans — instead of the fused donated
+        round; placed rounds keep their async dispatch and emit
+        non-blocking dispatch/handoff spans."""
         assert target_model.family in KV_FAMILIES, \
             f"per-row speculation needs a KV-cache family, got {target_model.family}"
         assert drafter_model.family in KV_FAMILIES
         self.target = target_model
         self.drafter = drafter_model
         self.ecfg = ecfg
+        self.tracer = tracer if tracer is not None else rounds.NULL_TRACER
         self._round_spec = rounds.RoundSpec(
             gamma=ecfg.gamma, greedy=ecfg.greedy,
             temperature=ecfg.temperature, commit="per_row", use_cache=True,
@@ -72,7 +79,11 @@ class BatchedSpecEngine:
                           and placement.heterogeneous else None)
         if self.placement is not None:
             self._round_jit = rounds.PlacedRound(
-                self.target, self.drafter, self._round_spec, self.placement)
+                self.target, self.drafter, self._round_spec, self.placement,
+                tracer=self.tracer)
+        elif self.tracer.enabled:
+            self._round_jit = rounds.TracedRound(
+                self.target, self.drafter, self._round_spec, self.tracer)
 
     # --------------------------------------------------------------- round
     def round(self, params_t, params_d, st: RowState) -> RowState:

@@ -74,14 +74,16 @@ class SpecEngine:
     """
 
     def __init__(self, target_model, drafter_model, ecfg: EngineConfig,
-                 placement=None):
+                 placement=None, tracer=None):
         self.target = target_model
         self.drafter = drafter_model
         self.ecfg = ecfg
+        self.tracer = tracer if tracer is not None else rounds.NULL_TRACER
         self.d_stateful = drafter_model.family in ("ssm", "hybrid")
         self._policy = rounds.make_policy(ecfg.draft_policy, ecfg.draft_k)
         self._specs: Dict[bool, rounds.RoundSpec] = {}
         self._round_jit = None
+        self._traced_round = None
         self._run_jit = {}       # (target_len,) -> jitted monolithic generate
         self.placement = None
         self.placement_note = ""
@@ -96,7 +98,8 @@ class SpecEngine:
             else:
                 self.placement = placement
                 self._placed_round = rounds.PlacedRound(
-                    self.target, self.drafter, self._spec(True), placement)
+                    self.target, self.drafter, self._spec(True), placement,
+                    tracer=self.tracer)
 
     def _spec(self, use_cache: bool) -> rounds.RoundSpec:
         if use_cache not in self._specs:
@@ -178,14 +181,18 @@ class SpecEngine:
         state = rounds.place_state(state, pm, self.target, self.drafter)
         placed = self._placed_round
         if pm.overlap:
+            k = 0
             prev = state
-            pending = placed(params_t, params_d, prev)
+            pending = placed(params_t, params_d, prev, round=k)
             while int(prev.length) < target_len:
+                k += 1
                 prev = pending
-                pending = placed(params_t, params_d, prev)
+                pending = placed(params_t, params_d, prev, round=k)
             return prev
+        k = 0
         while int(state.length) < target_len:
-            state = placed(params_t, params_d, state)
+            state = placed(params_t, params_d, state, round=k)
+            k += 1
         return state
 
     # -------------------------------------------------------------- generate
@@ -224,7 +231,26 @@ class SpecEngine:
                     return jax.lax.while_loop(cond, body, s)
                 self._run_jit[key_] = jax.jit(
                     run, donate_argnums=(2,) if donate else ())
-            state = self._run_jit[key_](params_t, params_d, state)
+            # the fused while_loop is ONE program — tracing can't split
+            # phases, so the span covers the whole generation (blocked so
+            # the span means device time, not enqueue time)
+            with self.tracer.span("generate", phase="round", role="target",
+                                  strategy="monolithic"):
+                state = self._run_jit[key_](params_t, params_d, state)
+                if self.tracer.enabled:
+                    jax.block_until_ready(state.length)
+        elif self.tracer.enabled:
+            # phase-split traced rounds (draft/verify/commit spans); slower
+            # than the fused donated round — only built when tracing is ON
+            if self._traced_round is None:
+                self._traced_round = rounds.TracedRound(
+                    self.target, self.drafter, self._spec(e.use_cache),
+                    self.tracer)
+            k = 0
+            while int(state.length) < target_len:
+                state = self._traced_round(params_t, params_d, state,
+                                           round=k)
+                k += 1
         else:
             if self._round_jit is None:
                 self._round_jit = jax.jit(

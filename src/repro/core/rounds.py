@@ -46,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.cache import ops as cache_ops
 from repro.core import acceptance
+from repro.obs.trace import NULL_TRACER
 
 COMMIT_MODES = ("batch_min", "per_row")
 
@@ -585,7 +586,8 @@ class PlacedRound:
     the single-mesh path.
     """
 
-    def __init__(self, target, drafter, spec: RoundSpec, placement):
+    def __init__(self, target, drafter, spec: RoundSpec, placement,
+                 tracer=None):
         if spec.policy.k > 1:
             raise ValueError("placed rounds are linear-draft only")
         if not spec.use_cache:
@@ -596,6 +598,7 @@ class PlacedRound:
                              "(state-trail rollback is single-mesh)")
         self.target, self.drafter = target, drafter
         self.spec, self.placement = spec, placement
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         sp = spec
 
         def draft(params_d, t_last, length, dcache, key, active):
@@ -636,25 +639,40 @@ class PlacedRound:
         self._vc_jit = jax.jit(verify_commit, donate_argnums=(2,))
         self._drb_jit = jax.jit(drafter_rollback, donate_argnums=(0,))
 
-    def __call__(self, params_t, params_d, state: RoundState) -> RoundState:
-        pm = self.placement
+    def __call__(self, params_t, params_d, state: RoundState,
+                 **tags) -> RoundState:
+        # Tracing note: placed spans deliberately do NOT block — blocking
+        # would serialize exactly the async pipelining this class exists to
+        # exploit. A placed span therefore measures host enqueue + transfer
+        # time (kind="dispatch"/"handoff"); per-phase DEVICE time comes from
+        # the phase-split TracedRound (see docs/DESIGN.md §7).
+        pm, tr = self.placement, self.tracer
         # last committed token + row lengths -> drafter submesh: a [B]
         # vector each, NOT the [B, T] buffer — the whole cross-domain
         # traffic really is gamma-token sized
         t_last_t = _gather_last(state.tokens, state.length)
-        t_last_d, length_d, active_d, key_d, d_off_d = pm.to_drafter(
-            (t_last_t, state.length, state.active, state.key, state.d_off))
-        drafts, q_log, dcache, key2 = self._draft_jit(
-            params_d, t_last_d, length_d, state.dcache, key_d, active_d)
+        with tr.span("draft.dispatch", phase="draft", role="drafter",
+                     kind="dispatch", **tags):
+            t_last_d, length_d, active_d, key_d, d_off_d = pm.to_drafter(
+                (t_last_t, state.length, state.active, state.key,
+                 state.d_off))
+            drafts, q_log, dcache, key2 = self._draft_jit(
+                params_d, t_last_d, length_d, state.dcache, key_d, active_d)
         # the gamma-token handoff -> target submesh
-        drafts_t, q_t, key_t = pm.to_target((drafts, q_log, key2))
-        new = self._vc_jit(params_t,
-                           state._replace(dcache=None, tcache=None),
-                           state.tcache, drafts_t, t_last_t, q_t, key_t)
+        with tr.span("handoff", phase="handoff", role="target",
+                     kind="handoff", **tags):
+            drafts_t, q_t, key_t = pm.to_target((drafts, q_log, key2))
+        with tr.span("verify_commit.dispatch", phase="verify", role="target",
+                     kind="dispatch", **tags):
+            new = self._vc_jit(params_t,
+                               state._replace(dcache=None, tcache=None),
+                               state.tcache, drafts_t, t_last_t, q_t, key_t)
         # commit result -> drafter submesh; rollback dispatches there while
         # the caller is free to enqueue the next round (async dispatch)
-        new_len_d = pm.to_drafter(new.length)
-        dcache = self._drb_jit(dcache, new_len_d, d_off_d)
+        with tr.span("rollback.dispatch", phase="commit", role="drafter",
+                     kind="dispatch", **tags):
+            new_len_d = pm.to_drafter(new.length)
+            dcache = self._drb_jit(dcache, new_len_d, d_off_d)
         return new._replace(dcache=dcache)
 
 
@@ -671,3 +689,54 @@ def phase_fns(target, drafter, spec: RoundSpec):
         return commit_phase(target, state, d, v, spec)
 
     return draft, verify, commit
+
+
+class TracedRound:
+    """ONE speculative round, phase-split for observability: the three
+    ``phase_fns`` are jitted as separate programs and each is host-blocked
+    (``jax.block_until_ready``) INSIDE its span, so a span's wall time is
+    that phase's device time — measured once, at the block point, never
+    double-counted against async dispatch.
+
+    The observability tax vs the fused round: three dispatches instead of
+    one, no buffer donation (phase outputs cross jit boundaries), and a
+    host sync per phase that forfeits pipelining. That is why engines build
+    a TracedRound only when handed an ENABLED tracer and keep the fused
+    donated round otherwise (the <1% disabled-overhead budget).
+
+    Token identity with ``spec_round`` is the phase-decomposition invariant
+    (tests/test_rounds.py): ``spec_round`` IS the composition of these
+    phases, so tracing changes when the host waits, never what the round
+    commits.
+
+    ``last_phase_times`` holds the most recent round's per-phase seconds —
+    servers turn it into RoundEvents and drift-monitor observations.
+    """
+
+    def __init__(self, target, drafter, spec: RoundSpec, tracer, **tags):
+        self.spec = spec
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.tags = tags
+        d, v, c = phase_fns(target, drafter, spec)
+        self._draft = jax.jit(d)
+        self._verify = jax.jit(v)
+        self._commit = jax.jit(c)
+        self.last_phase_times: dict = {}
+
+    def __call__(self, params_t, params_d, state: RoundState,
+                 **tags) -> RoundState:
+        tr = self.tracer
+        t = {**self.tags, **tags}      # caller tags may override role etc.
+        with tr.span("draft",
+                     **{"phase": "draft", "role": "drafter", **t}) as s_d:
+            d = jax.block_until_ready(self._draft(params_d, state))
+        with tr.span("verify",
+                     **{"phase": "verify", "role": "target", **t}) as s_v:
+            v = jax.block_until_ready(self._verify(params_t, state, d))
+        with tr.span("commit",
+                     **{"phase": "commit", "role": "target", **t}) as s_c:
+            new = jax.block_until_ready(self._commit(state, d, v))
+        self.last_phase_times = {"draft": s_d.duration,
+                                 "verify": s_v.duration,
+                                 "commit": s_c.duration}
+        return new

@@ -46,6 +46,47 @@ def add_spec_args(ap: argparse.ArgumentParser, *, gamma: int = None
     return ap
 
 
+def add_trace_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable round-phase tracing (repro.obs) and write a "
+                         "Chrome-trace/Perfetto JSON of the run's "
+                         "draft/verify/commit spans to PATH. Tracing "
+                         "phase-splits the round (three host-synced "
+                         "programs), so expect lower throughput than the "
+                         "untraced fused round.")
+    return ap
+
+
+def make_tracer(args):
+    """Tracer from ``--trace-out``: enabled iff a path was given (disabled
+    tracing is free — the Session threads it through regardless)."""
+    from repro.obs import Tracer
+    return Tracer(enabled=args.trace_out is not None)
+
+
+def report_telemetry(sess, args):
+    """Post-run telemetry: export the Chrome trace, print the per-phase
+    breakdown and any cost-model drift alerts. No-op when tracing is off."""
+    tel = sess.telemetry()
+    tracer = tel["tracer"]
+    if args.trace_out and tracer.enabled:
+        tracer.export(args.trace_out)
+        totals = tracer.phase_totals()
+        breakdown = ", ".join(f"{k}={v * 1e3:.0f}ms"
+                              for k, v in sorted(totals.items()))
+        print(f"trace: {tracer.count()} spans -> {args.trace_out} "
+              f"({breakdown})")
+    drift = tel.get("drift")
+    if drift is not None and drift.calibrated:
+        for msg in drift.alerts():
+            print(f"drift: {msg}")
+        ev = drift.evidence()
+        if ev:
+            print(f"drift: measured c={ev['c']:.3f} "
+                  f"(t_draft={ev['t_draft'] * 1e3:.2f}ms/token, "
+                  f"t_target={ev['t_target'] * 1e3:.2f}ms)")
+
+
 def apply_placement_arg(plan, placement_arg):
     """Replace the plan's PlacementPlan from a ``DxT`` CLI string (overlap
     armed — the placed runtime's async draft dispatch). None = no-op."""

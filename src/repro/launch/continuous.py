@@ -19,7 +19,6 @@ ContinuousSpecServer directly is deprecated (migration: docs/API.md).
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, List, Optional
@@ -31,6 +30,8 @@ import numpy as np
 from repro.core import rounds
 from repro.core.batched_engine import (BatchedEngineConfig, BatchedSpecEngine,
                                        RowState)
+from repro.obs import clock
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclass
@@ -45,7 +46,7 @@ class ContinuousSpecServer:
     def __init__(self, target, drafter, params_t, params_d, *,
                  batch: int = 4, prompt_len: int = 12, max_new: int = 24,
                  gamma: int = 4, engine: Optional[BatchedSpecEngine] = None,
-                 placement=None):
+                 placement=None, tracer=None):
         """``engine`` lets callers share one (jit-cached) engine across
         server instances; it must have been built with the same gamma.
         ``placement`` (api/placement.py) runs the rounds placed — per-role
@@ -61,9 +62,10 @@ class ContinuousSpecServer:
                 raise ValueError(
                     "shared engine was built without this placement — build "
                     "it with BatchedSpecEngine(..., placement=...) or drop one")
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.engine = engine or BatchedSpecEngine(
             target, drafter, BatchedEngineConfig(gamma=gamma),
-            placement=placement)
+            placement=placement, tracer=self.tracer)
         self.placement = self.engine.placement
         if self.placement is not None:
             params_t = self.placement.target.put_params(target, params_t)
@@ -116,8 +118,12 @@ class ContinuousSpecServer:
                     buf, tc = t_jit(pt, pm.to_target(prompt))
                     return buf, d_jit(pd, pm.to_drafter(prompt)), tc
                 self._prefill_jit = prefill
-        return self._prefill_jit(self.params_t, self.params_d,
-                                 jnp.asarray(prompt[None], jnp.int32))
+        with self.tracer.span("prefill", phase="prefill", role="target"):
+            out = self._prefill_jit(self.params_t, self.params_d,
+                                    jnp.asarray(prompt[None], jnp.int32))
+            if self.tracer.enabled:
+                jax.block_until_ready(out)
+        return out
 
     def _insert_row(self, state: RowState, b: int, buf1, dc1, tc1):
         """Scatter a one-row prefill into live batch state at slot b.
@@ -194,10 +200,19 @@ class ContinuousSpecServer:
             eng._round_jit = jax.jit(lambda pt, pd, s: eng.round(pt, pd, s))
         target_len = self.P + self.max_new
         n_rounds = 0
+        traced = isinstance(eng._round_jit, rounds.TracedRound)
         while any(r is not None and r.rid >= 0 for r in self._slots):
             prev_len = np.asarray(self._state.length)
             prev_active = np.asarray(self._state.active)
-            self._state = eng._round_jit(self.params_t, self.params_d, self._state)
+            if traced:
+                rids = tuple(r.rid for r in self._slots
+                             if r is not None and r.rid >= 0)
+                self._state = eng._round_jit(self.params_t, self.params_d,
+                                             self._state, round=n_rounds,
+                                             rids=rids)
+            else:
+                self._state = eng._round_jit(self.params_t, self.params_d,
+                                             self._state)
             n_rounds += 1
             lengths = np.asarray(self._state.length)
             # acceptance telemetry: each active row emits n_accepted+1 tokens
@@ -236,6 +251,7 @@ def main():
     cli_args.add_model_args(ap)
     cli_args.add_traffic_args(ap)
     cli_args.add_spec_args(ap)
+    cli_args.add_trace_args(ap)
     ap.add_argument("--batch", type=int, default=4,
                     help="live slots in the continuous batch")
     args = ap.parse_args()
@@ -254,21 +270,23 @@ def main():
                            gamma=_dc.replace(plan.gamma, gamma=args.gamma))
     gamma = plan.gamma.gamma
     plan = cli_args.apply_placement_arg(plan, args.placement)
-    sess = Session(mt, md, pt, pd, plan, max_batch=args.batch)
+    sess = Session(mt, md, pt, pd, plan, max_batch=args.batch,
+                   tracer=cli_args.make_tracer(args))
     if args.placement:
         print(sess.placement.describe())
 
     rng = np.random.default_rng(0)
     reqs = [sess.request(rng.integers(0, cfg_t.vocab_size, args.prompt_len),
                          args.max_new, rid=i) for i in range(args.requests)]
-    t0 = time.time()
+    t0 = clock.wall()
     done = sess.serve(reqs)
-    dt = time.time() - t0
+    dt = clock.wall() - t0
     total = sum(len(r.tokens) - r.prompt_len for r in done)
     print(f"continuous-served {len(done)} requests, {total} tokens in "
           f"{dt:.2f}s ({total / dt:.1f} tok/s aggregate, gamma={gamma}"
           f"{' [forced]' if args.gamma is not None else ' [cost-model]'}, "
           f"B={args.batch}, backend={sess.backend_name})")
+    cli_args.report_telemetry(sess, args)
 
 
 if __name__ == "__main__":

@@ -13,7 +13,6 @@ interrupted sweeps resume, and benchmarks/roofline.py renders the table.
 """
 import argparse
 import json
-import time
 import traceback
 from pathlib import Path
 
@@ -27,6 +26,7 @@ from repro.launch import hlo_analysis, steps
 from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
 from repro.models.model import build_model
 from repro.models.specs import ShardingPolicy
+from repro.obs import clock
 
 RESULTS = Path(__file__).resolve().parents[3] / "dryrun_results.json"
 
@@ -128,15 +128,15 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose=True,
                          replicate_batch=serve_2d,
                          mesh_axis_sizes=sizes)
     model = build_model(cfg)
-    t0 = time.time()
+    t0 = clock.wall()
     with mesh:
         jitted, inputs = build(model, mesh, pol, shape, cfg,
                                quantized=bool(variant.get("int8_w")),
                                cache_int8=bool(variant.get("int8_kv")))
         lowered = jitted.lower(*flatten_inputs(shape.kind, inputs))
-        t_lower = time.time() - t0
+        t_lower = clock.wall() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = clock.wall() - t0 - t_lower
 
     mem = hlo_analysis.memory_numbers(compiled)
     cost = hlo_analysis.cost_numbers(compiled)

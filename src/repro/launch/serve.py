@@ -13,13 +13,13 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.launch import cli_args
+from repro.obs import clock
 
 
 def main():
@@ -29,6 +29,7 @@ def main():
     cli_args.add_model_args(ap)
     cli_args.add_traffic_args(ap)
     cli_args.add_spec_args(ap)
+    cli_args.add_trace_args(ap)
     ap.add_argument("--speculative", action="store_true")
     ap.add_argument("--use-cache", action="store_true")
     ap.add_argument("--strategy", default="monolithic")
@@ -57,7 +58,8 @@ def main():
     plan = dataclasses.replace(
         plan, gamma=dataclasses.replace(plan.gamma, gamma=forced))
     plan = cli_args.apply_placement_arg(plan, args.placement)
-    sess = Session(mt, md, pt, pd, plan, max_batch=args.batch)
+    sess = Session(mt, md, pt, pd, plan, max_batch=args.batch,
+                   tracer=cli_args.make_tracer(args))
     if args.placement:
         print(sess.placement.describe())
 
@@ -65,10 +67,10 @@ def main():
         # plain autoregressive serving baseline (one fixed batch)
         prompts = rng.integers(0, cfg_t.vocab_size,
                                (args.requests, args.prompt_len))
-        t0 = time.time()
+        t0 = clock.wall()
         jax.block_until_ready(
             sess.generate(jnp.asarray(prompts), args.max_new)[0])
-        dt = time.time() - t0
+        dt = clock.wall() - t0
         print(f"AR served {args.requests} x {args.max_new} tokens in {dt:.2f}s "
               f"({args.requests*args.max_new/dt:.1f} tok/s)")
         return
@@ -76,13 +78,13 @@ def main():
     reqs = [sess.request(rng.integers(0, cfg_t.vocab_size, args.prompt_len),
                          args.max_new, rid=i) for i in range(args.requests)]
     # serve wave-by-wave so per-request latency (submit -> completion) is real
-    t0 = time.time()
+    t0 = clock.wall()
     done, latencies = [], []
     for i in range(0, len(reqs), args.batch):
         out = sess.serve(reqs[i:i + args.batch])
-        latencies += [time.time() - t0] * len(out)
+        latencies += [clock.wall() - t0] * len(out)
         done += out
-    dt = time.time() - t0
+    dt = clock.wall() - t0
     total = sum(len(r.tokens) - r.prompt_len for r in done)
     alpha = sess.alpha_hat
     print(f"speculative served {len(done)} requests, {total} tokens in "
@@ -91,6 +93,7 @@ def main():
           f"alpha_hat={float('nan') if alpha is None else alpha:.2f}, "
           f"gamma={forced}, strategy={plan.strategy}, "
           f"cache={args.use_cache}, backend={sess.backend_name})")
+    cli_args.report_telemetry(sess, args)
 
 
 if __name__ == "__main__":

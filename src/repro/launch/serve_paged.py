@@ -12,11 +12,11 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import numpy as np
 
 from repro.launch import cli_args
+from repro.obs import clock
 from repro.serving import ServeRequest
 
 
@@ -36,6 +36,7 @@ def main():
     cli_args.add_model_args(ap)
     cli_args.add_traffic_args(ap)
     cli_args.add_spec_args(ap, gamma=None)
+    cli_args.add_trace_args(ap)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--num-blocks", type=int, default=256)
@@ -65,7 +66,8 @@ def main():
         gamma=(plan.gamma if args.gamma is None else
                dataclasses.replace(plan.gamma, gamma=args.gamma)))
     plan = cli_args.apply_placement_arg(plan, args.placement)
-    sess = Session(mt, md, pt, pd, plan, max_batch=args.batch)
+    sess = Session(mt, md, pt, pd, plan, max_batch=args.batch,
+                   tracer=cli_args.make_tracer(args))
     if args.placement:
         print(sess.placement.describe())
     if sess.backend_name != "paged":
@@ -73,9 +75,9 @@ def main():
             f"--arch {args.arch} (family {mt.family!r}) cannot take the paged "
             f"backend (KV-cache families only) — use repro.launch.serve")
 
-    t0 = time.time()
+    t0 = clock.wall()
     done = sess.serve(reqs)
-    dt = time.time() - t0
+    dt = clock.wall() - t0
     srv = sess.backend.server
     s = srv.metrics.summary()
     total = s["total_generated_tokens"]
@@ -88,6 +90,7 @@ def main():
           f"alpha_hat={alpha if alpha is None else round(alpha, 2)})")
     print(f"acceptance histogram (n_accepted per round): "
           f"{s['accept_hist'][:(srv.gamma or 0) + 1].tolist()}")
+    cli_args.report_telemetry(sess, args)
 
 
 if __name__ == "__main__":

@@ -8,7 +8,6 @@ On a real slice the same code drives the full configs over the production mesh.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +22,7 @@ from repro.launch.mesh import mesh_axis_sizes
 from repro.launch import steps
 from repro.models.model import build_model
 from repro.models.specs import ShardingPolicy
+from repro.obs import clock
 from repro.training import optimizer as opt
 
 
@@ -44,7 +44,7 @@ def train(cfg, *, steps_n=200, batch=8, seq=64, lr=1e-3, seed=0, ckpt_path=None,
 
     extras = {k: jnp.full(s.shape, 0.1, s.dtype)
               for k, s in model.extra_inputs(batch).items()}
-    t0 = time.time()
+    t0 = clock.wall()
     losses = []
     for i in range(steps_n):
         tokens, labels = pipeline.split_batch(next(stream))
@@ -54,7 +54,7 @@ def train(cfg, *, steps_n=200, batch=8, seq=64, lr=1e-3, seed=0, ckpt_path=None,
         if i % log_every == 0 or i == steps_n - 1:
             print(f"step {i:5d} loss {losses[-1]:.4f} "
                   f"lr {float(metrics['lr']):.2e} "
-                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+                  f"({(clock.wall()-t0)/(i+1):.2f}s/step)", flush=True)
     if ckpt_path:
         ckpt.save(ckpt_path, params, step=steps_n)
         print(f"saved {ckpt_path}")

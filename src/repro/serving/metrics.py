@@ -10,11 +10,12 @@ Two consumers:
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import numpy as np
+
+from repro.obs import clock
 
 
 @dataclass
@@ -26,6 +27,7 @@ class RequestRecord:
     started: float = 0.0      # prefill time (admission)
     completed: float = 0.0
     n_rounds: int = 0
+    n_generated: Optional[int] = None  # actual tokens produced (<= max_new)
 
     @property
     def latency(self) -> float:
@@ -33,15 +35,16 @@ class RequestRecord:
 
     @property
     def decode_tps(self) -> float:
+        n = self.n_generated if self.n_generated is not None else self.max_new
         dt = self.completed - self.started
-        return self.max_new / dt if dt > 0 else float("inf")
+        return n / dt if dt > 0 else float("nan")
 
 
 class ServingMetrics:
     """Round- and request-level counters. ``now`` is injectable for tests."""
 
     def __init__(self, gamma_max: int = 16, alpha_ema: float = 0.9,
-                 now=time.time):
+                 now=clock.wall):
         self.gamma_max = gamma_max
         self.alpha_ema = alpha_ema
         self.now = now
@@ -67,11 +70,15 @@ class ServingMetrics:
         if self._t0 is None:
             self._t0 = self.requests[rid].started
 
-    def complete(self, rid: int):
+    def complete(self, rid: int, n_generated: Optional[int] = None):
+        """``n_generated`` is the ACTUAL token count produced; early-stopped
+        (EOS) requests must not be credited their full max_new budget."""
         rec = self.requests.pop(rid)
         rec.completed = self.now()
+        rec.n_generated = (int(n_generated) if n_generated is not None
+                           else rec.max_new)
         self._t_last = rec.completed
-        self.total_generated += rec.max_new
+        self.total_generated += rec.n_generated
         self.completed.append(rec)
         return rec
 
@@ -96,7 +103,10 @@ class ServingMetrics:
                                               np.zeros(self.gamma_max + 1,
                                                        np.int64))
                 h[a] += 1
-            alpha_round = a / gamma
+            # alpha uses the UNCLAMPED acceptance: the clamp above only
+            # bounds the histogram bins; folding it into the EMA would bias
+            # alpha_hat low whenever gamma > gamma_max
+            alpha_round = max(float(acc), 0.0) / gamma
             self._alpha = (alpha_round if self._alpha is None else
                            self.alpha_ema * self._alpha
                            + (1 - self.alpha_ema) * alpha_round)
@@ -114,7 +124,7 @@ class ServingMetrics:
             "requests_completed": len(self.completed),
             "total_generated_tokens": self.total_generated,
             "aggregate_tokens_per_s": (self.total_generated / wall
-                                       if wall > 0 else float("inf")),
+                                       if wall > 0 else None),
             "mean_latency_s": float(np.mean(lat)) if lat else float("nan"),
             "p95_latency_s": (float(np.percentile(lat, 95)) if lat
                               else float("nan")),

@@ -20,7 +20,6 @@ standalone greedy AR continuation, regardless of its neighbours' lengths.
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Optional
 
 import jax
@@ -30,6 +29,11 @@ import numpy as np
 from repro.cache.paged_kv import BlockAllocator
 from repro.core.batched_engine import (KV_FAMILIES, BatchedEngineConfig,
                                        BatchedSpecEngine, RowState)
+from repro.core.rounds import TracedRound
+from repro.obs import clock
+from repro.obs.drift import DriftMonitor
+from repro.obs.events import RoundEvent, RoundEventLog
+from repro.obs.trace import NULL_TRACER
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import Scheduler, SchedulerConfig, ServeRequest
 
@@ -40,12 +44,18 @@ class PagedSpecServer:
                  gamma: Optional[int] = None,
                  alpha: Optional[float] = None,
                  cost_coefficient: Optional[float] = None,
-                 placement=None):
+                 placement=None, tracer=None):
         """``gamma``/``alpha``/``cost_coefficient`` override the scheduler's
         cost-model decision (None = decide online from telemetry).
         ``placement`` (api/placement.py) pins each model's params and block
         pool onto its own submesh and runs speculative rounds placed; AR
-        rounds run target-only on the target submesh."""
+        rounds run target-only on the target submesh.
+
+        An ENABLED ``tracer`` (repro.obs) switches speculative rounds onto
+        the phase-split TracedRound (draft/verify/commit spans + per-phase
+        times in the round events and the drift monitor); disabled (the
+        default) keeps the fused donated round — tracing costs nothing
+        when off."""
         assert target.family in KV_FAMILIES and drafter.family in KV_FAMILIES, \
             "paged speculative serving needs KV-cache families"
         self.target, self.drafter = target, drafter
@@ -56,7 +66,10 @@ class PagedSpecServer:
             params_d = self.placement.drafter.put_params(drafter, params_d)
         self.params_t, self.params_d = params_t, params_d
         self.scfg = scfg or SchedulerConfig()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = ServingMetrics(gamma_max=self.scfg.gamma_max)
+        self.events = RoundEventLog(alpha_ema=self.metrics.alpha_ema)
+        self.drift: Optional[DriftMonitor] = None  # built at first spec round
         self.alloc = BlockAllocator(self.scfg.num_blocks, self.scfg.block_size,
                                     self.scfg.max_blocks_per_row,
                                     self.scfg.max_batch)
@@ -94,7 +107,8 @@ class PagedSpecServer:
         if gamma not in self._engines:
             eng = BatchedSpecEngine(self.target, self.drafter,
                                     BatchedEngineConfig(gamma=gamma),
-                                    placement=self.placement)
+                                    placement=self.placement,
+                                    tracer=self.tracer)
             if eng._round_jit is None:
                 # donate the round state: block pools update in place instead
                 # of being copied every round (host snapshots pre-call); the
@@ -189,8 +203,13 @@ class PagedSpecServer:
                    "index": jnp.zeros((1,), jnp.int32)}
         dc_view = {**state.dcache, "block_table": d_table[row:row + 1],
                    "index": jnp.zeros((1,), jnp.int32)}
-        tc, dc = self._prefill_jit(self.params_t, self.params_d,
-                                   jnp.asarray(padded[None]), tc_view, dc_view)
+        with self.tracer.span("prefill", phase="prefill", role="target",
+                              rid=req.rid, prompt_len=P):
+            tc, dc = self._prefill_jit(self.params_t, self.params_d,
+                                       jnp.asarray(padded[None]), tc_view,
+                                       dc_view)
+            if self.tracer.enabled:
+                jax.block_until_ready((tc["index"], dc["index"]))
         # merge: pools carry the new rows; index rolls back to P-1 (bucket
         # padding beyond it is masked); tables re-broadcast to the full batch
         tcache = {**tc, "block_table": t_table,
@@ -259,23 +278,37 @@ class PagedSpecServer:
         gathers) plus ceil((live+gamma)/BS) for the target verify; an AR
         round reads ceil(live/BS) on the target only — vs max_blocks_per_row
         per gather under the old full-pool read. Feeds kv_traffic(). Like the
-        engine bound, only occupied rows count."""
+        engine bound, only occupied rows count.
+
+        Returns ``(blocks_read, blocks_written)`` for this round (the write
+        side is a span estimate: distinct blocks covering the up-to-gamma+1
+        unverified target writes plus gamma drafter writes per occupied
+        row) — the RoundEvent's traffic fields."""
         occupied = np.array([s is not None for s in self._slots])
+        n_occ = int(occupied.sum())
         live = int(prev_len[occupied].max()) if occupied.any() else 1
         bs, mb = self.scfg.block_size, self.scfg.max_blocks_per_row
 
         def blocks(tokens):
             return min(-(-tokens // bs), mb)
 
+        def write_span(n_new):
+            # distinct blocks covering token positions [live, live + n_new)
+            return 0 if n_new <= 0 else (live + n_new - 1) // bs - live // bs + 1
+
         if self.gamma > 0:
             t_blocks, d_gathers = blocks(live + self.gamma), self.gamma
             d_blocks = sum(blocks(live + i) for i in range(self.gamma))
+            written = (write_span(self.gamma + 1)
+                       + write_span(self.gamma)) * n_occ
         else:
             t_blocks, d_gathers, d_blocks = blocks(live), 0, 0
+            written = write_span(1) * n_occ
         self.kv_blocks_read_t += t_blocks * self.B
         self.kv_blocks_read_d += d_blocks * self.B
         self.kv_blocks_capacity_t += mb * self.B
         self.kv_blocks_capacity_d += d_gathers * mb * self.B
+        return (t_blocks + d_blocks) * self.B, written
 
     def kv_traffic(self) -> Dict[str, float]:
         """KV bytes gathered by per-round attention reads, live-block-bounded
@@ -299,9 +332,22 @@ class PagedSpecServer:
                 "capacity_bytes": (self.kv_blocks_capacity_t * pt
                                    + self.kv_blocks_capacity_d * pd)}
 
+    def _measured_c(self) -> Optional[float]:
+        """Drift-measured cost coefficient, once the monitor has evidence —
+        the re-planning loop: the scheduler's next gamma decision uses the
+        MEASURED t_draft/t_target instead of the configured prior."""
+        if self._c_override is not None or self.drift is None:
+            return None
+        ev = self.drift.evidence()
+        return ev["c"] if ev else None
+
     def run(self):
         """Drain the queue; returns completed requests (submission order is
         not guaranteed — rows finish by their own lengths)."""
+        with self.tracer.span("serve", phase="serve"):
+            return self._run()
+
+    def _run(self):
         if self._state is None:
             self._state = self._empty_state()
         self._state = self._sync_tables(self._refill(self._state))
@@ -312,8 +358,8 @@ class PagedSpecServer:
         if self._gamma_override is not None:
             self.gamma = self._gamma_override
         else:
-            self.gamma, _ = self.sched.choose_gamma(self._alpha_override,
-                                                    self._c_override)
+            self.gamma, _ = self.sched.choose_gamma(
+                self._alpha_override, self._c_override or self._measured_c())
 
         lengths = np.array(self._state.length)   # writable host mirror
         while any(r is not None for r in self._slots):
@@ -323,24 +369,69 @@ class PagedSpecServer:
             # within a run because the drafter KV is not written during AR
             # rounds (it resynchronizes at the next run()/batch formation).
             if self._gamma_override is None and self.gamma > 0:
-                self.gamma, _ = self.sched.choose_gamma(self._alpha_override,
-                                                        self._c_override)
+                self.gamma, _ = self.sched.choose_gamma(
+                    self._alpha_override,
+                    self._c_override or self._measured_c())
             prev_len = lengths
-            self._account_round(prev_len)
+            blocks_read, blocks_written = self._account_round(prev_len)
+            phase_t: dict = {}
+            t0 = self.tracer.clock()
             if self.gamma > 0:
                 eng = self._engine(self.gamma)
-                self._state = eng._round_jit(self.params_t, self.params_d,
-                                             self._state)
+                if isinstance(eng._round_jit, TracedRound):
+                    self._state = eng._round_jit(
+                        self.params_t, self.params_d, self._state,
+                        round=self.total_rounds, gamma=self.gamma)
+                    phase_t = eng._round_jit.last_phase_times
+                else:
+                    self._state = eng._round_jit(self.params_t, self.params_d,
+                                                 self._state)
             else:
-                self._state = self._ar_round(self._state)
+                with self.tracer.span("ar_round", phase="verify",
+                                      role="target", round=self.total_rounds):
+                    self._state = self._ar_round(self._state)
+                    if self.tracer.enabled:
+                        jax.block_until_ready(self._state.length)
             self.total_rounds += 1
             # ONE host sync per round: lengths + active in a single pull; the
             # harvest/refill below reuse the same snapshot
             lengths, active = map(np.array, jax.device_get(
                 (self._state.length, self._state.active)))
+            t_round = self.tracer.clock() - t0   # dispatch -> host sync
             emitted = lengths - prev_len
             rids = [r.rid if r is not None else None for r in self._slots]
             self.metrics.record_round(np.maximum(emitted - 1, 0), self.gamma,
                                       active, rids)
+            self._record_event(prev_len, lengths, active, rids, t_round,
+                               phase_t, blocks_read, blocks_written)
             self._state = self._harvest(self._state, lengths)
         return self.done
+
+    def _record_event(self, prev_len, lengths, active, rids, t_round,
+                      phase_t, blocks_read, blocks_written):
+        """One RoundEvent per round (always, traced or not) + a drift
+        observation per speculative round (phase times when traced)."""
+        emitted = lengths - prev_len
+        accepted = tuple(int(max(e - 1, 0))
+                         for e, a in zip(emitted, active) if a)
+        live_rids = tuple(r for r, a in zip(rids, active)
+                          if a and r is not None)
+        self.events.record(RoundEvent(
+            round=self.total_rounds - 1, gamma=self.gamma,
+            n_active=int(np.sum(active)), accepted=accepted,
+            emitted=int(emitted[active].sum()) if active.any() else 0,
+            t_round=t_round,
+            t_draft=phase_t.get("draft"), t_verify=phase_t.get("verify"),
+            t_commit=phase_t.get("commit"),
+            blocks_read=blocks_read, blocks_written=blocks_written,
+            rids=live_rids, t_wall=clock.wall()))
+        if self.gamma > 0:
+            if self.drift is None:
+                c = (self._c_override if self._c_override is not None
+                     else self.scfg.cost_coefficient)
+                self.drift = DriftMonitor(self.gamma, c)
+            self.drift.observe(t_round=t_round,
+                               t_draft=phase_t.get("draft"),
+                               t_verify=phase_t.get("verify"),
+                               t_commit=phase_t.get("commit"),
+                               gamma=self.gamma)

@@ -118,7 +118,9 @@ class Scheduler:
     def release(self, row: int, req: ServeRequest):
         """Return a finished request's blocks to the pool."""
         self.alloc.free_row(row)
-        self.metrics.complete(req.rid)
+        n_gen = (len(req.tokens) - req.prompt_len
+                 if req.tokens is not None else None)
+        self.metrics.complete(req.rid, n_gen)
 
     # ------------------------------------------------------------ bucketing
     def bucket(self, prompt_len: int) -> int:
