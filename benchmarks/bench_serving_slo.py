@@ -1,0 +1,191 @@
+"""Replayed-traffic SLO benchmark for the async streaming front end.
+
+Replays seeded open-loop arrival traces (Poisson and bursty, from
+serving/frontend/traffic.py) against ``AsyncSpecServer`` and reports the
+serving-quality numbers a closed-loop drain cannot measure:
+
+  * TTFT p50/p95/p99 and per-output-token latency (TPOT) p50/p95 — the
+    interactive SLO pair;
+  * goodput at a fixed SLO — the fraction of requests that streamed their
+    FULL budget within deadline (tail latency, not mean, is what an edge
+    deployment provisions for);
+  * acceptance drift — windowed alpha over the run's RoundEvents (arrival
+    mix changes the batch composition round to round; Eq. 1's gamma
+    decision rides on this signal staying calibrated);
+  * per-round scheduler queue depth (burst absorption).
+
+Every replay is also CHECKED, not just timed: the streamed tokens of each
+request must be byte-identical to a fresh synchronous ``PagedSpecServer``
+run over the same requests — the async front end is a delivery mechanism,
+never a different decode.
+
+Results land in ``.bench_cache/serving_slo.json``. ``--smoke`` runs an
+untrained tiny pair with a short trace — the CI gate (asserts non-null
+TTFT percentiles and zero leaked KV blocks).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+
+import jax
+import numpy as np
+
+
+def _pct(xs, q):
+    xs = [x for x in xs if x is not None]
+    return float(np.percentile(xs, q)) if xs else None
+
+
+def _smoke_pair():
+    from repro.configs import registry
+    from repro.models.model import build_model
+    cfg_t = registry.smoke_config("llama3.2-1b")
+    cfg_d = cfg_t.replace(num_layers=max(1, cfg_t.num_layers - 1),
+                          name="draft")
+    mt, md = build_model(cfg_t), build_model(cfg_d)
+    return ((mt, mt.init(jax.random.PRNGKey(0))),
+            (md, md.init(jax.random.PRNGKey(7))),
+            cfg_t.vocab_size)
+
+
+def _server(pair_t, pair_d, scfg):
+    from repro.serving import PagedSpecServer
+    (mt, pt), (md, pd) = pair_t, pair_d
+    return PagedSpecServer(mt, md, pt, pd, scfg)
+
+
+def windowed_alpha(events, window=8):
+    """Mean per-round acceptance fraction over consecutive round windows —
+    the drift signal: a trend here says the planner's alpha prior is stale
+    for the current traffic mix."""
+    alphas = [ev.alpha_round for ev in events]
+    alphas = [a for a in alphas if a is not None]
+    return [float(np.mean(alphas[i:i + window]))
+            for i in range(0, len(alphas), window)]
+
+
+def verify_byte_identical(pair_t, pair_d, scfg, trace, records):
+    """Re-serve the trace's requests through a FRESH synchronous
+    PagedSpecServer and require every streamed token sequence to match."""
+    from repro.serving import ServeRequest
+    sync = _server(pair_t, pair_d, scfg)
+    for item in trace:
+        sync.submit(ServeRequest(item.rid, item.prompt, item.max_new))
+    done = {r.rid: r for r in sync.run()}
+    for rec in records:
+        ref = done[rec["rid"]]
+        P = len(ref.tokens) - rec["n_tokens"]
+        if not np.array_equal(rec["tokens"], ref.tokens[P:]):
+            raise AssertionError(
+                f"rid {rec['rid']}: streamed tokens diverge from the "
+                f"synchronous run — {rec['tokens']} vs {ref.tokens[P:]}")
+    return len(records)
+
+
+def replay_trace(pair_t, pair_d, scfg, trace):
+    from repro.serving.frontend import AsyncSpecServer, replay
+    srv = _server(pair_t, pair_d, scfg)
+    free0 = srv.alloc.num_free
+
+    async def go():
+        async with AsyncSpecServer(srv) as front:
+            return await replay(front, trace)
+
+    records = asyncio.run(go())
+    leaked = free0 - srv.alloc.num_free
+    met = [r["deadline_met"] for r in records
+           if r["deadline_met"] is not None]
+    depths = [ev.queue_depth for ev in srv.events.events()]
+    summary = {
+        "n_requests": len(records),
+        "n_tokens": int(sum(r["n_tokens"] for r in records)),
+        "rounds": srv.total_rounds,
+        "ttft_p50_s": _pct([r["ttft_s"] for r in records], 50),
+        "ttft_p95_s": _pct([r["ttft_s"] for r in records], 95),
+        "ttft_p99_s": _pct([r["ttft_s"] for r in records], 99),
+        "tpot_p50_s": _pct([r["tpot_s"] for r in records], 50),
+        "tpot_p95_s": _pct([r["tpot_s"] for r in records], 95),
+        "goodput": (sum(met) / len(met)) if met else None,
+        "alpha_windows": windowed_alpha(srv.events.events()),
+        "queue_depth_mean": float(np.mean(depths)) if depths else 0.0,
+        "queue_depth_max": int(max(depths)) if depths else 0,
+        "leaked_blocks": int(leaked),
+    }
+    return summary, records
+
+
+def main(smoke=False, n=20, rate=20.0, seed=0):
+    from benchmarks.common import CACHE, emit
+    from repro.serving import SchedulerConfig
+    from repro.serving.frontend import bursty_trace, poisson_trace
+
+    if smoke:
+        pair_t, pair_d, vocab = _smoke_pair()
+        scfg = SchedulerConfig(max_batch=2, block_size=4, num_blocks=64,
+                               max_blocks_per_row=16, gamma_max=4,
+                               prefill_buckets=(8, 16, 32))
+        kw = dict(prompt_lens=(4, 12), max_news=(3, 8),
+                  slo_base_s=120.0, slo_per_token_s=1.0)
+    else:
+        from benchmarks.common import VOCAB, trained_pair
+        pair_t, pair_d = trained_pair()
+        vocab = VOCAB
+        scfg = SchedulerConfig(max_batch=4, block_size=8, num_blocks=256,
+                               max_blocks_per_row=16, gamma_max=4,
+                               prefill_buckets=(8, 16, 32))
+        kw = dict(slo_base_s=60.0, slo_per_token_s=0.5)
+
+    traces = {
+        "poisson": poisson_trace(n, rate, vocab, seed=seed, **kw),
+        "bursty": bursty_trace(n, rate * 2, vocab, seed=seed,
+                               on_s=0.2, off_s=0.4, **kw),
+    }
+    out = {}
+    for name, trace in traces.items():
+        summary, records = replay_trace(pair_t, pair_d, scfg, trace)
+        summary["verified_requests"] = verify_byte_identical(
+            pair_t, pair_d, scfg, trace, records)
+        out[name] = summary
+        print(f"{name}: {summary['n_requests']} req, "
+              f"{summary['n_tokens']} tok in {summary['rounds']} rounds | "
+              f"TTFT p50={summary['ttft_p50_s']:.3f}s "
+              f"p95={summary['ttft_p95_s']:.3f}s "
+              f"p99={summary['ttft_p99_s']:.3f}s | "
+              f"TPOT p50={summary['tpot_p50_s']:.3f}s | "
+              f"goodput={summary['goodput']:.2f} | "
+              f"queue depth mean={summary['queue_depth_mean']:.1f} "
+              f"max={summary['queue_depth_max']} | "
+              f"leaked={summary['leaked_blocks']} | "
+              f"byte-identical={summary['verified_requests']}/"
+              f"{summary['n_requests']}")
+        if summary["alpha_windows"]:
+            drift = ", ".join(f"{a:.2f}" for a in summary["alpha_windows"])
+            print(f"  alpha drift over round windows: [{drift}]")
+        emit(f"serving_slo_{name}",
+             (summary["ttft_p50_s"] or 0) * 1e6,
+             f"goodput={summary['goodput']}")
+
+    (CACHE / "serving_slo.json").write_text(json.dumps(out, indent=1))
+    print(f"# wrote {CACHE / 'serving_slo.json'}")
+
+    if smoke:  # the CI gate
+        for name, s in out.items():
+            assert s["ttft_p50_s"] is not None, f"{name}: no TTFT p50"
+            assert s["ttft_p95_s"] is not None, f"{name}: no TTFT p95"
+            assert s["leaked_blocks"] == 0, \
+                f"{name}: {s['leaked_blocks']} KV blocks leaked"
+            assert s["verified_requests"] == s["n_requests"]
+        print("SMOKE OK")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--rate", type=float, default=20.0)
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    main(smoke=a.smoke, n=a.requests, rate=a.rate, seed=a.seed)

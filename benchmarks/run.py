@@ -21,6 +21,11 @@ def _bench_paged():
     bench_paged_serving.main()
 
 
+def _bench_serving_slo():
+    from benchmarks import bench_serving_slo
+    bench_serving_slo.main()
+
+
 def main() -> None:
     from benchmarks import (bench_acceptance, bench_cost_coeff, bench_dse,
                             bench_spec_serving, bench_speedup_tables,
@@ -36,6 +41,7 @@ def main() -> None:
          lambda: bench_spec_serving.main(lower=False)),
         ("Beyond-paper: per-row batched speculation", _bench_batched),
         ("Beyond-paper: paged vs fixed-shape serving", _bench_paged),
+        ("Beyond-paper: async streaming SLO replay", _bench_serving_slo),
     ]
     failures = []
     for name, fn in benches:

@@ -330,6 +330,13 @@ class PagedBackend:
     def drift(self):
         return self.server.drift
 
+    def serve_async(self, **kw):
+        """The async streaming front end over this backend's paged server
+        (serving/frontend): an un-started AsyncSpecServer — enter it with
+        ``async with`` (or await .start()) from a running event loop."""
+        from repro.serving.frontend import AsyncSpecServer
+        return AsyncSpecServer(self.server, **kw)
+
     def serve(self, requests):
         for r in requests:
             self.server.submit(r)

@@ -113,6 +113,27 @@ class Session:
                 for r in requests]
         return self.backend.serve(reqs)
 
+    def serve_async(self, **kw):
+        """Open-system streaming entry point (paged plans only): returns an
+        un-started ``serving.frontend.AsyncSpecServer`` over this session's
+        paged server. Use from a running event loop:
+
+            async with sess.serve_async() as front:
+                stream = await front.submit(prompt, max_new, deadline_s=1.0)
+                async for tok in stream: ...
+
+        Per-request deadlines drive the scheduler's EDF admission and the
+        deadline-met/goodput metrics; dropping a stream cancels its request
+        and frees its KV blocks mid-generation. Keyword args pass through to
+        AsyncSpecServer (``max_stream_queue`` = backpressure bound, ``now``
+        = injectable clock)."""
+        if self.backend_name != "paged":
+            raise ValueError(
+                f"serve_async needs the paged backend (plan selected "
+                f"{self.backend_name!r}) — async streaming rides the paged "
+                f"server's round loop; re-plan with a paged cache")
+        return self.backend.serve_async(**kw)
+
     def request(self, prompt, max_new: Optional[int] = None,
                 rid: int = 0) -> ServeRequest:
         """Convenience constructor for serve() inputs."""

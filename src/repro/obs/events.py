@@ -40,6 +40,8 @@ class RoundEvent:
     blocks_written: int = 0      # KV blocks touched by writes (estimate)
     rids: Tuple[int, ...] = ()   # request ids of the live rows
     t_wall: float = 0.0          # wall-clock timestamp (epoch s)
+    queue_depth: int = 0         # requests waiting in the scheduler queue
+                                 # while this round ran (SLO analysis)
 
     @property
     def alpha_round(self) -> Optional[float]:

@@ -1,8 +1,19 @@
-"""Paged-KV serving subsystem: scheduler, telemetry, and the paged
-continuous-batching speculative server. See docs/DESIGN.md §3-§5."""
+"""Paged-KV serving subsystem: scheduler, telemetry, the paged
+continuous-batching speculative server, and the async streaming front end.
+See docs/DESIGN.md §3-§5 and §8."""
 from repro.serving.metrics import RequestRecord, ServingMetrics
 from repro.serving.paged_server import PagedSpecServer
 from repro.serving.scheduler import Scheduler, SchedulerConfig, ServeRequest
 
+
+def __getattr__(name):
+    # lazy: the async frontend machinery loads only when asked for
+    if name in ("AsyncSpecServer", "StreamEvent"):
+        from repro.serving import frontend
+        return getattr(frontend, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = ["RequestRecord", "ServingMetrics", "PagedSpecServer",
-           "Scheduler", "SchedulerConfig", "ServeRequest"]
+           "Scheduler", "SchedulerConfig", "ServeRequest",
+           "AsyncSpecServer", "StreamEvent"]

@@ -1,0 +1,22 @@
+"""Async streaming serving front end over the paged speculative server.
+
+The closed synchronous loops elsewhere in the repo measure offline
+throughput; this package turns the paged server into an OPEN system — the
+thing edge-serving latency claims are actually made about:
+
+  * ``async_server.AsyncSpecServer`` — asyncio front end: per-request token
+    streams with bounded backpressure, client cancellation that frees KV
+    blocks mid-generation, per-request deadlines feeding the scheduler's
+    EDF admission.
+  * ``traffic.py`` — seeded Poisson / bursty open-loop arrival traces with
+    ragged lengths, plus the ``replay`` harness that drives a front end
+    with them and records per-request TTFT / per-token latency.
+
+See docs/DESIGN.md §8 for the stepper/queue/backpressure architecture.
+"""
+from repro.serving.frontend.async_server import AsyncSpecServer, StreamEvent
+from repro.serving.frontend.traffic import (TraceRequest, bursty_trace,
+                                            poisson_trace, replay)
+
+__all__ = ["AsyncSpecServer", "StreamEvent", "TraceRequest",
+           "poisson_trace", "bursty_trace", "replay"]

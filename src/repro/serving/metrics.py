@@ -11,7 +11,7 @@ Two consumers:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -28,10 +28,33 @@ class RequestRecord:
     completed: float = 0.0
     n_rounds: int = 0
     n_generated: Optional[int] = None  # actual tokens produced (<= max_new)
+    first_token_t: Optional[float] = None  # when the first token committed
+    deadline: Optional[float] = None       # absolute SLO deadline (clock domain)
+    cancelled: bool = False
 
     @property
     def latency(self) -> float:
         return self.completed - self.submitted
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token: submission -> first committed token."""
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submitted
+
+    @property
+    def queue_wait(self) -> float:
+        """Submission -> admission (the scheduler-queue component of TTFT)."""
+        return self.started - self.submitted
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        """Whether the request completed by its deadline (None = no deadline)."""
+        if self.deadline is None:
+            return None
+        return (not self.cancelled and self.completed > 0.0
+                and self.completed <= self.deadline)
 
     @property
     def decode_tps(self) -> float:
@@ -55,20 +78,55 @@ class ServingMetrics:
         self.n_spec_rounds = 0
         self.requests: Dict[int, RequestRecord] = {}
         self.completed: List[RequestRecord] = []
+        self.cancelled: List[RequestRecord] = []
+        self.rejected: List[Tuple[int, str]] = []   # (rid, reason)
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
         self.total_generated = 0
 
     # ------------------------------------------------------------- requests
-    def submit(self, rid: int, prompt_len: int, max_new: int):
-        rec = RequestRecord(rid, prompt_len, max_new, submitted=self.now())
+    def submit(self, rid: int, prompt_len: int, max_new: int,
+               deadline: Optional[float] = None,
+               submitted: Optional[float] = None):
+        """``deadline`` is absolute in the metrics clock domain; ``submitted``
+        lets an async front end stamp the true arrival time even when the
+        request is handed to the scheduler a round later."""
+        rec = RequestRecord(rid, prompt_len, max_new,
+                            submitted=(self.now() if submitted is None
+                                       else submitted),
+                            deadline=deadline)
         self.requests[rid] = rec
         return rec
+
+    def reject(self, rid: int, reason: str):
+        """Record a submit-time rejection (demand can never fit)."""
+        self.rejected.append((rid, reason))
 
     def start(self, rid: int):
         self.requests[rid].started = self.now()
         if self._t0 is None:
             self._t0 = self.requests[rid].started
+
+    def first_token(self, rid: int):
+        """Stamp the first committed token for ``rid`` (idempotent: only the
+        first call records; the server calls it every round a row is live)."""
+        rec = self.requests.get(rid)
+        if rec is not None and rec.first_token_t is None:
+            rec.first_token_t = self.now()
+
+    def cancel(self, rid: int, n_generated: int = 0):
+        """Client cancellation: close the record without crediting latency
+        stats (cancelled requests land in ``self.cancelled``, not
+        ``self.completed``); tokens already committed still count toward
+        throughput."""
+        rec = self.requests.pop(rid)
+        rec.completed = self.now()
+        rec.cancelled = True
+        rec.n_generated = max(int(n_generated), 0)
+        self._t_last = rec.completed
+        self.total_generated += rec.n_generated
+        self.cancelled.append(rec)
+        return rec
 
     def complete(self, rid: int, n_generated: Optional[int] = None):
         """``n_generated`` is the ACTUAL token count produced; early-stopped
@@ -118,16 +176,28 @@ class ServingMetrics:
     # -------------------------------------------------------------- summary
     def summary(self) -> dict:
         lat = [r.latency for r in self.completed]
+        ttft = [r.ttft for r in self.completed if r.ttft is not None]
         wall = ((self._t_last - self._t0)
                 if self._t0 is not None and self._t_last is not None else 0.0)
+        # per-request deadline outcomes: only requests that carried a deadline
+        deadline_met = {r.rid: r.deadline_met for r in self.completed
+                        if r.deadline is not None}
         return {
             "requests_completed": len(self.completed),
+            "requests_cancelled": len(self.cancelled),
+            "requests_rejected": len(self.rejected),
             "total_generated_tokens": self.total_generated,
             "aggregate_tokens_per_s": (self.total_generated / wall
                                        if wall > 0 else None),
             "mean_latency_s": float(np.mean(lat)) if lat else float("nan"),
             "p95_latency_s": (float(np.percentile(lat, 95)) if lat
                               else float("nan")),
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else None,
+            "p50_ttft_s": float(np.percentile(ttft, 50)) if ttft else None,
+            "p95_ttft_s": float(np.percentile(ttft, 95)) if ttft else None,
+            "deadline_met": deadline_met,
+            "goodput": (sum(bool(v) for v in deadline_met.values())
+                        / len(deadline_met) if deadline_met else None),
             "rounds": self.n_rounds,
             "spec_rounds": self.n_spec_rounds,
             "alpha_hat": self._alpha,

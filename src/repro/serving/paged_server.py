@@ -20,7 +20,8 @@ standalone greedy AR continuation, regardless of its neighbours' lengths.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +84,15 @@ class PagedSpecServer:
         self._slots: List[Optional[ServeRequest]] = [None] * self.B
         self._target_len = np.zeros(self.B, np.int64)
         self._state: Optional[RowState] = None
+        self._lengths: Optional[np.ndarray] = None  # host mirror of .length
+        self._batch_formed = False   # gamma decided for the current batch
+        self._pending_cancels: Deque[int] = deque()  # rids to cancel (thread-
+                                                     # safe handoff; processed
+                                                     # at the next step)
+        # per-round committed-token harvest for streaming front ends; off by
+        # default so the synchronous run() hot path never pulls the token
+        # buffer from device (AsyncSpecServer flips it on)
+        self.collect_streams = False
         self._engines: Dict[int, BatchedSpecEngine] = {}
         self._prefill_jit = None
         self._ar_jit = None
@@ -199,9 +209,17 @@ class PagedSpecServer:
                 self._prefill_jit = prefill
         t_table = state.tcache["block_table"]
         d_table = state.dcache["block_table"]
-        tc_view = {**state.tcache, "block_table": t_table[row:row + 1],
+
+        def row_slice(table):
+            # with B == 1 the identity slice short-circuits to the SAME
+            # buffer; a donated view would delete the full table the merged
+            # cache keeps, so force a distinct buffer in that case
+            v = table[row:row + 1]
+            return jnp.copy(v) if v is table else v
+
+        tc_view = {**state.tcache, "block_table": row_slice(t_table),
                    "index": jnp.zeros((1,), jnp.int32)}
-        dc_view = {**state.dcache, "block_table": d_table[row:row + 1],
+        dc_view = {**state.dcache, "block_table": row_slice(d_table),
                    "index": jnp.zeros((1,), jnp.int32)}
         with self.tracer.span("prefill", phase="prefill", role="target",
                               rid=req.rid, prompt_len=P):
@@ -341,74 +359,158 @@ class PagedSpecServer:
         ev = self.drift.evidence()
         return ev["c"] if ev else None
 
+    def cancel(self, rid: int):
+        """Request cancellation of ``rid`` (queued or mid-generation). The
+        actual teardown happens at the start of the next ``step()`` — queued
+        requests leave the scheduler queue, in-flight rows are released with
+        their partial tokens and their KV blocks returned to the pool, so the
+        freed row can be re-admitted to a queued request in the same step.
+        Thread-safe (a deque handoff): an async front end calls this from the
+        event loop while the stepper thread runs a round."""
+        self._pending_cancels.append(rid)
+
+    def _process_cancels(self) -> List[int]:
+        cancelled: List[int] = []
+        while self._pending_cancels:
+            rid = self._pending_cancels.popleft()
+            if self.sched.cancel(rid):          # still queued: just dequeue
+                cancelled.append(rid)
+                continue
+            for b, req in enumerate(self._slots):
+                if req is None or req.rid != rid:
+                    continue
+                cur = int(min(self._lengths[b], self._target_len[b]))
+                req.tokens = np.asarray(jax.device_get(
+                    self._state.tokens[b, :cur]))
+                self.alloc.free_row(b)          # KV blocks back to the pool
+                self.metrics.cancel(rid, cur - req.prompt_len)
+                self._slots[b] = None
+                self._state = self._state._replace(
+                    active=self._state.active.at[b].set(False))
+                cancelled.append(rid)
+                break
+        return cancelled
+
     def run(self):
         """Drain the queue; returns completed requests (submission order is
         not guaranteed — rows finish by their own lengths)."""
         with self.tracer.span("serve", phase="serve"):
-            return self._run()
-
-    def _run(self):
-        if self._state is None:
-            self._state = self._empty_state()
-        self._state = self._sync_tables(self._refill(self._state))
-        if not any(r is not None for r in self._slots):
+            while self.step() is not None:
+                pass
             return self.done
 
-        # gamma/AR decision at batch formation (paper Eq. 1, telemetry alpha)
+    def step(self) -> Optional[Dict]:
+        """ONE serving round: process cancellations, admit/refill, decide
+        gamma, run one jitted round, record telemetry, harvest finished rows.
+        Returns None when idle (no live rows after refill — the current batch
+        is over and the next admission re-forms it); otherwise a step-info
+        dict for streaming front ends:
+
+            streams   — {rid: np.ndarray} tokens committed THIS round per
+                        live request (only when ``collect_streams`` is set;
+                        the sync path never pulls the token buffer)
+            finished  — rids completed and released this step
+            cancelled — rids cancelled this step
+            round     — the RoundEvent.round id of this round (stream events
+                        join the obs layer through it)
+            queue_depth / n_live — scheduler pressure while the round ran
+
+        ``run()`` is exactly ``while step() is not None`` — the synchronous
+        and async serving paths share this one round loop, which is what
+        keeps their token streams byte-identical.
+        """
+        if self._state is None:
+            self._state = self._empty_state()
+            self._lengths = np.array(self._state.length)
+        cancelled = self._process_cancels()
+        self._state = self._sync_tables(self._refill(self._state,
+                                                     self._lengths))
+        if not any(r is not None for r in self._slots):
+            # batch drained: the next admission re-forms it (and re-decides
+            # gamma — safe, because no live row carries stale drafter KV)
+            self._batch_formed = False
+            return None
+
+        # gamma/AR decision (paper Eq. 1, telemetry alpha): decided at batch
+        # formation, then re-decided online while speculative. Spec->spec
+        # retunes are safe (both caches are maintained every speculative
+        # round) and spec->AR downgrades when measured alpha makes Eq. 1
+        # infeasible; AR->spec is one-way OFF within a batch because the
+        # drafter KV is not written during AR rounds (it resynchronizes at
+        # the next batch formation, when no stale row is live).
         if self._gamma_override is not None:
             self.gamma = self._gamma_override
-        else:
+        elif not self._batch_formed or self.gamma > 0:
             self.gamma, _ = self.sched.choose_gamma(
                 self._alpha_override, self._c_override or self._measured_c())
+        self._batch_formed = True
 
-        lengths = np.array(self._state.length)   # writable host mirror
-        while any(r is not None for r in self._slots):
-            # online re-decision: spec->spec retunes are safe (both caches are
-            # maintained every speculative round) and spec->AR downgrades when
-            # measured alpha makes Eq. 1 infeasible; AR->spec is one-way OFF
-            # within a run because the drafter KV is not written during AR
-            # rounds (it resynchronizes at the next run()/batch formation).
-            if self._gamma_override is None and self.gamma > 0:
-                self.gamma, _ = self.sched.choose_gamma(
-                    self._alpha_override,
-                    self._c_override or self._measured_c())
-            prev_len = lengths
-            blocks_read, blocks_written = self._account_round(prev_len)
-            phase_t: dict = {}
-            t0 = self.tracer.clock()
-            if self.gamma > 0:
-                eng = self._engine(self.gamma)
-                if isinstance(eng._round_jit, TracedRound):
-                    self._state = eng._round_jit(
-                        self.params_t, self.params_d, self._state,
-                        round=self.total_rounds, gamma=self.gamma)
-                    phase_t = eng._round_jit.last_phase_times
-                else:
-                    self._state = eng._round_jit(self.params_t, self.params_d,
-                                                 self._state)
+        queue_depth = len(self.sched.queue)
+        prev_len = self._lengths
+        blocks_read, blocks_written = self._account_round(prev_len)
+        phase_t: dict = {}
+        t0 = self.tracer.clock()
+        if self.gamma > 0:
+            eng = self._engine(self.gamma)
+            if isinstance(eng._round_jit, TracedRound):
+                self._state = eng._round_jit(
+                    self.params_t, self.params_d, self._state,
+                    round=self.total_rounds, gamma=self.gamma)
+                phase_t = eng._round_jit.last_phase_times
             else:
-                with self.tracer.span("ar_round", phase="verify",
-                                      role="target", round=self.total_rounds):
-                    self._state = self._ar_round(self._state)
-                    if self.tracer.enabled:
-                        jax.block_until_ready(self._state.length)
-            self.total_rounds += 1
-            # ONE host sync per round: lengths + active in a single pull; the
-            # harvest/refill below reuse the same snapshot
-            lengths, active = map(np.array, jax.device_get(
-                (self._state.length, self._state.active)))
-            t_round = self.tracer.clock() - t0   # dispatch -> host sync
-            emitted = lengths - prev_len
-            rids = [r.rid if r is not None else None for r in self._slots]
-            self.metrics.record_round(np.maximum(emitted - 1, 0), self.gamma,
-                                      active, rids)
-            self._record_event(prev_len, lengths, active, rids, t_round,
-                               phase_t, blocks_read, blocks_written)
-            self._state = self._harvest(self._state, lengths)
-        return self.done
+                self._state = eng._round_jit(self.params_t, self.params_d,
+                                             self._state)
+        else:
+            with self.tracer.span("ar_round", phase="verify",
+                                  role="target", round=self.total_rounds):
+                self._state = self._ar_round(self._state)
+                if self.tracer.enabled:
+                    jax.block_until_ready(self._state.length)
+        self.total_rounds += 1
+        # ONE host sync per round: lengths + active in a single pull; the
+        # harvest/refill below reuse the same snapshot
+        lengths, active = map(np.array, jax.device_get(
+            (self._state.length, self._state.active)))
+        t_round = self.tracer.clock() - t0   # dispatch -> host sync
+        self._lengths = lengths
+        emitted = lengths - prev_len
+        rids = [r.rid if r is not None else None for r in self._slots]
+        self.metrics.record_round(np.maximum(emitted - 1, 0), self.gamma,
+                                  active, rids)
+        streams = self._harvest_streams(prev_len, lengths)
+        self._record_event(prev_len, lengths, active, rids, t_round,
+                           phase_t, blocks_read, blocks_written, queue_depth)
+        done_before = len(self.done)
+        self._state = self._harvest(self._state, lengths)
+        return {"streams": streams,
+                "finished": [r.rid for r in self.done[done_before:]],
+                "cancelled": cancelled,
+                "round": self.total_rounds - 1,
+                "queue_depth": queue_depth,
+                "n_live": int(np.sum(active))}
+
+    def _harvest_streams(self, prev_len, lengths) -> Dict[int, np.ndarray]:
+        """Newly committed tokens per live request this round (committed ==
+        final: verify already accepted them, so streaming is exact). TTFT is
+        stamped here for every path; the token pull itself happens only when
+        a streaming front end asked for it."""
+        streams: Dict[int, np.ndarray] = {}
+        tok_host = None
+        for b, req in enumerate(self._slots):
+            if req is None:
+                continue
+            cur = int(min(lengths[b], self._target_len[b]))
+            if cur > req.prompt_len:
+                self.metrics.first_token(req.rid)   # idempotent
+            if not self.collect_streams or cur <= int(prev_len[b]):
+                continue
+            if tok_host is None:   # one bulk pull for all emitting rows
+                tok_host = np.asarray(jax.device_get(self._state.tokens))
+            streams[req.rid] = tok_host[b, int(prev_len[b]):cur].copy()
+        return streams
 
     def _record_event(self, prev_len, lengths, active, rids, t_round,
-                      phase_t, blocks_read, blocks_written):
+                      phase_t, blocks_read, blocks_written, queue_depth=0):
         """One RoundEvent per round (always, traced or not) + a drift
         observation per speculative round (phase times when traced)."""
         emitted = lengths - prev_len
@@ -424,7 +526,7 @@ class PagedSpecServer:
             t_draft=phase_t.get("draft"), t_verify=phase_t.get("verify"),
             t_commit=phase_t.get("commit"),
             blocks_read=blocks_read, blocks_written=blocks_written,
-            rids=live_rids, t_wall=clock.wall()))
+            rids=live_rids, t_wall=clock.wall(), queue_depth=queue_depth))
         if self.gamma > 0:
             if self.drift is None:
                 c = (self._c_override if self._c_override is not None

@@ -3,11 +3,16 @@
 Responsibilities (host-side; every decision lands in the device state as a
 block-table / index update between jitted rounds):
 
-  * ADMISSION CONTROL — FCFS with conservative reservation: a request is
-    admitted only when the block pool can hold its whole worst case
+  * ADMISSION CONTROL — earliest-deadline-first with conservative
+    reservation: among queued requests the one with the earliest deadline
+    (requests without a deadline sort last, FCFS among themselves) is
+    admitted when the block pool can hold its whole worst case
     ``prompt_len + max_new + gamma + 1`` tokens (prompt + decode + in-flight
-    speculation). Nothing is ever preempted mid-flight, so admission can
-    never deadlock the pool.
+    speculation). Admission head-blocks on the EDF head — a deadline-tight
+    request is never starved by slack arrivals that happen to fit. Nothing
+    is ever preempted mid-flight, so admission can never deadlock the pool.
+    Requests whose worst-case demand can NEVER fit are rejected at submit
+    (recorded in metrics), not left to head-block the queue forever.
   * LENGTH BUCKETING — ragged prompt lengths are padded up to a small set of
     bucket lengths so prefill compiles once per bucket, not once per length.
     Padding is exact: prefill consumes the padded prompt causally (real
@@ -57,6 +62,8 @@ class ServeRequest:
     prompt: np.ndarray                 # [P] int32, any length
     max_new: int
     tokens: Optional[np.ndarray] = None  # filled on completion
+    deadline: Optional[float] = None   # absolute SLO deadline (clock domain);
+                                       # None = best-effort (sorts last)
 
     @property
     def prompt_len(self) -> int:
@@ -72,23 +79,37 @@ class Scheduler:
         self.queue: Deque[ServeRequest] = deque()
 
     # ------------------------------------------------------------ admission
-    def submit(self, req: ServeRequest):
-        demand = self.demand_tokens(req)
-        if demand > self.cfg.max_tokens_per_row:
-            raise ValueError(
-                f"request {req.rid}: {demand} tokens exceeds per-row capacity "
-                f"{self.cfg.max_tokens_per_row} "
-                f"({self.cfg.max_blocks_per_row} blocks x {self.cfg.block_size})")
-        pool_tokens = (self.cfg.num_blocks - 1) * self.cfg.block_size
-        if demand > pool_tokens:
-            # would pass the per-row check yet never admit (head-blocks forever)
-            raise ValueError(
-                f"request {req.rid}: {demand} tokens exceeds the allocatable "
-                f"pool {pool_tokens} ({self.cfg.num_blocks - 1} blocks x "
-                f"{self.cfg.block_size}; block 0 is reserved)")
-        self.bucket(req.prompt_len)   # over-bucket prompts fail loudly here,
-                                      # not mid-flight in the prefill
-        self.metrics.submit(req.rid, req.prompt_len, req.max_new)
+    def validate(self, req: ServeRequest):
+        """Reject requests whose worst-case demand can NEVER be admitted —
+        at submit, with the rejection recorded in metrics, instead of letting
+        them head-block the queue forever. Raises ValueError; read-only on
+        scheduler state (safe off the stepper thread)."""
+        try:
+            demand = self.demand_tokens(req)
+            if demand > self.cfg.max_tokens_per_row:
+                raise ValueError(
+                    f"request {req.rid}: {demand} tokens exceeds per-row "
+                    f"capacity {self.cfg.max_tokens_per_row} "
+                    f"({self.cfg.max_blocks_per_row} blocks x "
+                    f"{self.cfg.block_size})")
+            pool_tokens = (self.cfg.num_blocks - 1) * self.cfg.block_size
+            if demand > pool_tokens:
+                # passes the per-row check yet never admits (head-blocks)
+                raise ValueError(
+                    f"request {req.rid}: {demand} tokens exceeds the "
+                    f"allocatable pool {pool_tokens} "
+                    f"({self.cfg.num_blocks - 1} blocks x "
+                    f"{self.cfg.block_size}; block 0 is reserved)")
+            self.bucket(req.prompt_len)  # over-bucket prompts fail loudly
+                                         # here, not mid-flight in the prefill
+        except ValueError as e:
+            self.metrics.reject(req.rid, str(e))
+            raise
+
+    def submit(self, req: ServeRequest, submitted: Optional[float] = None):
+        self.validate(req)
+        self.metrics.submit(req.rid, req.prompt_len, req.max_new,
+                            deadline=req.deadline, submitted=submitted)
         self.queue.append(req)
 
     def demand_tokens(self, req: ServeRequest) -> int:
@@ -100,20 +121,43 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.queue)
 
+    def _edf_head(self) -> int:
+        """Index of the earliest-deadline queued request (None deadlines sort
+        last; queue position breaks ties, i.e. FCFS among equal deadlines)."""
+        best, best_key = 0, None
+        for i, r in enumerate(self.queue):
+            key = (r.deadline if r.deadline is not None else float("inf"), i)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best
+
     def try_admit(self, row: int) -> Optional[ServeRequest]:
-        """Admit the queue head into ``row`` if its full reservation fits
-        (FCFS, head-blocking — no starvation). Reserves blocks on success."""
+        """Admit the earliest-deadline queued request into ``row`` if its
+        full reservation fits (EDF, head-blocking on the EDF head — no
+        starvation of deadline-tight requests). Reserves blocks on success."""
         if not self.queue:
             return None
-        req = self.queue[0]
+        i = self._edf_head()
+        req = self.queue[i]
         # bucketed prefill writes bucket(P)-1 positions; real-token positions
         # are always < demand, and padded spill past the reservation lands in
         # the null block and is rolled back — reserve only the real demand.
         if not self.alloc.ensure(row, self.demand_tokens(req)):
             return None
-        self.queue.popleft()
+        del self.queue[i]
         self.metrics.start(req.rid)
         return req
+
+    def cancel(self, rid: int) -> bool:
+        """Remove a still-QUEUED request (client dropped its stream before
+        admission). Returns False if ``rid`` is not queued — in-flight
+        cancellation is the server's job (it owns the row and its blocks)."""
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                del self.queue[i]
+                self.metrics.cancel(rid, 0)
+                return True
+        return False
 
     def release(self, row: int, req: ServeRequest):
         """Return a finished request's blocks to the pool."""

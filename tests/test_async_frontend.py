@@ -1,0 +1,318 @@
+"""Async streaming front end: exact streaming, cancellation hygiene, EDF
+admission, reject-at-submit, TTFT/deadline metrics, and deterministic
+traffic traces.
+
+The asyncio tests are plain sync functions driving ``asyncio.run`` so they
+run identically with and without the pytest-asyncio plugin (the
+bare-checkout CI job has no plugin)."""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache.paged_kv import BlockAllocator
+from repro.configs import registry
+from repro.core.engine import autoregressive_generate
+from repro.models.model import build_model
+from repro.obs.clock import ManualClock
+from repro.serving import (PagedSpecServer, Scheduler, SchedulerConfig,
+                           ServeRequest, ServingMetrics)
+from repro.serving.frontend import (AsyncSpecServer, bursty_trace,
+                                    poisson_trace, replay)
+
+ARCH = "llama3.2-1b"
+
+
+@pytest.fixture(scope="module")
+def pair():
+    cfg_t = registry.smoke_config(ARCH)
+    cfg_d = cfg_t.replace(num_layers=max(1, cfg_t.num_layers - 1),
+                          name="draft")
+    mt, md = build_model(cfg_t), build_model(cfg_d)
+    return (mt, md, mt.init(jax.random.PRNGKey(0)),
+            md.init(jax.random.PRNGKey(7)), cfg_t)
+
+
+def _scfg(**kw):
+    base = dict(max_batch=2, block_size=4, num_blocks=64,
+                max_blocks_per_row=12, gamma_max=4, prefill_buckets=(8, 16))
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def _server(pair, **kw):
+    mt, md, pt, pd, _ = pair
+    return PagedSpecServer(mt, md, pt, pd, _scfg(**kw))
+
+
+# --------------------------------------------------------------- streaming
+def test_stream_matches_sync(pair):
+    """Streamed tokens are byte-identical to the standalone greedy AR
+    continuation (== what the synchronous server produces), and stream
+    events join the obs layer (round ids exist in the RoundEventLog)."""
+    mt, md, pt, pd, cfg = pair
+    rng = np.random.default_rng(0)
+    jobs = [(rng.integers(0, cfg.vocab_size, P), new)
+            for P, new in [(5, 8), (9, 6), (6, 4)]]
+    srv = _server(pair)
+
+    async def go():
+        async with AsyncSpecServer(srv) as front:
+            streams = [await front.submit(p, new, events=True)
+                       for p, new in jobs]
+
+            async def drain(s):
+                return [ev async for ev in s]
+
+            return await asyncio.gather(*(drain(s) for s in streams))
+
+    results = asyncio.run(go())
+    rounds_seen = {ev.round for evs in results for ev in evs}
+    logged = {ev.round for ev in srv.events.events()}
+    assert rounds_seen and rounds_seen <= logged
+    assert all(ev.queue_depth >= 0 for ev in srv.events.events())
+    for (prompt, new), evs in zip(jobs, results):
+        assert len(evs) == new
+        ref = autoregressive_generate(mt, pt, jnp.asarray(prompt[None]), new)
+        np.testing.assert_array_equal([e.token for e in evs],
+                                      np.asarray(ref[0])[len(prompt):])
+    s = srv.metrics.summary()
+    assert s["requests_completed"] == len(jobs)
+    assert s["p50_ttft_s"] is not None and s["p95_ttft_s"] is not None
+
+
+def test_cancel_mid_generation_frees_blocks_and_readmits(pair):
+    """Satellite 3: dropping a stream mid-generation returns every KV block
+    to the allocator free list and the freed row is re-admitted to a queued
+    request, which then completes exactly."""
+    mt, md, pt, pd, cfg = pair
+    rng = np.random.default_rng(1)
+    pa = rng.integers(0, cfg.vocab_size, 6)
+    pb = rng.integers(0, cfg.vocab_size, 5)
+    srv = _server(pair, max_batch=1)   # one row: B must wait for A's row
+    free0 = srv.alloc.num_free
+
+    async def go():
+        async with AsyncSpecServer(srv) as front:
+            sa = await front.submit(pa, 24)
+            sb = await front.submit(pb, 6)
+            got_a = []
+            async for tok in sa:
+                got_a.append(tok)
+                if len(got_a) >= 2:
+                    break
+            await sa.aclose()          # cancel A mid-generation
+            got_b = [t async for t in sb]
+            return got_a, got_b
+
+    got_a, got_b = asyncio.run(go())
+    assert len(got_a) >= 2
+    # A's row was released and B re-admitted into it
+    ref_b = autoregressive_generate(mt, pt, jnp.asarray(pb[None]), 6)
+    np.testing.assert_array_equal(got_b, np.asarray(ref_b[0])[len(pb):])
+    # zero leaked blocks: free list back to the pre-request size
+    assert srv.alloc.num_free == free0
+    s = srv.metrics.summary()
+    assert s["requests_cancelled"] == 1 and s["requests_completed"] == 1
+    assert srv.metrics.cancelled[0].rid == 0
+    assert srv.metrics.cancelled[0].n_generated >= 2
+
+
+def test_backpressure_bounded_stream_queue(pair):
+    """max_stream_queue=1: a slowly-draining consumer stalls the stepper
+    (bounded buffering) yet still receives every token in order."""
+    mt, md, pt, pd, cfg = pair
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, 5)
+    srv = _server(pair)
+
+    async def go():
+        async with AsyncSpecServer(srv, max_stream_queue=1) as front:
+            s = await front.submit(prompt, 8)
+            got = []
+            async for tok in s:
+                got.append(tok)
+                await asyncio.sleep(0.01)   # slow consumer
+            return got
+
+    got = asyncio.run(go())
+    ref = autoregressive_generate(mt, pt, jnp.asarray(prompt[None]), 8)
+    np.testing.assert_array_equal(got, np.asarray(ref[0])[len(prompt):])
+
+
+def test_replay_poisson_trace_end_to_end(pair):
+    """The benchmark's replay harness: open-loop Poisson arrivals stream
+    through, every record carries TTFT and deadline outcome."""
+    _, _, _, _, cfg = pair
+    srv = _server(pair)
+    trace = poisson_trace(4, 50.0, cfg.vocab_size, seed=3,
+                          prompt_lens=(4, 8), max_news=(3, 6),
+                          slo_base_s=120.0)
+
+    async def go():
+        async with AsyncSpecServer(srv) as front:
+            return await replay(front, trace)
+
+    records = asyncio.run(go())
+    assert [r["rid"] for r in records] == [t.rid for t in trace]
+    for r, t in zip(records, trace):
+        assert r["n_tokens"] == t.max_new
+        assert r["ttft_s"] is not None and r["ttft_s"] >= 0
+        assert r["deadline_met"] is True   # 120s SLO on a smoke model
+        assert r["rounds"]                 # joined to RoundEvent ids
+
+
+def test_submit_rejects_never_fitting_demand(pair):
+    """Reject-at-submit surfaces to the async caller AND lands in metrics;
+    the queue is left clean (no head-blocking ghost)."""
+    _, _, _, _, cfg = pair
+    srv = _server(pair)
+
+    async def go():
+        async with AsyncSpecServer(srv) as front:
+            with pytest.raises(ValueError, match="exceeds per-row capacity"):
+                await front.submit(np.zeros(8, np.int64), 10_000)
+            # a sane request after the rejection still works
+            s = await front.submit(np.arange(5) % cfg.vocab_size, 3)
+            return [t async for t in s]
+
+    got = asyncio.run(go())
+    assert len(got) == 3
+    assert srv.metrics.summary()["requests_rejected"] == 1
+    assert "exceeds per-row capacity" in srv.metrics.rejected[0][1]
+    assert not srv.sched.queue
+
+
+# --------------------------------------------------------- EDF + host logic
+def test_edf_admits_tight_deadline_before_earlier_slack_request():
+    """Acceptance criterion: a deadline-tight request is admitted ahead of a
+    slack one that arrived FIRST (FCFS would pick rid 0)."""
+    cfg = _scfg()
+    alloc = BlockAllocator(cfg.num_blocks, cfg.block_size,
+                           cfg.max_blocks_per_row, cfg.max_batch)
+    sched = Scheduler(cfg, alloc)
+    sched.submit(ServeRequest(0, np.arange(4), 4, deadline=100.0))  # slack
+    sched.submit(ServeRequest(1, np.arange(4), 4, deadline=5.0))    # tight
+    sched.submit(ServeRequest(2, np.arange(4), 4))                  # none
+    admitted = sched.try_admit(0)
+    assert admitted.rid == 1
+    # remaining order: slack deadline next, deadline-less last
+    assert sched.try_admit(1).rid == 0
+    assert [r.rid for r in sched.queue] == [2]
+
+
+def test_edf_no_deadline_is_fcfs():
+    cfg = _scfg()
+    alloc = BlockAllocator(cfg.num_blocks, cfg.block_size,
+                           cfg.max_blocks_per_row, cfg.max_batch)
+    sched = Scheduler(cfg, alloc)
+    for rid in range(3):
+        sched.submit(ServeRequest(rid, np.arange(4), 4))
+    assert sched.try_admit(0).rid == 0
+    assert sched.try_admit(1).rid == 1
+
+
+def test_scheduler_cancel_queued_request():
+    cfg = _scfg()
+    alloc = BlockAllocator(cfg.num_blocks, cfg.block_size,
+                           cfg.max_blocks_per_row, cfg.max_batch)
+    sched = Scheduler(cfg, alloc)
+    sched.submit(ServeRequest(0, np.arange(4), 4))
+    sched.submit(ServeRequest(1, np.arange(4), 4))
+    assert sched.cancel(0) is True
+    assert sched.cancel(7) is False
+    assert sched.try_admit(0).rid == 1
+    assert sched.metrics.summary()["requests_cancelled"] == 1
+
+
+def test_ttft_and_deadline_metrics_manual_clock():
+    clk = ManualClock()
+    m = ServingMetrics(now=clk)
+    m.submit(0, prompt_len=4, max_new=8, deadline=10.0)
+    clk.advance(1.0)
+    m.start(0)                  # queue-wait = 1s
+    clk.advance(0.5)
+    m.first_token(0)            # ttft = 1.5s
+    clk.advance(0.2)
+    m.first_token(0)            # idempotent: does not move the stamp
+    clk.advance(1.3)
+    m.complete(0, 8)            # completed at t=3.0 <= deadline 10.0
+    m.submit(1, prompt_len=4, max_new=8, deadline=3.5)
+    m.start(1)
+    clk.advance(5.0)
+    m.complete(1, 8)            # t=8.0 > deadline 3.5
+    rec0, rec1 = m.completed
+    assert rec0.queue_wait == pytest.approx(1.0)
+    assert rec0.ttft == pytest.approx(1.5)
+    assert rec0.deadline_met is True and rec1.deadline_met is False
+    s = m.summary()
+    assert s["deadline_met"] == {0: True, 1: False}
+    assert s["goodput"] == pytest.approx(0.5)
+    assert s["p50_ttft_s"] is not None
+
+
+def test_metrics_cancel_keeps_throughput_not_latency():
+    clk = ManualClock()
+    m = ServingMetrics(now=clk)
+    m.submit(0, prompt_len=4, max_new=10)
+    m.start(0)
+    clk.advance(1.0)
+    rec = m.cancel(0, n_generated=3)
+    assert rec.cancelled and rec.n_generated == 3
+    s = m.summary()
+    assert s["requests_cancelled"] == 1 and s["requests_completed"] == 0
+    assert s["total_generated_tokens"] == 3
+
+
+def test_async_submit_stamps_true_arrival_time():
+    """The metrics record carries the submit-time stamp the front end passed,
+    not the (later) time the stepper drained it into the scheduler."""
+    cfg = _scfg()
+    alloc = BlockAllocator(cfg.num_blocks, cfg.block_size,
+                           cfg.max_blocks_per_row, cfg.max_batch)
+    clk = ManualClock(100.0)
+    m = ServingMetrics(now=clk)
+    sched = Scheduler(cfg, alloc, m)
+    clk.advance(5.0)   # scheduler sees the request 5s after true arrival
+    sched.submit(ServeRequest(0, np.arange(4), 4), submitted=100.0)
+    assert m.requests[0].submitted == 100.0
+    sched.try_admit(0)
+    assert m.requests[0].queue_wait == pytest.approx(5.0)
+
+
+# ----------------------------------------------------------------- traffic
+def test_traffic_traces_deterministic():
+    a = poisson_trace(16, 4.0, 256, seed=9, slo_base_s=1.0,
+                      slo_per_token_s=0.1)
+    b = poisson_trace(16, 4.0, 256, seed=9, slo_base_s=1.0,
+                      slo_per_token_s=0.1)
+    assert [t.arrival_s for t in a] == [t.arrival_s for t in b]
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+        assert x.max_new == y.max_new
+        assert x.deadline_s == pytest.approx(1.0 + 0.1 * x.max_new)
+    c = poisson_trace(16, 4.0, 256, seed=10)
+    assert [t.arrival_s for t in a] != [t.arrival_s for t in c]
+
+
+def test_poisson_trace_rate():
+    trace = poisson_trace(4000, 8.0, 256, seed=0)
+    gaps = np.diff([t.arrival_s for t in trace])
+    assert np.mean(gaps) == pytest.approx(1 / 8.0, rel=0.1)
+    assert trace[0].arrival_s == 0.0
+
+
+def test_bursty_trace_has_off_gaps():
+    """Arrivals inside an ON window are dense; consecutive ON windows are
+    separated by at least off_s of silence."""
+    trace = bursty_trace(400, 50.0, 256, seed=0, on_s=0.5, off_s=2.0)
+    arr = np.array([t.arrival_s for t in trace])
+    gaps = np.diff(arr)
+    big = gaps[gaps >= 2.0]
+    assert len(big) >= 3              # several bursts materialized
+    assert gaps.max() >= 2.0          # and the silence is at least off_s
+    # within-burst arrivals keep the burst rate (mean gap ~ 1/50 s)
+    small = gaps[gaps < 2.0]
+    assert np.mean(small) == pytest.approx(1 / 50.0, rel=0.25)
