@@ -19,6 +19,19 @@ request must be byte-identical to a fresh synchronous ``PagedSpecServer``
 run over the same requests — the async front end is a delivery mechanism,
 never a different decode.
 
+Two robustness modes ride on the same replay harness (docs/DESIGN.md §9):
+
+  * ``--pressure`` — replays the Poisson trace against a pool too small for
+    the traffic's worst case, once with worst-case admission (overcommit
+    1.0, admissions serialize) and once overcommitted (2.0, preemption
+    reclaims mid-flight). Records goodput/TTFT/preemption/recompute counts
+    side by side and ASSERTS overcommit goodput >= worst-case goodput.
+  * ``--faults`` — replays under a seeded FaultPlan (virtual delays,
+    drafter failures, transient pool seizures) and asserts the chaos
+    invariants: zero leaked KV blocks (allocator audit), every request
+    terminal, and byte-identity with the fault-free synchronous run for
+    every non-failed request.
+
 Results land in ``.bench_cache/serving_slo.json``. ``--smoke`` runs an
 untrained tiny pair with a short trace — the CI gate (asserts non-null
 TTFT percentiles and zero leaked KV blocks).
@@ -27,6 +40,7 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import dataclasses
 import json
 
 import jax
@@ -50,10 +64,10 @@ def _smoke_pair():
             cfg_t.vocab_size)
 
 
-def _server(pair_t, pair_d, scfg):
+def _server(pair_t, pair_d, scfg, faults=None):
     from repro.serving import PagedSpecServer
     (mt, pt), (md, pd) = pair_t, pair_d
-    return PagedSpecServer(mt, md, pt, pd, scfg)
+    return PagedSpecServer(mt, md, pt, pd, scfg, faults=faults)
 
 
 def windowed_alpha(events, window=8):
@@ -66,14 +80,18 @@ def windowed_alpha(events, window=8):
             for i in range(0, len(alphas), window)]
 
 
-def verify_byte_identical(pair_t, pair_d, scfg, trace, records):
-    """Re-serve the trace's requests through a FRESH synchronous
-    PagedSpecServer and require every streamed token sequence to match."""
+def verify_byte_identical(pair_t, pair_d, scfg, trace, records, exclude=()):
+    """Re-serve the trace's requests through a FRESH synchronous, fault-free
+    PagedSpecServer and require every streamed token sequence to match.
+    ``exclude`` skips rids that reached a non-completed terminal state in
+    the replay (failed/expired) — they have no full stream to compare."""
     from repro.serving import ServeRequest
+    exclude = set(exclude)
     sync = _server(pair_t, pair_d, scfg)
     for item in trace:
         sync.submit(ServeRequest(item.rid, item.prompt, item.max_new))
     done = {r.rid: r for r in sync.run()}
+    records = [r for r in records if r["rid"] not in exclude]
     for rec in records:
         ref = done[rec["rid"]]
         P = len(ref.tokens) - rec["n_tokens"]
@@ -84,9 +102,9 @@ def verify_byte_identical(pair_t, pair_d, scfg, trace, records):
     return len(records)
 
 
-def replay_trace(pair_t, pair_d, scfg, trace):
+def replay_trace(pair_t, pair_d, scfg, trace, faults=None):
     from repro.serving.frontend import AsyncSpecServer, replay
-    srv = _server(pair_t, pair_d, scfg)
+    srv = _server(pair_t, pair_d, scfg, faults=faults)
     free0 = srv.alloc.num_free
 
     async def go():
@@ -94,10 +112,15 @@ def replay_trace(pair_t, pair_d, scfg, trace):
             return await replay(front, trace)
 
     records = asyncio.run(go())
+    # return any still-seized fault blocks, then demand a balanced census:
+    # audit() raises if a block leaked or landed in two tables
+    srv.alloc.release_seized()
+    srv.alloc.audit()
     leaked = free0 - srv.alloc.num_free
     met = [r["deadline_met"] for r in records
            if r["deadline_met"] is not None]
     depths = [ev.queue_depth for ev in srv.events.events()]
+    m = srv.metrics.summary()
     summary = {
         "n_requests": len(records),
         "n_tokens": int(sum(r["n_tokens"] for r in records)),
@@ -112,13 +135,53 @@ def replay_trace(pair_t, pair_d, scfg, trace):
         "queue_depth_mean": float(np.mean(depths)) if depths else 0.0,
         "queue_depth_max": int(max(depths)) if depths else 0,
         "leaked_blocks": int(leaked),
+        # robustness counters (docs/DESIGN.md §9)
+        "overcommit": scfg.overcommit,
+        "faults": srv.faults.describe(),
+        "n_preemptions": m["n_preemptions"],
+        "recompute_tokens": m["recompute_tokens"],
+        "degradations": m["degradations"],
+        "requests_completed": m["requests_completed"],
+        "requests_cancelled": m["requests_cancelled"],
+        "requests_expired": m["requests_expired"],
+        "requests_failed": m["requests_failed"],
+        "failed_rids": sorted(r.rid for r in srv.metrics.failed),
+        "expired_rids": sorted(r.rid for r in srv.metrics.expired),
     }
     return summary, records
 
 
-def main(smoke=False, n=20, rate=20.0, seed=0):
+def run_pressure(pair_t, pair_d, scfg_small, trace):
+    """The overcommit-vs-worst-case comparison: one trace, one undersized
+    pool, two admission policies. Worst-case reservation never preempts but
+    serializes admissions behind the pool; overcommit admits on expected
+    demand and pays with preemption + prefix recompute. The asserted
+    acceptance bar: overcommit goodput at the trace's SLO must be at least
+    the worst-case policy's."""
+    out = {}
+    for label, oc in (("worst_case", 1.0), ("overcommit", 2.0)):
+        scfg = dataclasses.replace(scfg_small, overcommit=oc)
+        summary, _ = replay_trace(pair_t, pair_d, scfg, trace)
+        out[label] = summary
+        print(f"pressure/{label}: goodput={summary['goodput']} | "
+              f"ttft_p95={summary['ttft_p95_s']:.3f}s | "
+              f"preemptions={summary['n_preemptions']} "
+              f"recompute_tokens={summary['recompute_tokens']} | "
+              f"leaked={summary['leaked_blocks']}")
+    gw = out["worst_case"]["goodput"]
+    go = out["overcommit"]["goodput"]
+    assert out["worst_case"]["n_preemptions"] == 0, \
+        "worst-case reservation must never preempt"
+    if gw is not None and go is not None:
+        assert go >= gw, (f"overcommit goodput {go:.3f} fell below the "
+                          f"worst-case policy's {gw:.3f}")
+        out["goodput_delta"] = go - gw
+    return out
+
+
+def main(smoke=False, n=20, rate=20.0, seed=0, faults=False, pressure=False):
     from benchmarks.common import CACHE, emit
-    from repro.serving import SchedulerConfig
+    from repro.serving import FaultPlan, SchedulerConfig
     from repro.serving.frontend import bursty_trace, poisson_trace
 
     if smoke:
@@ -126,6 +189,11 @@ def main(smoke=False, n=20, rate=20.0, seed=0):
         scfg = SchedulerConfig(max_batch=2, block_size=4, num_blocks=64,
                                max_blocks_per_row=16, gamma_max=4,
                                prefill_buckets=(8, 16, 32))
+        # pressure pool: a worst-case row is up to 7 blocks, so 9 allocatable
+        # serializes worst-case admissions while overcommit runs two rows —
+        # and their growth past the pool forces mid-flight preemption
+        pressure_scfg = dataclasses.replace(scfg, num_blocks=10,
+                                            max_blocks_per_row=8)
         kw = dict(prompt_lens=(4, 12), max_news=(3, 8),
                   slo_base_s=120.0, slo_per_token_s=1.0)
     else:
@@ -134,8 +202,16 @@ def main(smoke=False, n=20, rate=20.0, seed=0):
         vocab = VOCAB
         scfg = SchedulerConfig(max_batch=4, block_size=8, num_blocks=256,
                                max_blocks_per_row=16, gamma_max=4,
-                               prefill_buckets=(8, 16, 32))
+                               prefill_buckets=(8, 16, 32, 64))
+        pressure_scfg = dataclasses.replace(scfg, num_blocks=16)
         kw = dict(slo_base_s=60.0, slo_per_token_s=0.5)
+
+    plan = None
+    if faults:
+        plan = FaultPlan.seeded(seed, horizon=4096, p_delay=0.05,
+                                delay_s=0.2, p_drafter=0.03,
+                                p_seize=0.05, max_seize=4)
+        print(f"# chaos: {plan.describe()}")
 
     traces = {
         "poisson": poisson_trace(n, rate, vocab, seed=seed, **kw),
@@ -144,9 +220,26 @@ def main(smoke=False, n=20, rate=20.0, seed=0):
     }
     out = {}
     for name, trace in traces.items():
-        summary, records = replay_trace(pair_t, pair_d, scfg, trace)
+        summary, records = replay_trace(pair_t, pair_d, scfg, trace,
+                                        faults=plan)
         summary["verified_requests"] = verify_byte_identical(
-            pair_t, pair_d, scfg, trace, records)
+            pair_t, pair_d, scfg, trace, records,
+            exclude=summary["failed_rids"] + summary["expired_rids"])
+        if faults:
+            # the chaos invariants hold on EVERY faulted replay, not just
+            # in CI: nothing leaked, nothing wedged, survivors exact
+            assert summary["leaked_blocks"] == 0, \
+                f"{name}: {summary['leaked_blocks']} KV blocks leaked"
+            terminal = (summary["requests_completed"]
+                        + summary["requests_cancelled"]
+                        + summary["requests_expired"]
+                        + summary["requests_failed"])
+            assert terminal == summary["n_requests"], \
+                (f"{name}: {terminal}/{summary['n_requests']} requests "
+                 f"reached a terminal state")
+            assert summary["verified_requests"] == (
+                summary["n_requests"] - len(summary["failed_rids"])
+                - len(summary["expired_rids"]))
         out[name] = summary
         print(f"{name}: {summary['n_requests']} req, "
               f"{summary['n_tokens']} tok in {summary['rounds']} rounds | "
@@ -158,6 +251,9 @@ def main(smoke=False, n=20, rate=20.0, seed=0):
               f"queue depth mean={summary['queue_depth_mean']:.1f} "
               f"max={summary['queue_depth_max']} | "
               f"leaked={summary['leaked_blocks']} | "
+              f"preempt={summary['n_preemptions']} "
+              f"degrade={summary['degradations']} "
+              f"fail={summary['requests_failed']} | "
               f"byte-identical={summary['verified_requests']}/"
               f"{summary['n_requests']}")
         if summary["alpha_windows"]:
@@ -167,17 +263,25 @@ def main(smoke=False, n=20, rate=20.0, seed=0):
              (summary["ttft_p50_s"] or 0) * 1e6,
              f"goodput={summary['goodput']}")
 
+    if pressure:
+        out["pressure"] = run_pressure(pair_t, pair_d, pressure_scfg,
+                                       traces["poisson"])
+
     (CACHE / "serving_slo.json").write_text(json.dumps(out, indent=1))
     print(f"# wrote {CACHE / 'serving_slo.json'}")
 
     if smoke:  # the CI gate
-        for name, s in out.items():
+        for name in traces:
+            s = out[name]
             assert s["ttft_p50_s"] is not None, f"{name}: no TTFT p50"
             assert s["ttft_p95_s"] is not None, f"{name}: no TTFT p95"
             assert s["leaked_blocks"] == 0, \
                 f"{name}: {s['leaked_blocks']} KV blocks leaked"
-            assert s["verified_requests"] == s["n_requests"]
-        print("SMOKE OK")
+            assert s["verified_requests"] == (
+                s["n_requests"] - len(s["failed_rids"])
+                - len(s["expired_rids"]))
+        print("SMOKE OK" + (" (chaos)" if faults else "")
+              + (" (pressure)" if pressure else ""))
     return out
 
 
@@ -187,5 +291,12 @@ if __name__ == "__main__":
     ap.add_argument("--requests", type=int, default=20)
     ap.add_argument("--rate", type=float, default=20.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--faults", action="store_true",
+                    help="replay under a seeded FaultPlan and assert the "
+                         "chaos invariants (zero leaks, all terminal)")
+    ap.add_argument("--pressure", action="store_true",
+                    help="compare worst-case vs overcommit admission on an "
+                         "undersized pool (asserts goodput does not drop)")
     a = ap.parse_args()
-    main(smoke=a.smoke, n=a.requests, rate=a.rate, seed=a.seed)
+    main(smoke=a.smoke, n=a.requests, rate=a.rate, seed=a.seed,
+         faults=a.faults, pressure=a.pressure)

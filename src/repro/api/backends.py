@@ -95,8 +95,12 @@ class EngineBackend:
             self.target, self.params_t, prompt, max_new,
             greedy=self.plan.greedy, temperature=self.plan.temperature,
             key=key, use_cache=self.plan.use_cache, extras=extras_t)
-        stats = {"rounds": max_new, "accepted": 0, "drafted": 0,
-                 "alpha_hat": float("nan"), "tokens_generated": max_new,
+        # count what actually came back, not the budget: an AR path that
+        # stops early must not report max_new tokens/rounds (one committed
+        # token per AR round, so the two counters agree)
+        n_new = int(toks.shape[1]) - int(prompt.shape[1])
+        stats = {"rounds": n_new, "accepted": 0, "drafted": 0,
+                 "alpha_hat": float("nan"), "tokens_generated": n_new,
                  "speculative": False}
         return toks, stats
 
@@ -300,7 +304,7 @@ class PagedBackend:
 
     def __init__(self, target, drafter, params_t, params_d,
                  plan: ExecutionPlan, max_batch: int = 4, placement=None,
-                 tracer=None):
+                 tracer=None, faults=None):
         from repro.serving import PagedSpecServer, SchedulerConfig
         self.plan = plan
         self.placement = placement
@@ -312,11 +316,13 @@ class PagedBackend:
             gamma_max=plan.gamma_max,
             prefill_buckets=cache.prefill_buckets,
             alpha_prior=plan.gamma.alpha_init,
-            cost_coefficient=plan.cost_coefficient)
+            cost_coefficient=plan.cost_coefficient,
+            overcommit=cache.overcommit)
         gamma_override = None if plan.gamma.adaptive else plan.gamma.gamma
         self.server = PagedSpecServer(target, drafter, params_t, params_d,
                                       scfg, gamma=gamma_override,
-                                      placement=placement, tracer=tracer)
+                                      placement=placement, tracer=tracer,
+                                      faults=faults)
 
     @property
     def metrics(self):

@@ -47,6 +47,10 @@ class DeploymentSpec:
     max_new: Union[int, Tuple[int, ...]] = 32
     streaming: bool = False
     latency_target_ms: Optional[float] = None
+    max_pool_blocks: Optional[int] = None   # KV block budget (edge memory
+                                            # cap); when the worst case does
+                                            # not fit, the planner overcommits
+                                            # admission + relies on preemption
 
     # speculation economics
     alpha: float = 0.8
@@ -178,12 +182,19 @@ class GammaSchedule:
 @dataclass(frozen=True)
 class CacheLayout:
     """ring = per-row ring buffers (cache/kv_cache.py); paged = shared block
-    pool (cache/paged_kv.py) with this block geometry."""
+    pool (cache/paged_kv.py) with this block geometry.
+
+    ``overcommit`` is the paged scheduler's admission-reservation divisor:
+    1.0 reserves every request's worst case (never preempts); > 1.0 admits
+    on expected demand and reclaims via preemption-by-eviction when the
+    pool runs dry (docs/DESIGN.md §9). The planner raises it when the
+    pool budget cannot hold the traffic shape's worst case."""
     kind: str = "ring"
     block_size: int = 8
     num_blocks: int = 128
     max_blocks_per_row: int = 16
     prefill_buckets: Tuple[int, ...] = (8, 16, 32, 64, 128, 256)
+    overcommit: float = 1.0
 
 
 @dataclass(frozen=True)
@@ -222,6 +233,9 @@ class ExecutionPlan:
             raise ValueError(f"cache.kind must be one of {CACHE_KINDS}")
         if self.cache.kind == "paged" and self.batching != "continuous":
             raise ValueError("paged cache layout requires continuous batching")
+        if self.cache.overcommit < 1.0:
+            raise ValueError("cache.overcommit must be >= 1.0 (1.0 = "
+                             "worst-case reservation, no preemption)")
         if self.draft_policy not in DRAFT_POLICIES:
             raise ValueError(f"draft_policy must be one of {DRAFT_POLICIES}")
         if self.draft_policy == "multi" and (not self.greedy or self.use_cache

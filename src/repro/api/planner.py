@@ -226,7 +226,27 @@ class Planner:
         block = 8
         blocks_per_row = max(2, math.ceil(demand / block) + 1)
         num_blocks = blocks_per_row * (s.batch_size + 1) + 1  # +1: null block
+        overcommit = 1.0
+        if s.max_pool_blocks is not None and s.max_pool_blocks < num_blocks:
+            # the pool budget cannot hold the full batch's worst case:
+            # shrink the pool to the budget (floored at one worst-case row
+            # plus headroom, or nothing is ever admissible) and overcommit
+            # admission by the shortfall ratio — expected-demand reservation
+            # with preemption-by-eviction covers the tail (DESIGN.md §9)
+            floor = blocks_per_row + 2
+            capped = max(int(s.max_pool_blocks), floor)
+            overcommit = min(4.0, (num_blocks - 1) / max(capped - 1, 1))
+            self._notes.append(
+                f"pool capped at {capped} blocks (budget {s.max_pool_blocks},"
+                f" worst case wants {num_blocks}): overcommit="
+                f"{overcommit:.2f} — admission reserves expected demand and "
+                f"dry-pool rounds preempt the most-slack row")
+            num_blocks = capped
         maxp = max(s.prompt_lens)
+        if overcommit > 1.0:
+            # a preempted request resumes by prefilling its committed prefix
+            # (up to prompt + max_new - 1 tokens); buckets must cover it
+            maxp = maxp + s.max_new_cap - 1
         buckets, b = [], 8
         while b < maxp:
             buckets.append(b)
@@ -239,7 +259,8 @@ class Planner:
         return CacheLayout(kind="paged", block_size=block,
                            num_blocks=num_blocks,
                            max_blocks_per_row=blocks_per_row,
-                           prefill_buckets=buckets)
+                           prefill_buckets=buckets,
+                           overcommit=round(overcommit, 3))
 
     def choose_draft_policy(self, gamma: GammaSchedule, batching: str,
                             c: float = DEFAULT_COST_COEFFICIENT):

@@ -26,12 +26,14 @@ on *positions* recovered from ``index``, so ``cache | {"index": smaller}``
 drops the rejected tail; stale slots are overwritten by the next append
 before they can become causally visible. ``BlockAllocator.free_tail``
 returns whole blocks beyond an accepted length to the free list (host-side,
-because scheduling is host-driven). NOTE: under the scheduler's
-conservative worst-case reservation (serving/scheduler.py) a live row never
-shrinks, so the serving path reclaims via ``free_row`` at request
-completion; ``free_tail`` is the primitive for future preemption/shrink
-policies and is exercised directly by tests. See docs/DESIGN.md §3 for the
-layout comparison.
+because scheduling is host-driven). The serving path reclaims via
+``free_row`` at request completion AND at preemption: under overcommitted
+admission (serving/scheduler.py) the server may evict a victim row's whole
+allocation mid-flight and re-queue the request for prefix recompute — see
+docs/DESIGN.md §9. ``seize``/``release_seized`` let the fault-injection
+layer withhold free blocks to force that pressure deterministically, and
+``audit`` is the leak oracle the chaos suite runs after every test. See
+docs/DESIGN.md §3 for the layout comparison.
 """
 from __future__ import annotations
 
@@ -139,6 +141,7 @@ class BlockAllocator:
         self.peak_in_use = 0                             # residency high-water
         self.version = 0     # bumped on every table mutation; callers gate
                              # device pushes on it (see PagedSpecServer)
+        self._seized: deque = deque()  # blocks withheld by fault injection
 
     # ------------------------------------------------------------- queries
     @property
@@ -189,3 +192,54 @@ class BlockAllocator:
 
     def free_row(self, row: int) -> int:
         return self.free_tail(row, 0)
+
+    # ------------------------------------------- fault injection + auditing
+    @property
+    def num_seized(self) -> int:
+        return len(self._seized)
+
+    def seize(self, n: int) -> int:
+        """Withhold up to ``n`` FREE blocks from the pool (forced memory
+        pressure for chaos testing). Live rows are never touched — seizure
+        can only shrink headroom, not corrupt allocations. Returns the
+        number actually seized."""
+        taken = 0
+        while taken < n and self.free:
+            self._seized.append(self.free.popleft())
+            taken += 1
+        return taken
+
+    def release_seized(self, n: Optional[int] = None) -> int:
+        """Return ``n`` (default: all) seized blocks to the free list."""
+        n = len(self._seized) if n is None else min(n, len(self._seized))
+        for _ in range(n):
+            self.free.append(self._seized.popleft())
+        return n
+
+    def audit(self) -> Dict[str, int]:
+        """Full block census; raises AssertionError on any inconsistency.
+
+        Invariants: free + live + seized == num_blocks - 1 (block 0 is the
+        null block), no block appears twice across the free list, seized
+        list, and row tables, and table entries beyond each row's
+        ``n_alloc`` are NULL. The chaos suite calls this after every run —
+        'zero leaked blocks' means this census balances, not merely that
+        ``num_free`` looks right."""
+        live = []
+        for b in range(self.batch):
+            n = int(self.n_alloc[b])
+            live.extend(int(x) for x in self.table[b, :n])
+            tail = self.table[b, n:]
+            assert (tail == NULL_BLOCK).all(), \
+                f"row {b}: non-NULL table entries beyond n_alloc={n}"
+        assert NULL_BLOCK not in live, "null block handed out to a row"
+        counts = {"free": len(self.free), "live": len(live),
+                  "seized": len(self._seized)}
+        all_ids = list(self.free) + list(self._seized) + live
+        assert len(all_ids) == len(set(all_ids)), \
+            "block appears in more than one of free/seized/live"
+        total = counts["free"] + counts["live"] + counts["seized"]
+        assert total == self.num_blocks - 1, \
+            (f"block census mismatch: {counts} sums to {total}, "
+             f"expected {self.num_blocks - 1}")
+        return counts

@@ -46,6 +46,59 @@ def add_spec_args(ap: argparse.ArgumentParser, *, gamma: int = None
     return ap
 
 
+def add_robustness_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="admission reservation divisor (>1.0 admits on "
+                         "expected demand instead of the worst case; a dry "
+                         "pool mid-round preempts the most-slack row and "
+                         "recomputes its prefix on re-admission — "
+                         "docs/DESIGN.md §9)")
+    ap.add_argument("--faults-seed", type=int, default=None,
+                    help="inject a seeded chaos FaultPlan (virtual round "
+                         "delays, drafter failures, transient pool "
+                         "seizures) into the paged server")
+    return ap
+
+
+def apply_overcommit_arg(plan, overcommit):
+    """Fold ``--overcommit`` into the plan's cache layout. Overcommitted
+    admission must be able to re-prefill a preempted request's committed
+    prefix (up to prompt + max_new - 1 tokens), so the prefill buckets are
+    extended to cover it — the planner does the same when IT decides to
+    overcommit (api/planner.py)."""
+    if overcommit is None or overcommit <= 1.0:
+        return plan
+    import dataclasses
+    buckets = list(plan.cache.prefill_buckets)
+    resume_max = buckets[-1] + plan.max_new - 1
+    while buckets[-1] < resume_max:
+        buckets.append(buckets[-1] * 2)
+    return dataclasses.replace(plan, cache=dataclasses.replace(
+        plan.cache, overcommit=float(overcommit),
+        prefill_buckets=tuple(buckets)))
+
+
+def make_fault_plan(seed):
+    """A seeded chaos FaultPlan from ``--faults-seed`` (None = no faults)."""
+    if seed is None:
+        return None
+    from repro.serving import FaultPlan
+    return FaultPlan.seeded(int(seed))
+
+
+def report_robustness(server):
+    """Post-run §9 counters, printed only when something actually happened
+    (a fault-free worst-case-reservation run stays silent)."""
+    s = server.metrics.summary()
+    if (s["n_preemptions"] or s["degradations"] or s["requests_expired"]
+            or s["requests_failed"]):
+        print(f"robustness: preemptions={s['n_preemptions']} "
+              f"(recompute_tokens={s['recompute_tokens']}), "
+              f"degradations={s['degradations']}, "
+              f"expired={s['requests_expired']}, "
+              f"failed={s['requests_failed']}")
+
+
 def add_trace_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="enable round-phase tracing (repro.obs) and write a "

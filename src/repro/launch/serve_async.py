@@ -49,12 +49,17 @@ def build_session(args):
         gamma=(plan.gamma if args.gamma is None else
                dataclasses.replace(plan.gamma, gamma=args.gamma)))
     plan = cli_args.apply_placement_arg(plan, args.placement)
+    plan = cli_args.apply_overcommit_arg(plan, args.overcommit)
     sess = Session(mt, md, pt, pd, plan, max_batch=args.batch,
                    tracer=cli_args.make_tracer(args))
     if sess.backend_name != "paged":
         raise SystemExit(
             f"--arch {args.arch} (family {mt.family!r}) cannot take the "
             f"paged backend (KV-cache families only)")
+    fault_plan = cli_args.make_fault_plan(args.faults_seed)
+    if fault_plan is not None:
+        sess.backend.server.inject_faults(fault_plan)
+        print(f"chaos: {fault_plan.describe()}")
     return sess, cfg_t
 
 
@@ -101,6 +106,8 @@ def report(records, dt, front):
     depths = front.queue_depths()
     if depths:
         print(f"queue depth mean={np.mean(depths):.1f} max={max(depths)}")
+    from repro.launch import cli_args
+    cli_args.report_robustness(front.server)
 
 
 def main():
@@ -108,6 +115,7 @@ def main():
     cli_args.add_model_args(ap)
     cli_args.add_spec_args(ap, gamma=None)
     cli_args.add_trace_args(ap)
+    cli_args.add_robustness_args(ap)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--arrivals", choices=("poisson", "bursty"),
                     default="poisson")

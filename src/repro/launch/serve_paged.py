@@ -37,6 +37,7 @@ def main():
     cli_args.add_traffic_args(ap)
     cli_args.add_spec_args(ap, gamma=None)
     cli_args.add_trace_args(ap)
+    cli_args.add_robustness_args(ap)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--num-blocks", type=int, default=256)
@@ -66,6 +67,7 @@ def main():
         gamma=(plan.gamma if args.gamma is None else
                dataclasses.replace(plan.gamma, gamma=args.gamma)))
     plan = cli_args.apply_placement_arg(plan, args.placement)
+    plan = cli_args.apply_overcommit_arg(plan, args.overcommit)
     sess = Session(mt, md, pt, pd, plan, max_batch=args.batch,
                    tracer=cli_args.make_tracer(args))
     if args.placement:
@@ -74,6 +76,10 @@ def main():
         raise SystemExit(
             f"--arch {args.arch} (family {mt.family!r}) cannot take the paged "
             f"backend (KV-cache families only) — use repro.launch.serve")
+    fault_plan = cli_args.make_fault_plan(args.faults_seed)
+    if fault_plan is not None:
+        sess.backend.server.inject_faults(fault_plan)
+        print(f"chaos: {fault_plan.describe()}")
 
     t0 = clock.wall()
     done = sess.serve(reqs)
@@ -90,6 +96,7 @@ def main():
           f"alpha_hat={alpha if alpha is None else round(alpha, 2)})")
     print(f"acceptance histogram (n_accepted per round): "
           f"{s['accept_hist'][:(srv.gamma or 0) + 1].tolist()}")
+    cli_args.report_robustness(srv)
     cli_args.report_telemetry(sess, args)
 
 

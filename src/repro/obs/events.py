@@ -42,6 +42,13 @@ class RoundEvent:
     t_wall: float = 0.0          # wall-clock timestamp (epoch s)
     queue_depth: int = 0         # requests waiting in the scheduler queue
                                  # while this round ran (SLO analysis)
+    n_preempted: int = 0         # rows evicted + re-queued this round
+    n_expired: int = 0           # queued requests expired at admission
+    n_failed: int = 0            # requests failed terminally this round
+    degraded: bool = False       # batch running AR due to watchdog trip /
+                                 # drafter failure (not a cost-model choice)
+    fault_delay: float = 0.0     # injected virtual straggle included in
+                                 # t_round (chaos runs; 0 in production)
 
     @property
     def alpha_round(self) -> Optional[float]:

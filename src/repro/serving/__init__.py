@@ -1,9 +1,12 @@
 """Paged-KV serving subsystem: scheduler, telemetry, the paged
-continuous-batching speculative server, and the async streaming front end.
-See docs/DESIGN.md §3-§5 and §8."""
+continuous-batching speculative server, the async streaming front end, and
+the robustness layer (watchdog degradation + seeded fault injection).
+See docs/DESIGN.md §3-§5, §8, and §9."""
+from repro.serving.faults import NO_FAULTS, DrafterFault, FaultPlan
 from repro.serving.metrics import RequestRecord, ServingMetrics
 from repro.serving.paged_server import PagedSpecServer
 from repro.serving.scheduler import Scheduler, SchedulerConfig, ServeRequest
+from repro.serving.watchdog import RoundWatchdog
 
 
 def __getattr__(name):
@@ -16,4 +19,5 @@ def __getattr__(name):
 
 __all__ = ["RequestRecord", "ServingMetrics", "PagedSpecServer",
            "Scheduler", "SchedulerConfig", "ServeRequest",
+           "FaultPlan", "NO_FAULTS", "DrafterFault", "RoundWatchdog",
            "AsyncSpecServer", "StreamEvent"]

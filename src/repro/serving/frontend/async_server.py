@@ -189,7 +189,8 @@ class AsyncSpecServer:
         info = self.server.step()
         if info is not None:
             info["t"] = self.now()
-            self.rounds_stepped += 1
+            if info["round"] is not None:   # notification-only steps (expiry,
+                self.rounds_stepped += 1    # failure, stall) run no round
         return info
 
     async def _stepper(self):
@@ -216,7 +217,12 @@ class AsyncSpecServer:
             for t in toks:
                 # backpressure: a full stream queue pauses the stepper here
                 await q.put(StreamEvent(int(t), info["round"], info["t"]))
-        for rid in list(info["finished"]) + list(info["cancelled"]):
+        # expired and failed requests are just as terminal as finished ones:
+        # their consumers must see the stream end, not hang (preempted rids
+        # are NOT here — an evicted request resumes and keeps streaming)
+        for rid in (list(info["finished"]) + list(info["cancelled"])
+                    + list(info.get("expired", ()))
+                    + list(info.get("failed", ()))):
             self._finished.add(rid)
             q = self._queues.get(rid)
             if q is not None:

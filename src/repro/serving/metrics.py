@@ -31,6 +31,11 @@ class RequestRecord:
     first_token_t: Optional[float] = None  # when the first token committed
     deadline: Optional[float] = None       # absolute SLO deadline (clock domain)
     cancelled: bool = False
+    expired: bool = False     # dropped at admission: deadline already passed
+    failed: Optional[str] = None  # terminal failure reason (e.g. corrupt
+                                  # output guard) — no throughput credit
+    preemptions: int = 0      # times evicted + re-queued mid-flight
+    admissions: int = 0       # prefills run (1 + preemptions that resumed)
 
     @property
     def latency(self) -> float:
@@ -80,6 +85,11 @@ class ServingMetrics:
         self.completed: List[RequestRecord] = []
         self.cancelled: List[RequestRecord] = []
         self.rejected: List[Tuple[int, str]] = []   # (rid, reason)
+        self.expired: List[RequestRecord] = []      # deadline passed in queue
+        self.failed: List[RequestRecord] = []       # failed-with-reason
+        self.n_preemptions = 0
+        self.recompute_tokens = 0   # generated tokens evicted -> re-prefilled
+        self.degradations: List[Tuple[int, str]] = []  # (round, reason)
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
         self.total_generated = 0
@@ -103,9 +113,14 @@ class ServingMetrics:
         self.rejected.append((rid, reason))
 
     def start(self, rid: int):
-        self.requests[rid].started = self.now()
+        rec = self.requests[rid]
+        t = self.now()
+        if rec.admissions == 0:
+            # re-admission after preemption must not rewrite queue_wait/TTFT
+            rec.started = t
+        rec.admissions += 1
         if self._t0 is None:
-            self._t0 = self.requests[rid].started
+            self._t0 = t
 
     def first_token(self, rid: int):
         """Stamp the first committed token for ``rid`` (idempotent: only the
@@ -139,6 +154,42 @@ class ServingMetrics:
         self.total_generated += rec.n_generated
         self.completed.append(rec)
         return rec
+
+    def preempt(self, rid: int, n_resume_generated: int):
+        """Mid-flight eviction: the request stays OPEN (it is re-queued, not
+        terminal). ``n_resume_generated`` = generated tokens in the committed
+        prefix that re-admission will prefill again — the recompute debt."""
+        rec = self.requests.get(rid)
+        if rec is not None:
+            rec.preemptions += 1
+        self.n_preemptions += 1
+        self.recompute_tokens += max(int(n_resume_generated), 0)
+
+    def expire(self, rid: int):
+        """Deadline passed while queued: terminal, no blocks ever spent."""
+        rec = self.requests.pop(rid)
+        rec.completed = self.now()
+        rec.expired = True
+        rec.n_generated = 0
+        self.expired.append(rec)
+        return rec
+
+    def fail(self, rid: int, reason: str, n_generated: int = 0):
+        """Terminal failure with a recorded reason (e.g. the output guard
+        caught corrupt logits). Tokens already streamed are NOT credited to
+        throughput — the stream is poisoned, the work is a loss."""
+        rec = self.requests.pop(rid)
+        rec.completed = self.now()
+        rec.failed = reason
+        rec.n_generated = max(int(n_generated), 0)
+        self._t_last = rec.completed
+        self.failed.append(rec)
+        return rec
+
+    def degrade(self, round_idx: int, reason: str):
+        """A batch fell back from speculative to AR rounds (watchdog trip or
+        drafter failure) — a quality-of-service event, not a request event."""
+        self.degradations.append((int(round_idx), reason))
 
     # --------------------------------------------------------------- rounds
     def record_round(self, n_accepted, gamma: int, active=None, rids=None):
@@ -179,13 +230,22 @@ class ServingMetrics:
         ttft = [r.ttft for r in self.completed if r.ttft is not None]
         wall = ((self._t_last - self._t0)
                 if self._t0 is not None and self._t_last is not None else 0.0)
-        # per-request deadline outcomes: only requests that carried a deadline
+        # per-request deadline outcomes over every TERMINAL deadline-carrying
+        # request: expired and failed ones count as unmet — goodput must not
+        # improve because the scheduler dropped doomed work
         deadline_met = {r.rid: r.deadline_met for r in self.completed
                         if r.deadline is not None}
+        deadline_met.update({r.rid: False for r in self.expired + self.failed
+                             if r.deadline is not None})
         return {
             "requests_completed": len(self.completed),
             "requests_cancelled": len(self.cancelled),
             "requests_rejected": len(self.rejected),
+            "requests_expired": len(self.expired),
+            "requests_failed": len(self.failed),
+            "n_preemptions": self.n_preemptions,
+            "recompute_tokens": self.recompute_tokens,
+            "degradations": len(self.degradations),
             "total_generated_tokens": self.total_generated,
             "aggregate_tokens_per_s": (self.total_generated / wall
                                        if wall > 0 else None),

@@ -35,8 +35,10 @@ from repro.obs import clock
 from repro.obs.drift import DriftMonitor
 from repro.obs.events import RoundEvent, RoundEventLog
 from repro.obs.trace import NULL_TRACER
+from repro.serving.faults import NO_FAULTS, DrafterFault, FaultPlan
 from repro.serving.metrics import ServingMetrics
 from repro.serving.scheduler import Scheduler, SchedulerConfig, ServeRequest
+from repro.serving.watchdog import RoundWatchdog
 
 
 class PagedSpecServer:
@@ -45,7 +47,10 @@ class PagedSpecServer:
                  gamma: Optional[int] = None,
                  alpha: Optional[float] = None,
                  cost_coefficient: Optional[float] = None,
-                 placement=None, tracer=None):
+                 placement=None, tracer=None,
+                 faults: Optional[FaultPlan] = None,
+                 watchdog: Optional[RoundWatchdog] = None,
+                 now=clock.wall):
         """``gamma``/``alpha``/``cost_coefficient`` override the scheduler's
         cost-model decision (None = decide online from telemetry).
         ``placement`` (api/placement.py) pins each model's params and block
@@ -56,7 +61,15 @@ class PagedSpecServer:
         the phase-split TracedRound (draft/verify/commit spans + per-phase
         times in the round events and the drift monitor); disabled (the
         default) keeps the fused donated round — tracing costs nothing
-        when off."""
+        when off.
+
+        ``faults`` (serving/faults.py) injects a deterministic failure
+        schedule — delays, drafter exceptions, pool seizure, output
+        corruption — keyed by step index; the NO_FAULTS default costs a few
+        dict lookups per round. ``watchdog`` (serving/watchdog.py) guards
+        against straggling speculative rounds by degrading the batch to AR;
+        ``now`` is the metrics clock (injectable for deterministic deadline
+        and expiry tests)."""
         assert target.family in KV_FAMILIES and drafter.family in KV_FAMILIES, \
             "paged speculative serving needs KV-cache families"
         self.target, self.drafter = target, drafter
@@ -68,7 +81,9 @@ class PagedSpecServer:
         self.params_t, self.params_d = params_t, params_d
         self.scfg = scfg or SchedulerConfig()
         self.tracer = tracer if tracer is not None else NULL_TRACER
-        self.metrics = ServingMetrics(gamma_max=self.scfg.gamma_max)
+        self.faults = faults if faults is not None else NO_FAULTS
+        self.watchdog = watchdog if watchdog is not None else RoundWatchdog()
+        self.metrics = ServingMetrics(gamma_max=self.scfg.gamma_max, now=now)
         self.events = RoundEventLog(alpha_ema=self.metrics.alpha_ema)
         self.drift: Optional[DriftMonitor] = None  # built at first spec round
         self.alloc = BlockAllocator(self.scfg.num_blocks, self.scfg.block_size,
@@ -98,8 +113,16 @@ class PagedSpecServer:
         self._ar_jit = None
         self._table_version = -1    # last allocator.version pushed to device
         self.gamma = None           # decided at batch formation
+        self._degraded = False      # watchdog/fault AR pin (one-way until
+                                    # the batch drains and re-forms)
+        self._vocab = int(target.cfg.vocab_size)  # output-guard bound
+        self._failed_pending: List[int] = []  # failed rids awaiting fanout
         self.done: List[ServeRequest] = []
         self.total_rounds = 0
+        self.total_steps = 0        # step() calls incl. stalled/idle steps —
+                                    # the fault-plan index (advances even when
+                                    # no round runs, so seized blocks keyed to
+                                    # a later step always come back)
         # paged-attention read accounting (see kv_traffic()): per-round KV
         # gathers, live-bounded vs worst-case row capacity, kept separately
         # for the target (verify / AR read) and the drafter (gamma
@@ -112,6 +135,11 @@ class PagedSpecServer:
     # ------------------------------------------------------------- plumbing
     def submit(self, req: ServeRequest):
         self.sched.submit(req)
+
+    def inject_faults(self, plan: FaultPlan):
+        """Swap the fault schedule in (chaos CLIs/benches; safe before the
+        first step)."""
+        self.faults = plan
 
     def _engine(self, gamma: int) -> BatchedSpecEngine:
         if gamma not in self._engines:
@@ -180,23 +208,34 @@ class PagedSpecServer:
         The caller must have synced the block tables (``_refill`` does); the
         row views below slice the already-pushed device tables instead of
         re-uploading. The pool views are donated: prefill writes the shared
-        pools in place rather than copying them per admitted request."""
-        padded = self.sched.pad_to_bucket(np.asarray(req.prompt, np.int32))
-        P = req.prompt_len
+        pools in place rather than copying them per admitted request.
+
+        A PREEMPTED request prefills its ``effective_prompt`` — the committed
+        prefix (prompt + generated tokens) snapshotted at eviction — and then
+        decodes from where it left off: greedy decode over the identical
+        prefix continues byte-identically (the recompute half of
+        preemption-by-eviction; docs/DESIGN.md §9).
+
+        Returns ``(state, ok)``: ``ok`` is False when the target produced
+        non-finite prefill logits — the caller must fail the request cleanly
+        instead of decoding from a poisoned cache."""
+        prompt = np.asarray(req.effective_prompt, np.int32)
+        padded = self.sched.pad_to_bucket(prompt)
+        P = req.resume_len
         if self._prefill_jit is None:
             if self.placement is None:
                 def prefill(pt, pd, prompt, tc, dc):
-                    _, tc, _ = self.target.apply(pt, prompt[:, :-1], tc)
+                    logits, tc, _ = self.target.apply(pt, prompt[:, :-1], tc)
                     _, dc, _ = self.drafter.apply(pd, prompt[:, :-1], dc)
-                    return tc, dc
+                    return tc, dc, jnp.isfinite(logits).all()
                 self._prefill_jit = jax.jit(prefill, donate_argnums=(3, 4))
             else:
                 # placed: each role's prefill is its own program on its own
                 # submesh (one jit cannot span two meshes)
-                t_jit = jax.jit(
-                    lambda pt, prompt, tc:
-                        self.target.apply(pt, prompt[:, :-1], tc)[1],
-                    donate_argnums=(2,))
+                def t_fn(pt, prompt, tc):
+                    logits, tc, _ = self.target.apply(pt, prompt[:, :-1], tc)
+                    return tc, jnp.isfinite(logits).all()
+                t_jit = jax.jit(t_fn, donate_argnums=(2,))
                 d_jit = jax.jit(
                     lambda pd, prompt, dc:
                         self.drafter.apply(pd, prompt[:, :-1], dc)[1],
@@ -204,8 +243,8 @@ class PagedSpecServer:
                 pm = self.placement
 
                 def prefill(pt, pd, prompt, tc, dc):
-                    return (t_jit(pt, pm.to_target(prompt), tc),
-                            d_jit(pd, pm.to_drafter(prompt), dc))
+                    tc, ok = t_jit(pt, pm.to_target(prompt), tc)
+                    return tc, d_jit(pd, pm.to_drafter(prompt), dc), ok
                 self._prefill_jit = prefill
         t_table = state.tcache["block_table"]
         d_table = state.dcache["block_table"]
@@ -223,24 +262,30 @@ class PagedSpecServer:
                    "index": jnp.zeros((1,), jnp.int32)}
         with self.tracer.span("prefill", phase="prefill", role="target",
                               rid=req.rid, prompt_len=P):
-            tc, dc = self._prefill_jit(self.params_t, self.params_d,
-                                       jnp.asarray(padded[None]), tc_view,
-                                       dc_view)
+            tc, dc, ok = self._prefill_jit(self.params_t, self.params_d,
+                                           jnp.asarray(padded[None]), tc_view,
+                                           dc_view)
             if self.tracer.enabled:
                 jax.block_until_ready((tc["index"], dc["index"]))
         # merge: pools carry the new rows; index rolls back to P-1 (bucket
-        # padding beyond it is masked); tables re-broadcast to the full batch
+        # padding beyond it is masked); tables re-broadcast to the full batch.
+        # The merge happens even on a failed (non-finite) prefill — the views
+        # were donated, so the old pools are gone; the caller frees the row
+        # and its blocks are rewritten before they can become visible.
         tcache = {**tc, "block_table": t_table,
                   "index": state.tcache["index"].at[row].set(P - 1)}
         dcache = {**dc, "block_table": d_table,
                   "index": state.dcache["index"].at[row].set(P - 1)}
         tokens = state.tokens.at[row].set(0).at[row, :P].set(
-            jnp.asarray(req.prompt, jnp.int32))
-        self._target_len[row] = P + req.max_new
-        return state._replace(tokens=tokens,
-                              length=state.length.at[row].set(P),
-                              active=state.active.at[row].set(True),
-                              tcache=tcache, dcache=dcache)
+            jnp.asarray(prompt, jnp.int32))
+        # target_len counts from the ORIGINAL prompt: a resumed request only
+        # owes the remainder of its decode budget
+        self._target_len[row] = req.prompt_len + req.max_new
+        state = state._replace(tokens=tokens,
+                               length=state.length.at[row].set(P),
+                               active=state.active.at[row].set(True),
+                               tcache=tcache, dcache=dcache)
+        return state, bool(jax.device_get(ok))
 
     # ------------------------------------------------------------- AR round
     def _ar_round(self, state: RowState) -> RowState:
@@ -269,25 +314,128 @@ class PagedSpecServer:
             if req is None:
                 break                       # FCFS head-blocking
             state = self._sync_tables(state)
-            state = self._prefill_into(state, b, req)
+            state, ok = self._prefill_into(state, b, req)
+            if not ok:
+                # non-finite target logits: fail the request cleanly (with
+                # the reason in metrics) instead of decoding garbage from a
+                # poisoned cache; the row's blocks go straight back
+                self.alloc.free_row(b)
+                self.metrics.fail(req.rid, "non-finite prefill logits",
+                                  n_generated=req.resume_len - req.prompt_len)
+                self._failed_pending.append(req.rid)
+                state = state._replace(active=state.active.at[b].set(False))
+                continue
             if lengths is not None:
-                lengths[b] = req.prompt_len  # keep the host mirror current
+                # keep the host mirror current; a resumed request starts at
+                # its committed prefix, not its original prompt
+                lengths[b] = req.resume_len
             self._slots[b] = req
         return state
 
     def _harvest(self, state: RowState, lengths: np.ndarray) -> RowState:
         """``lengths`` is the round's single host snapshot of state.length
-        (run() pulls it once; refill updates it in place for new rows)."""
+        (run() pulls it once; refill updates it in place for new rows).
+        Completing rows pass the output guard before release: a committed
+        token outside the vocabulary means the decode was poisoned (corrupt
+        logits / injected fault) — fail the request with the reason recorded
+        instead of returning garbage."""
         for b in range(self.B):
             req = self._slots[b]
             if req is None or lengths[b] < self._target_len[b]:
                 continue
-            req.tokens = np.asarray(state.tokens[b, :self._target_len[b]])
+            toks = np.asarray(state.tokens[b, :self._target_len[b]])
+            gen = toks[req.prompt_len:]
+            if ((gen < 0) | (gen >= self._vocab)).any():
+                self._fail_row(b, req, int(self._target_len[b]))
+                state = state._replace(active=state.active.at[b].set(False))
+                continue
+            req.tokens = toks
             self.sched.release(b, req)
             self.done.append(req)
             self._slots[b] = None
             state = state._replace(active=state.active.at[b].set(False))
         return self._sync_tables(self._refill(state, lengths))
+
+    # ----------------------------------------------------------- preemption
+    def _fail_row(self, b: int, req: ServeRequest, cur: int):
+        """Terminal-failure teardown for an in-flight row: blocks freed,
+        reason recorded, rid queued for stream fanout. The caller clears the
+        row's active flag on whichever state object it holds."""
+        self.alloc.free_row(b)
+        self.metrics.fail(req.rid,
+                          f"corrupt token id outside [0, {self._vocab})",
+                          n_generated=max(cur - req.prompt_len, 0))
+        self._failed_pending.append(req.rid)
+        self._slots[b] = None
+
+    def _choose_victim(self, prefer_not: int) -> Optional[int]:
+        """Victim policy: among occupied rows, LATEST deadline first (a
+        best-effort None deadline sorts latest of all — most slack), ties
+        broken by fewest committed tokens (cheapest recompute). The live EDF
+        head — the occupied row with the earliest deadline — is protected
+        whenever any other candidate exists, mirroring admission's
+        no-starvation rule; likewise the row whose growth triggered the
+        eviction (``prefer_not``) is evicted only as the last resort
+        (self-preemption, which still terminates: re-admission's reservation
+        floor guarantees a block of committed progress per cycle)."""
+        occupied = [b for b in range(self.B) if self._slots[b] is not None]
+        if not occupied:
+            return None
+
+        def dl(b):
+            d = self._slots[b].deadline
+            return float("inf") if d is None else d
+
+        cands = list(occupied)
+        if len(cands) > 1:
+            head = min(occupied, key=lambda b: (dl(b), b))
+            cands = [b for b in cands if b != head]
+        if prefer_not in cands and len(cands) > 1:
+            cands = [b for b in cands if b != prefer_not]
+        return max(cands, key=lambda b: (dl(b),
+                                         -int(min(self._lengths[b],
+                                                  self._target_len[b])), -b))
+
+    def _preempt_row(self, b: int, state: RowState) -> RowState:
+        """Evict row ``b``: snapshot its committed prefix (prompt + generated
+        tokens — never unverified speculation; ``_lengths`` is the committed
+        length), free ALL its KV blocks, and re-queue the request. On
+        re-admission the prefix is prefilled again and greedy decode resumes
+        byte-identically (chaos-suite checked)."""
+        req = self._slots[b]
+        cur = int(min(self._lengths[b], self._target_len[b]))
+        req.resume_tokens = np.asarray(jax.device_get(
+            state.tokens[b, :cur])).astype(np.int32)
+        req.preemptions += 1
+        self.alloc.free_row(b)
+        self._slots[b] = None
+        self.sched.requeue(req)
+        return state._replace(active=state.active.at[b].set(False))
+
+    def _ensure_capacity(self, state: RowState):
+        """Overcommit enforcement, run between the gamma decision and the
+        round dispatch: every live row must own blocks for its committed
+        prefix plus this round's speculative writes (gamma + 1 unverified
+        tokens past the committed index). When the pool runs dry, evict
+        victims until the row fits. Under worst-case reservation
+        (overcommit == 1.0) the admission grant already covers every round,
+        so ``grow`` returns immediately and nothing is ever preempted.
+        Returns ``(state, preempted_rids)``."""
+        preempted: List[int] = []
+        for b in range(self.B):
+            if self._slots[b] is None:
+                continue
+            needed = (int(min(self._lengths[b], self._target_len[b]))
+                      + self.gamma + 1)
+            while self._slots[b] is not None and not self.sched.grow(b, needed):
+                victim = self._choose_victim(prefer_not=b)
+                if victim is None:
+                    break
+                preempted.append(self._slots[victim].rid)
+                state = self._preempt_row(victim, state)
+                if victim == b:
+                    break               # the growing row evicted itself
+        return state, preempted
 
     def _account_round(self, prev_len: np.ndarray):
         """Per-round paged-attention read bound (matches the block-scan read
@@ -399,20 +547,38 @@ class PagedSpecServer:
                 pass
             return self.done
 
+    def _batch_drained(self):
+        """The current batch is over: the next admission re-forms it (and
+        re-decides gamma — safe, because no live row carries stale drafter
+        KV). Degradation and the watchdog recover WITH the batch: both are
+        scoped to one batch's spec->AR rule."""
+        self._batch_formed = False
+        self._degraded = False
+        self.watchdog.reset()
+
+    def _drain_failed(self) -> List[int]:
+        out, self._failed_pending = self._failed_pending, []
+        return out
+
     def step(self) -> Optional[Dict]:
-        """ONE serving round: process cancellations, admit/refill, decide
-        gamma, run one jitted round, record telemetry, harvest finished rows.
-        Returns None when idle (no live rows after refill — the current batch
-        is over and the next admission re-forms it); otherwise a step-info
-        dict for streaming front ends:
+        """ONE serving round: apply scheduled faults, process cancellations,
+        admit/refill (expiring doomed queue heads), decide gamma, enforce
+        block capacity (preempting victims under overcommit), run one jitted
+        round, record telemetry, harvest finished rows. Returns None when
+        idle (no live rows, nothing queued, no terminal events to deliver);
+        otherwise a step-info dict for streaming front ends:
 
             streams   — {rid: np.ndarray} tokens committed THIS round per
                         live request (only when ``collect_streams`` is set;
                         the sync path never pulls the token buffer)
             finished  — rids completed and released this step
             cancelled — rids cancelled this step
+            expired   — rids expired at admission (deadline already passed)
+            failed    — rids failed terminally (reason in metrics)
+            preempted — rids evicted + re-queued this step (NOT terminal)
             round     — the RoundEvent.round id of this round (stream events
-                        join the obs layer through it)
+                        join the obs layer through it); None for a
+                        notification-only step where no round ran
             queue_depth / n_live — scheduler pressure while the round ran
 
         ``run()`` is exactly ``while step() is not None`` — the synchronous
@@ -422,13 +588,29 @@ class PagedSpecServer:
         if self._state is None:
             self._state = self._empty_state()
             self._lengths = np.array(self._state.length)
+        step_idx = self.total_steps
+        self.total_steps += 1
+        delta = self.faults.pool_delta(step_idx)
+        if delta > 0:
+            self.alloc.seize(delta)
+        elif delta < 0:
+            self.alloc.release_seized(-delta)
         cancelled = self._process_cancels()
         self._state = self._sync_tables(self._refill(self._state,
                                                      self._lengths))
+        expired = self.sched.drain_expired()
         if not any(r is not None for r in self._slots):
-            # batch drained: the next admission re-forms it (and re-decides
-            # gamma — safe, because no live row carries stale drafter KV)
-            self._batch_formed = False
+            self._batch_drained()
+            failed = self._drain_failed()
+            if cancelled or expired or failed or self.sched.has_work():
+                # nothing live, but terminal events need delivery, or queued
+                # work is stalled on transient (seized) pressure — emit a
+                # notification-only step so front ends see the events and
+                # the loop outlives the squeeze
+                return {"streams": {}, "finished": [], "cancelled": cancelled,
+                        "expired": expired, "failed": failed, "preempted": [],
+                        "round": None, "queue_depth": len(self.sched.queue),
+                        "n_live": 0}
             return None
 
         # gamma/AR decision (paper Eq. 1, telemetry alpha): decided at batch
@@ -444,56 +626,127 @@ class PagedSpecServer:
             self.gamma, _ = self.sched.choose_gamma(
                 self._alpha_override, self._c_override or self._measured_c())
         self._batch_formed = True
+        if self._degraded:
+            # degradation wins over a pinned gamma: a tripped watchdog or a
+            # failed drafter keeps the batch on AR until it drains
+            self.gamma = 0
+
+        # overcommit: grow every live row to this round's block demand,
+        # evicting victims when the pool is dry; tables changed -> re-sync
+        self._state, preempted = self._ensure_capacity(self._state)
+        self._state = self._sync_tables(self._state)
+        if not any(r is not None for r in self._slots):
+            # extreme pressure evicted the whole batch; deliver and retry
+            self._batch_drained()
+            return {"streams": {}, "finished": [], "cancelled": cancelled,
+                    "expired": expired, "failed": self._drain_failed(),
+                    "preempted": preempted, "round": None,
+                    "queue_depth": len(self.sched.queue), "n_live": 0}
 
         queue_depth = len(self.sched.queue)
         prev_len = self._lengths
-        blocks_read, blocks_written = self._account_round(prev_len)
         phase_t: dict = {}
         t0 = self.tracer.clock()
         if self.gamma > 0:
             eng = self._engine(self.gamma)
-            if isinstance(eng._round_jit, TracedRound):
-                self._state = eng._round_jit(
-                    self.params_t, self.params_d, self._state,
-                    round=self.total_rounds, gamma=self.gamma)
-                phase_t = eng._round_jit.last_phase_times
-            else:
-                self._state = eng._round_jit(self.params_t, self.params_d,
-                                             self._state)
+            try:
+                # the injected drafter failure raises BEFORE dispatch (device
+                # state intact, nothing donated) and recovers through the
+                # same path a real mid-flight drafter exception takes
+                if self.faults.drafter_fails(step_idx):
+                    raise DrafterFault(
+                        f"injected drafter failure at step {step_idx}")
+                if isinstance(eng._round_jit, TracedRound):
+                    self._state = eng._round_jit(
+                        self.params_t, self.params_d, self._state,
+                        round=self.total_rounds, gamma=self.gamma)
+                    phase_t = eng._round_jit.last_phase_times
+                else:
+                    self._state = eng._round_jit(self.params_t, self.params_d,
+                                                 self._state)
+            except Exception as e:
+                # degrade the batch to AR (one-way until it drains) instead
+                # of wedging the server. If the failed dispatch already
+                # consumed the donated round state, the AR round below
+                # raises and propagates — honest failure over silently
+                # serving from a dead buffer.
+                self.metrics.degrade(self.total_rounds,
+                                     f"spec round failed: {e}")
+                self._degraded = True
+                self.gamma = 0
+                with self.tracer.span("ar_round", phase="verify",
+                                      role="target", round=self.total_rounds):
+                    self._state = self._ar_round(self._state)
         else:
             with self.tracer.span("ar_round", phase="verify",
                                   role="target", round=self.total_rounds):
                 self._state = self._ar_round(self._state)
                 if self.tracer.enabled:
                     jax.block_until_ready(self._state.length)
+        # account AFTER execution so a degraded round is charged as the AR
+        # round that actually ran, not the spec round that died
+        blocks_read, blocks_written = self._account_round(prev_len)
         self.total_rounds += 1
         # ONE host sync per round: lengths + active in a single pull; the
         # harvest/refill below reuse the same snapshot
         lengths, active = map(np.array, jax.device_get(
             (self._state.length, self._state.active)))
-        t_round = self.tracer.clock() - t0   # dispatch -> host sync
+        fault_delay = self.faults.round_delay(step_idx)
+        t_round = self.tracer.clock() - t0 + fault_delay  # dispatch -> sync
+                                   # (+ injected virtual straggle, if any)
+        if self.gamma > 0 and self.watchdog.observe(t_round):
+            self.metrics.degrade(self.total_rounds,
+                                 "watchdog: straggling speculative rounds")
+            self._degraded = True  # takes effect next round
         self._lengths = lengths
+        if self.faults.corrupts(step_idx):
+            self._corrupt_one_row(lengths)
         emitted = lengths - prev_len
         rids = [r.rid if r is not None else None for r in self._slots]
         self.metrics.record_round(np.maximum(emitted - 1, 0), self.gamma,
                                   active, rids)
         streams = self._harvest_streams(prev_len, lengths)
-        self._record_event(prev_len, lengths, active, rids, t_round,
-                           phase_t, blocks_read, blocks_written, queue_depth)
+        ev_lengths = lengths.copy()   # _harvest's refill mutates `lengths`
+                                      # in place for newly admitted rows; the
+                                      # event must see THIS round's commit
         done_before = len(self.done)
         self._state = self._harvest(self._state, lengths)
+        expired += self.sched.drain_expired()   # harvest-refill expiries
+        failed = self._drain_failed()
+        self._record_event(prev_len, ev_lengths, active, rids, t_round,
+                           phase_t, blocks_read, blocks_written, queue_depth,
+                           n_preempted=len(preempted), n_expired=len(expired),
+                           n_failed=len(failed), fault_delay=fault_delay)
         return {"streams": streams,
                 "finished": [r.rid for r in self.done[done_before:]],
                 "cancelled": cancelled,
+                "expired": expired,
+                "failed": failed,
+                "preempted": preempted,
                 "round": self.total_rounds - 1,
                 "queue_depth": queue_depth,
                 "n_live": int(np.sum(active))}
+
+    def _corrupt_one_row(self, lengths):
+        """Fault injection: poison the newest committed token of the first
+        emitting row to an out-of-vocab id — the output guard must fail that
+        request cleanly instead of streaming the garbage."""
+        for b, req in enumerate(self._slots):
+            if req is None:
+                continue
+            cur = int(min(lengths[b], self._target_len[b]))
+            if cur > req.prompt_len:
+                self._state = self._state._replace(
+                    tokens=self._state.tokens.at[b, cur - 1].set(self._vocab))
+                return
 
     def _harvest_streams(self, prev_len, lengths) -> Dict[int, np.ndarray]:
         """Newly committed tokens per live request this round (committed ==
         final: verify already accepted them, so streaming is exact). TTFT is
         stamped here for every path; the token pull itself happens only when
-        a streaming front end asked for it."""
+        a streaming front end asked for it. Streamed tokens pass the output
+        guard first — a poisoned token FAILS the request instead of reaching
+        a client (the sync path's guard lives in ``_harvest``)."""
         streams: Dict[int, np.ndarray] = {}
         tok_host = None
         for b, req in enumerate(self._slots):
@@ -506,11 +759,19 @@ class PagedSpecServer:
                 continue
             if tok_host is None:   # one bulk pull for all emitting rows
                 tok_host = np.asarray(jax.device_get(self._state.tokens))
-            streams[req.rid] = tok_host[b, int(prev_len[b]):cur].copy()
+            new = tok_host[b, int(prev_len[b]):cur].copy()
+            if ((new < 0) | (new >= self._vocab)).any():
+                self._fail_row(b, req, cur)
+                self._state = self._state._replace(
+                    active=self._state.active.at[b].set(False))
+                continue
+            streams[req.rid] = new
         return streams
 
     def _record_event(self, prev_len, lengths, active, rids, t_round,
-                      phase_t, blocks_read, blocks_written, queue_depth=0):
+                      phase_t, blocks_read, blocks_written, queue_depth=0,
+                      n_preempted=0, n_expired=0, n_failed=0,
+                      fault_delay=0.0):
         """One RoundEvent per round (always, traced or not) + a drift
         observation per speculative round (phase times when traced)."""
         emitted = lengths - prev_len
@@ -526,7 +787,9 @@ class PagedSpecServer:
             t_draft=phase_t.get("draft"), t_verify=phase_t.get("verify"),
             t_commit=phase_t.get("commit"),
             blocks_read=blocks_read, blocks_written=blocks_written,
-            rids=live_rids, t_wall=clock.wall(), queue_depth=queue_depth))
+            rids=live_rids, t_wall=clock.wall(), queue_depth=queue_depth,
+            n_preempted=n_preempted, n_expired=n_expired, n_failed=n_failed,
+            degraded=self._degraded, fault_delay=fault_delay))
         if self.gamma > 0:
             if self.drift is None:
                 c = (self._c_override if self._c_override is not None

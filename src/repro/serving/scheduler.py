@@ -3,16 +3,26 @@
 Responsibilities (host-side; every decision lands in the device state as a
 block-table / index update between jitted rounds):
 
-  * ADMISSION CONTROL — earliest-deadline-first with conservative
-    reservation: among queued requests the one with the earliest deadline
-    (requests without a deadline sort last, FCFS among themselves) is
-    admitted when the block pool can hold its whole worst case
-    ``prompt_len + max_new + gamma + 1`` tokens (prompt + decode + in-flight
-    speculation). Admission head-blocks on the EDF head — a deadline-tight
-    request is never starved by slack arrivals that happen to fit. Nothing
-    is ever preempted mid-flight, so admission can never deadlock the pool.
-    Requests whose worst-case demand can NEVER fit are rejected at submit
-    (recorded in metrics), not left to head-block the queue forever.
+  * ADMISSION CONTROL — earliest-deadline-first: among queued requests the
+    one with the earliest deadline (requests without a deadline sort last,
+    FCFS among themselves) is admitted when the block pool can hold its
+    admission reservation. Admission head-blocks on the EDF head — a
+    deadline-tight request is never starved by slack arrivals that happen
+    to fit — but a head whose deadline has ALREADY passed is expired on the
+    spot (recorded in metrics) instead of spending blocks on work that can
+    no longer meet its SLO. Requests whose worst-case demand can NEVER fit
+    are rejected at submit (recorded in metrics), not left to head-block
+    the queue forever.
+  * OVERCOMMIT + PREEMPTION — with ``overcommit == 1.0`` (default) the
+    reservation is the whole worst case ``prompt_len + max_new + gamma + 1``
+    tokens (prompt + decode + in-flight speculation): nothing is ever
+    preempted mid-flight and admission can never deadlock the pool. With
+    ``overcommit > 1.0`` admission reserves only the EXPECTED demand
+    (worst-case remaining decode scaled down by the factor) and rows grow
+    on demand each round (``grow``); when the pool runs dry mid-flight the
+    server preempts a victim — evicts its KV blocks and ``requeue``s the
+    request with its committed tokens for prefix-recompute on re-admission
+    (byte-identical under greedy decode). See docs/DESIGN.md §9.
   * LENGTH BUCKETING — ragged prompt lengths are padded up to a small set of
     bucket lengths so prefill compiles once per bucket, not once per length.
     Padding is exact: prefill consumes the padded prompt causally (real
@@ -50,6 +60,9 @@ class SchedulerConfig:
     prefill_buckets: Tuple[int, ...] = (8, 16, 32, 64, 128, 256)
     alpha_prior: float = 0.8           # acceptance prior before telemetry
     cost_coefficient: float = 0.25     # c = t_draft / t_target (measured or roofline)
+    overcommit: float = 1.0            # admission reservation divisor; 1.0 =
+                                       # worst-case reservation, >1 admits on
+                                       # expected demand + preempts on dry pool
 
     @property
     def max_tokens_per_row(self) -> int:
@@ -64,10 +77,28 @@ class ServeRequest:
     tokens: Optional[np.ndarray] = None  # filled on completion
     deadline: Optional[float] = None   # absolute SLO deadline (clock domain);
                                        # None = best-effort (sorts last)
+    resume_tokens: Optional[np.ndarray] = None  # committed prefix (prompt +
+                                       # generated) snapshotted at preemption;
+                                       # re-admission prefills THIS instead of
+                                       # the prompt, then decode continues
+    preemptions: int = 0               # times this request was evicted
 
     @property
     def prompt_len(self) -> int:
+        """ORIGINAL prompt length — stable across preemptions (metrics and
+        stream accounting key off it)."""
         return int(len(self.prompt))
+
+    @property
+    def effective_prompt(self) -> np.ndarray:
+        """What re-admission must prefill: the committed prefix if this
+        request was preempted, else the prompt."""
+        return self.resume_tokens if self.resume_tokens is not None \
+            else self.prompt
+
+    @property
+    def resume_len(self) -> int:
+        return int(len(self.effective_prompt))
 
 
 class Scheduler:
@@ -77,6 +108,8 @@ class Scheduler:
         self.alloc = allocator
         self.metrics = metrics or ServingMetrics(gamma_max=cfg.gamma_max)
         self.queue: Deque[ServeRequest] = deque()
+        self._expired_pending: list = []  # expired-at-admission rids, drained
+                                          # by the server for stream delivery
 
     # ------------------------------------------------------------ admission
     def validate(self, req: ServeRequest):
@@ -102,6 +135,20 @@ class Scheduler:
                     f"{self.cfg.block_size}; block 0 is reserved)")
             self.bucket(req.prompt_len)  # over-bucket prompts fail loudly
                                          # here, not mid-flight in the prefill
+            if self.cfg.overcommit > 1.0:
+                # a preempted request resumes by prefilling its committed
+                # prefix (up to prompt_len + max_new - 1 tokens); that
+                # resume-prefill must also fit a bucket, or eviction would
+                # strand the request un-resumable
+                try:
+                    self.bucket(req.prompt_len + req.max_new - 1)
+                except ValueError:
+                    raise ValueError(
+                        f"request {req.rid}: committed prefix can reach "
+                        f"{req.prompt_len + req.max_new - 1} tokens, past "
+                        f"the largest prefill bucket "
+                        f"{self.cfg.prefill_buckets[-1]} — not admissible "
+                        f"under overcommit (preemption could strand it)")
         except ValueError as e:
             self.metrics.reject(req.rid, str(e))
             raise
@@ -118,6 +165,26 @@ class Scheduler:
         committed index)."""
         return req.prompt_len + req.max_new + self.cfg.gamma_max + 1
 
+    def admit_tokens(self, req: ServeRequest) -> int:
+        """Tokens to reserve at admission. With ``overcommit == 1`` this is
+        the full worst case. With ``overcommit > 1`` only the EXPECTED
+        demand: the already-committed prefix (which must be resident in
+        full) plus the remaining decode budget scaled down by the factor —
+        most requests finish early or get preempted before the worst case
+        materializes. The floor term guarantees every admission can commit
+        at least one full speculative round plus a block of decode before
+        needing to grow, so a preempt/re-admit cycle always makes forward
+        progress (termination)."""
+        worst = self.demand_tokens(req)
+        if self.cfg.overcommit <= 1.0:
+            return worst
+        start = req.resume_len
+        remaining = req.prompt_len + req.max_new - start
+        floor = self.cfg.gamma_max + 1 + self.cfg.block_size
+        expected = start + max(int(np.ceil(remaining / self.cfg.overcommit)),
+                               floor)
+        return min(worst, expected)
+
     def has_work(self) -> bool:
         return bool(self.queue)
 
@@ -133,20 +200,50 @@ class Scheduler:
 
     def try_admit(self, row: int) -> Optional[ServeRequest]:
         """Admit the earliest-deadline queued request into ``row`` if its
-        full reservation fits (EDF, head-blocking on the EDF head — no
-        starvation of deadline-tight requests). Reserves blocks on success."""
-        if not self.queue:
-            return None
-        i = self._edf_head()
-        req = self.queue[i]
-        # bucketed prefill writes bucket(P)-1 positions; real-token positions
-        # are always < demand, and padded spill past the reservation lands in
-        # the null block and is rolled back — reserve only the real demand.
-        if not self.alloc.ensure(row, self.demand_tokens(req)):
-            return None
-        del self.queue[i]
-        self.metrics.start(req.rid)
-        return req
+        admission reservation fits (EDF, head-blocking on the EDF head — no
+        starvation of deadline-tight requests). EDF heads whose deadline has
+        already passed are expired instead of admitted: they can no longer
+        meet their SLO, so spending blocks (and head-blocking live work) on
+        them is pure loss. Reserves blocks on success."""
+        now = self.metrics.now()
+        while self.queue:
+            i = self._edf_head()
+            req = self.queue[i]
+            if req.deadline is not None and req.deadline < now:
+                del self.queue[i]
+                self.metrics.expire(req.rid)
+                self._expired_pending.append(req.rid)
+                continue
+            # bucketed prefill writes bucket(P)-1 positions; real-token
+            # positions are always < demand, and padded spill past the
+            # reservation lands in the null block and is rolled back —
+            # reserve only the real demand.
+            if not self.alloc.ensure(row, self.admit_tokens(req)):
+                return None
+            del self.queue[i]
+            self.metrics.start(req.rid)
+            return req
+        return None
+
+    def drain_expired(self) -> list:
+        """Rids expired since the last drain (server fans these out to
+        streams as terminal events)."""
+        out, self._expired_pending = self._expired_pending, []
+        return out
+
+    def grow(self, row: int, n_tokens: int) -> bool:
+        """Grow an in-flight row's reservation to ``n_tokens`` (overcommit
+        path: rows are admitted below worst case and extended round by
+        round). False = pool dry; the server must preempt a victim."""
+        return self.alloc.ensure(row, n_tokens)
+
+    def requeue(self, req: ServeRequest):
+        """Re-queue a preempted request (blocks already freed by the server).
+        Keeps its original deadline and EDF position; records the preemption
+        and the recompute debt (its committed prefix must be prefilled
+        again)."""
+        self.metrics.preempt(req.rid, req.resume_len - req.prompt_len)
+        self.queue.append(req)
 
     def cancel(self, rid: int) -> bool:
         """Remove a still-QUEUED request (client dropped its stream before
@@ -155,7 +252,9 @@ class Scheduler:
         for i, r in enumerate(self.queue):
             if r.rid == rid:
                 del self.queue[i]
-                self.metrics.cancel(rid, 0)
+                # a preempted request cancelled while re-queued already
+                # streamed its committed tokens — credit them
+                self.metrics.cancel(rid, r.resume_len - r.prompt_len)
                 return True
         return False
 

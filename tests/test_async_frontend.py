@@ -192,7 +192,11 @@ def test_edf_admits_tight_deadline_before_earlier_slack_request():
     cfg = _scfg()
     alloc = BlockAllocator(cfg.num_blocks, cfg.block_size,
                            cfg.max_blocks_per_row, cfg.max_batch)
-    sched = Scheduler(cfg, alloc)
+    # manual clock at t=0: the absolute deadlines below are in the FUTURE
+    # (a past deadline would now expire at admission instead of admitting)
+    sched = Scheduler(cfg, alloc,
+                      ServingMetrics(gamma_max=cfg.gamma_max,
+                                     now=ManualClock()))
     sched.submit(ServeRequest(0, np.arange(4), 4, deadline=100.0))  # slack
     sched.submit(ServeRequest(1, np.arange(4), 4, deadline=5.0))    # tight
     sched.submit(ServeRequest(2, np.arange(4), 4))                  # none

@@ -98,6 +98,59 @@ def test_rollback_frees_tail_blocks():
     assert alloc.num_free == 15 - 3 - 4
 
 
+def test_free_tail_to_zero_and_double_free():
+    """free_tail edge cases: freeing to zero equals free_row, and a second
+    free of the same tail is a no-op (no block enters the free list twice)."""
+    alloc = BlockAllocator(num_blocks=16, block_size=4, max_blocks_per_row=8,
+                           batch=2)
+    assert alloc.ensure(0, 10)                 # 3 blocks
+    v0 = alloc.version
+    assert alloc.free_tail(0, 0) == 3          # free to zero
+    assert int(alloc.n_alloc[0]) == 0
+    assert alloc.num_free == 15
+    assert (alloc.table[0] == paged_kv.NULL_BLOCK).all()
+    assert alloc.version == v0 + 1
+    # double free: nothing left to release, version untouched
+    assert alloc.free_tail(0, 0) == 0
+    assert alloc.free_row(0) == 0
+    assert alloc.num_free == 15
+    assert alloc.version == v0 + 1
+    alloc.audit()
+
+
+def test_free_tail_across_block_boundary():
+    """n_tokens landing exactly on a block boundary keeps exactly
+    n_tokens/block_size blocks — the boundary block is NOT freed."""
+    alloc = BlockAllocator(num_blocks=16, block_size=4, max_blocks_per_row=8,
+                           batch=1)
+    assert alloc.ensure(0, 17)                 # 5 blocks
+    assert alloc.free_tail(0, 8) == 3          # exact boundary: keep 2
+    assert int(alloc.n_alloc[0]) == 2
+    assert alloc.free_tail(0, 8) == 0          # idempotent at the boundary
+    assert alloc.free_tail(0, 5) == 0          # 5 tokens still need 2 blocks
+    assert alloc.free_tail(0, 4) == 1          # boundary again: keep exactly 1
+    assert int(alloc.n_alloc[0]) == 1
+    alloc.audit()
+
+
+def test_seize_and_release_only_touch_free_blocks():
+    """Fault-injection seizure: live rows keep their blocks; seized blocks
+    are withheld from allocation and auditable, then fully returned."""
+    alloc = BlockAllocator(num_blocks=8, block_size=4, max_blocks_per_row=4,
+                           batch=1)
+    assert alloc.ensure(0, 12)                 # 3 of 7 usable blocks
+    live = [int(x) for x in alloc.table[0, :3]]
+    assert alloc.seize(100) == 4               # only the free ones
+    assert alloc.num_free == 0
+    assert [int(x) for x in alloc.table[0, :3]] == live
+    assert not alloc.ensure(0, 16)             # pool dry under seizure
+    assert alloc.audit() == {"free": 0, "live": 3, "seized": 4}
+    assert alloc.release_seized(2) == 2
+    assert alloc.ensure(0, 16)                 # headroom back
+    assert alloc.release_seized() == 2
+    assert alloc.audit() == {"free": 3, "live": 4, "seized": 0}
+
+
 def test_allocator_reserves_null_block_and_bounds():
     alloc = BlockAllocator(num_blocks=4, block_size=2, max_blocks_per_row=4,
                            batch=1)
