@@ -11,7 +11,11 @@ Three measurements, all over the SAME shared round core (core/rounds.py):
   3. draft policy — linear vs MultiDraftPolicy(k=2) tokens/s on a
      LOW-ACCEPTANCE workload (noise-perturbed drafter), with the measured
      acceptance evidence (alpha, alpha_topk) fed back to the Planner so its
-     linear/multi decision is printed next to the measured outcome.
+     linear/multi decision is printed next to the measured outcome;
+  4. tree sweep — linear vs TreeDraftPolicy tokens/s over (width, depth)
+     on the same low-acceptance workload (cached rounds, one tree-attention
+     verify per round), with the planner's chosen shape and predicted gain
+     printed next to the measured per-shape table.
 
 Everything lands in benchmarks/.bench_cache/strategies.json.
 """
@@ -24,7 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import CACHE, emit, prompts, time_call, trained_pair
+from benchmarks.common import (CACHE, emit, measure_topk_acceptance, prompts,
+                               time_call, trained_pair)
 from repro.api import DeploymentSpec, Planner, Session
 from repro.core import rounds
 from repro.core.engine import EngineConfig, SpecEngine, autoregressive_generate
@@ -32,6 +37,7 @@ from repro.core.engine import EngineConfig, SpecEngine, autoregressive_generate
 GAMMA = 4
 MAX_NEW = 32
 MULTI_K = 2
+TREE_SHAPES = ((2, 2), (2, 3), (2, 4), (3, 2), (3, 3))
 
 
 def run(strategy, use_cache, mt, md, pt, pd, ps):
@@ -82,20 +88,14 @@ def phase_times(mt, md, pt, pd, ps, iters=10):
     return out, drift
 
 
-def measure_topk_acceptance(mt, md, pt, pd, ps, n_new=48):
-    """(alpha, alpha_topk): P[target greedy token == drafter argmax] and
-    P[target greedy token in drafter top-k] along the target's own greedy
-    continuation — the planner's decision-⑥ evidence."""
-    cont = autoregressive_generate(mt, pt, ps, n_new)
-    lg_d, _, _ = md.apply(pd, cont)
-    P = ps.shape[1]
-    # drafter logits at position p predict token p+1
-    pred = lg_d[:, P - 1:P + n_new - 1]                  # [B, n_new, V]
-    actual = cont[:, P:P + n_new]                        # [B, n_new]
-    top1 = jnp.argmax(pred, axis=-1) == actual
-    _, topk = jax.lax.top_k(pred, MULTI_K)
-    ink = (topk == actual[..., None]).any(-1)
-    return float(top1.mean()), float(ink.mean())
+def _weak_drafter(pd):
+    """Noise-perturbed drafter weights: drops top-1 agreement (low alpha)
+    while the top-k usually still covers — the workload where branching
+    drafting pays."""
+    return jax.tree.map(
+        lambda w: w + 0.03 * jax.random.normal(
+            jax.random.PRNGKey(5), w.shape, jnp.float32).astype(w.dtype)
+        if w.ndim >= 2 else w, pd)
 
 
 def draft_policy_bench(mt, md, pt, pd, ps):
@@ -104,12 +104,9 @@ def draft_policy_bench(mt, md, pt, pd, ps):
     (alpha, alpha_topk), the cost coefficient c, and the marginal cost of
     stacking a candidate (stack_cost) — so the Planner's linear/multi
     verdict prints next to the measured outcome it predicts."""
-    # low-acceptance drafter: perturbed weights drop top-1 agreement
-    pd_weak = jax.tree.map(
-        lambda w: w + 0.03 * jax.random.normal(
-            jax.random.PRNGKey(5), w.shape, jnp.float32).astype(w.dtype)
-        if w.ndim >= 2 else w, pd)
-    alpha, alpha_topk = measure_topk_acceptance(mt, md, pt, pd_weak, ps)
+    pd_weak = _weak_drafter(pd)
+    alpha, alpha_topk = measure_topk_acceptance(mt, md, pt, pd_weak, ps,
+                                                k=MULTI_K)
 
     out = {"alpha": alpha, "alpha_topk": alpha_topk, "k": MULTI_K}
     for pol in ("linear", "multi"):
@@ -165,6 +162,72 @@ def draft_policy_bench(mt, md, pt, pd, ps):
     return out
 
 
+def tree_sweep(mt, md, pt, pd, ps, cost):
+    """Decision ⑥'s predict->measure loop for TREE drafting: linear vs
+    cached tree rounds (one tree-attention verify/round) over (width,
+    depth) on the low-acceptance workload. Each shape's measured tokens/s
+    gain over the gamma=GAMMA linear baseline is recorded next to the cost
+    model's predicted gain, and the Planner — fed the same measured
+    (alpha, alpha_topk, c, stack_cost) evidence — states its chosen shape."""
+    from repro.core import cost_model
+    pd_weak = _weak_drafter(pd)
+    t_d, t_t = cost["t_draft_ms"] * 1e-3, cost["t_target_ms"] * 1e-3
+    c, stack = t_d / t_t, cost["stack_cost"]
+    widths = sorted({w for w, _ in TREE_SHAPES})
+    alpha, topk = None, {}
+    for w in widths:    # alpha_topk must be measured at the width it arms
+        alpha, topk[w] = measure_topk_acceptance(mt, md, pt, pd_weak, ps, k=w)
+
+    def tok_s(policy, k, gamma):
+        eng = SpecEngine(mt, md, EngineConfig(
+            gamma=gamma, greedy=True, use_cache=True, strategy="modular",
+            draft_policy=policy, draft_k=k))
+        last = {}
+
+        def go():
+            toks, last["stats"] = eng.generate(pt, pd_weak, ps, MAX_NEW)
+            return toks
+        t = time_call(go, iters=3, warmup=1)
+        return last["stats"]["tokens_generated"] / t, last["stats"]
+
+    lin, lin_stats = tok_s("linear", 1, GAMMA)
+    s_lin = cost_model.speedup(alpha, GAMMA, c)
+    out = {"alpha": alpha,
+           "alpha_topk": {str(w): topk[w] for w in widths},
+           "cost": {"c": c, "stack_cost": stack},
+           "linear": {"gamma": GAMMA, "tok_s": lin,
+                      "rounds": lin_stats["rounds"],
+                      "alpha_hat": lin_stats["alpha_hat"]},
+           "shapes": {}}
+    for w, d in TREE_SHAPES:
+        ts, st = tok_s("tree", w, d)
+        pred = (cost_model.speedup(alpha, d, c)
+                * cost_model.tree_speedup(alpha, topk[w], w, d, c,
+                                          stack_cost=stack)) / s_lin
+        out["shapes"][f"{w}x{d}"] = {
+            "tok_s": ts, "rounds": st["rounds"],
+            "alpha_hat": st["alpha_hat"],
+            "measured_gain": ts / max(lin, 1e-9),
+            "predicted_gain": pred}
+    # the planner's verdict from the same evidence: one plan per measured
+    # width (the evidence pins the width), best predicted speedup wins
+    best = None
+    for w in widths:
+        plan = Planner(DeploymentSpec(
+            batch_size=1, prompt_lens=(ps.shape[1],), max_new=MAX_NEW,
+            alpha=alpha, alpha_topk=topk[w], draft_k=w, stack_cost=stack,
+            t_draft=t_d, t_target=t_t, adaptive_gamma=False)).plan()
+        if best is None or plan.predicted_speedup > best.predicted_speedup:
+            best = plan
+    out["planner"] = {
+        "draft_policy": best.draft_policy,
+        "width": best.draft_k if best.draft_policy == "tree" else 1,
+        "depth": best.gamma.gamma,
+        "predicted_speedup": best.predicted_speedup,
+        "rationale": [r for r in best.rationale if "draft_policy" in r]}
+    return out
+
+
 def main():
     (mt, pt), (md, pd) = trained_pair()
     ps = prompts(1, 12, seed=3)
@@ -209,6 +272,18 @@ def main():
               f"{pol['crossover_topk_lift']:.2f} "
               f"(measured stack_cost={pol['cost']['stack_cost']:.2f})")
 
+    tree = tree_sweep(mt, md, pt, pd, ps, pol["cost"])
+    print(f"# tree sweep (cached, low-acceptance): linear gamma={GAMMA} "
+          f"baseline {tree['linear']['tok_s']:.1f} tok/s")
+    for shape, row in tree["shapes"].items():
+        print(f"#   tree {shape}: {row['tok_s']:.1f} tok/s — measured "
+              f"{row['measured_gain']:.2f}x vs linear, predicted "
+              f"{row['predicted_gain']:.2f}x")
+    pl = tree["planner"]
+    print(f"# planner picks {pl['draft_policy']} width={pl['width']} "
+          f"depth={pl['depth']} (predicted S={pl['predicted_speedup']:.2f}) "
+          f"— {'; '.join(pl['rationale'])}")
+
     t_mono, r = rows[("monolithic", True)]
     t_mod, _ = rows[("modular", True)]
     record = {
@@ -218,11 +293,15 @@ def main():
         "phases_ms": phases,
         "phase_drift": drift.to_dict(),
         "draft_policy": pol,
+        "tree": tree,
     }
     (CACHE / "strategies.json").write_text(json.dumps(record, indent=1))
+    best_tree = max(tree["shapes"].values(),
+                    key=lambda row: row["measured_gain"])
     emit("strategies", t_mono / max(r, 1) * 1e6,
          f"modular_overhead_pct={(t_mod/t_mono-1)*100:.1f},"
-         f"multi_vs_linear_tok_s={pol['multi']['tok_s']/max(pol['linear']['tok_s'],1e-9):.2f}")
+         f"multi_vs_linear_tok_s={pol['multi']['tok_s']/max(pol['linear']['tok_s'],1e-9):.2f},"
+         f"tree_best_gain={best_tree['measured_gain']:.2f}")
 
 
 if __name__ == "__main__":

@@ -35,7 +35,8 @@ def main() -> None:
         ("Fig. 5 (alpha vs quantization)", bench_acceptance.main),
         ("Fig. 6 (cost coefficient vs seq len)", bench_cost_coeff.main),
         ("Fig. 7 (predicted vs measured S)", bench_validation.main),
-        ("SIII-D (monolithic vs modular)", bench_strategies.main),
+        ("SIII-D (monolithic vs modular + tree-draft sweep)",
+         bench_strategies.main),
         ("SIII-B (DSE mapping table)", bench_dse.main),
         ("Speculative serving on the pod (pair C)",
          lambda: bench_spec_serving.main(lower=False)),

@@ -193,7 +193,9 @@ class PerRowBackend:
         self._engines: Dict[int, Any] = {}
         self._mk = lambda g: BatchedSpecEngine(
             target, drafter,
-            BatchedEngineConfig(gamma=g, max_new_tokens=plan.max_new),
+            BatchedEngineConfig(gamma=g, max_new_tokens=plan.max_new,
+                                draft_policy=plan.draft_policy,
+                                draft_k=plan.draft_k),
             placement=placement, tracer=tracer)
 
     def _engine(self, gamma: int):

@@ -21,7 +21,8 @@ PLAN_VERSION = 1
 STRATEGIES = ("monolithic", "modular")
 BATCHING_MODES = ("single", "per_row", "continuous")
 CACHE_KINDS = ("ring", "paged")
-DRAFT_POLICIES = ("linear", "multi")
+DRAFT_POLICIES = ("linear", "multi", "tree")
+MAX_TREE_SPAN = 31          # core.tree: 1 + width*depth <= 31 (int32 masks)
 
 
 # ------------------------------------------------------------------ spec side
@@ -62,7 +63,9 @@ class DeploymentSpec:
     alpha_ema: float = 0.9
     # draft-strategy evidence: alpha_topk = measured P[target argmax in the
     # drafter's top-k] (bench_strategies.py reports it); None = no evidence,
-    # the planner keeps linear drafting. draft_policy pins the decision.
+    # the planner keeps linear drafting. draft_policy pins the decision
+    # ("tree" = cached W-chain tree rounds, draft_k = tree width; "multi" =
+    # no-cache k-candidate recompute rounds).
     draft_policy: Optional[str] = None      # None = planner decides
     draft_k: int = 2
     alpha_topk: Optional[float] = None
@@ -102,6 +105,10 @@ class DeploymentSpec:
         if self.draft_k < 1 or (self.draft_policy == "multi"
                                 and self.draft_k < 2):
             raise ValueError("draft_k must be >= 1 (>= 2 for 'multi')")
+        if self.draft_policy == "tree" and not self.use_cache:
+            raise ValueError("tree drafting is cached-only (branch KV + "
+                             "tree-attention verify); use draft_policy="
+                             "'multi' for no-cache candidate drafting")
 
     # convenience views the planner keys its decisions on
     @property
@@ -207,10 +214,15 @@ class ExecutionPlan:
     gamma: GammaSchedule = GammaSchedule()
     placement: PlacementPlan = PlacementPlan()
     draft_policy: str = "linear"            # DRAFT_POLICIES (rounds seam)
-    draft_k: int = 2                        # candidates/row for "multi"
+    draft_k: int = 2                        # "multi": candidates/row;
+                                            # "tree": branch width (depth is
+                                            # gamma.gamma — one slot/level)
 
     # the economics the decisions were derived from (for audit/re-planning)
     alpha: float = 0.8
+    alpha_topk: Optional[float] = None      # top-k acceptance evidence the
+                                            # tree/multi decision was scored
+                                            # with (None = no evidence)
     cost_coefficient: float = 0.25
     gamma_max: int = 8
     predicted_speedup: float = 1.0
@@ -241,13 +253,27 @@ class ExecutionPlan:
         if self.draft_policy == "multi" and (not self.greedy or self.use_cache
                                              or self.batching != "single"):
             raise ValueError("multi-draft plans need greedy single-stream "
-                             "no-cache execution (cached k-candidate verify "
-                             "requires tree attention — roadmap)")
+                             "no-cache execution (cached candidate drafting "
+                             "is draft_policy='tree')")
         if self.draft_policy == "multi" and self.draft_k < 2:
             raise ValueError("multi-draft plans need draft_k >= 2")
-        if self.draft_policy == "multi" and self.gamma.gamma == 0:
-            raise ValueError("multi-draft plans need a speculative gamma "
-                             "(gamma > 0) — there is no round to multi-draft")
+        if self.draft_policy in ("multi", "tree") and self.gamma.gamma == 0:
+            raise ValueError(f"{self.draft_policy}-draft plans need a "
+                             "speculative gamma (gamma > 0) — there is no "
+                             "round to branch")
+        if self.draft_policy == "tree":
+            if not self.use_cache:
+                raise ValueError("tree-draft plans are cached-only (branch "
+                                 "KV replication/forks + tree-attention "
+                                 "verify need a cache)")
+            if self.batching == "continuous":
+                raise ValueError("tree-draft plans run single or per_row "
+                                 "batching (continuous-serving tree rounds "
+                                 "— roadmap)")
+            if 1 + self.draft_k * self.gamma.gamma > MAX_TREE_SPAN:
+                raise ValueError(
+                    f"tree span 1 + {self.draft_k}*{self.gamma.gamma} "
+                    f"exceeds {MAX_TREE_SPAN} (int32 ancestor masks)")
 
     @property
     def speculative(self) -> bool:

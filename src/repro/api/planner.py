@@ -11,8 +11,11 @@ This is where the paper's compile-time decisions live, in order:
     (gamma*=0 = serve autoregressively);
   ⑤ execution shape   — batching mode, cache layout + block geometry, and
     compilation strategy from the traffic shape;
-  ⑥ draft strategy    — linear vs k-candidate multi-draft (the round core's
-    DraftPolicy seam) from top-k acceptance evidence (``alpha_topk``).
+  ⑥ draft strategy    — linear vs branching drafting (the round core's
+    DraftPolicy seam) from top-k acceptance evidence (``alpha_topk``):
+    cached rounds get the W-chain TREE policy (one tree-attention verify
+    pass over all chains, width/depth picked by cost_model.tree_speedup),
+    no-cache greedy single-stream rounds keep the recompute multi-draft.
 
 The emitted ExecutionPlan is the system's control plane: Sessions execute
 it verbatim, and its GammaSchedule carries the runtime-feedback hook that
@@ -20,6 +23,7 @@ re-runs decision ④ online (api/feedback.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Callable, List, Optional, Sequence
 
@@ -264,18 +268,30 @@ class Planner:
 
     def choose_draft_policy(self, gamma: GammaSchedule, batching: str,
                             c: float = DEFAULT_COST_COEFFICIENT):
-        """Decision ⑥: linear vs multi-candidate drafting (the round core's
-        DraftPolicy seam), from acceptance-rate evidence. Multi-draft
-        (k first-token alternates verified in one stacked target pass) pays
+        """Decision ⑥: linear vs branching drafting (the round core's
+        DraftPolicy seam), from acceptance-rate evidence. Branching pays
         exactly when the drafter's argmax misses often but its top-k covers
-        — measured as alpha_topk — and is only executable on greedy
-        single-stream no-cache rounds (cached k-candidate verification
-        needs tree attention; see core/rounds.py)."""
+        — measured as ``alpha_topk`` at THIS ``draft_k``.
+
+        Two executable branching modes:
+          * tree  — cached single/per_row rounds: W-chain tree drafting,
+            one tree-attention verify over all chains (rounds.TreeDraftPolicy
+            + PagedTreeRound). Width is pinned to draft_k (the width the
+            evidence was measured at); depth is searched over the span-
+            feasible grid with cost_model.tree_speedup.
+          * multi — greedy single-stream no-cache rounds: k first-token
+            alternates re-verified by recompute (rounds.MultiDraftPolicy).
+
+        Returns (policy, draft_k, tree_depth): tree_depth > 0 only for tree
+        plans, where it REPLACES decision ④'s gamma (the tree's depth is
+        the draft length)."""
         s = self.spec
-        executable = (s.greedy and not s.use_cache and batching == "single"
-                      and gamma.gamma > 0)
+        multi_ok = (s.greedy and not s.use_cache and batching == "single"
+                    and gamma.gamma > 0)
+        tree_ok = (s.use_cache and batching in ("single", "per_row")
+                   and gamma.gamma > 0)
         if s.draft_policy is not None:
-            if s.draft_policy == "multi" and not executable:
+            if s.draft_policy == "multi" and not multi_ok:
                 if s.greedy and not s.use_cache and batching == "single":
                     raise ValueError(
                         "draft_policy='multi' pinned but the cost model "
@@ -286,19 +302,58 @@ class Planner:
                     "greedy single-stream no-cache execution (got "
                     f"greedy={s.greedy}, use_cache={s.use_cache}, "
                     f"batching={batching})")
+            if s.draft_policy == "tree" and not tree_ok:
+                if s.use_cache and batching in ("single", "per_row"):
+                    raise ValueError(
+                        "draft_policy='tree' pinned but the cost model "
+                        f"ruled speculation out (gamma*=0 at alpha={s.alpha})"
+                        " — there is no speculative round to tree-draft")
+                raise ValueError(
+                    "draft_policy='tree' pinned but tree drafting runs on "
+                    "cached single or per_row rounds (got "
+                    f"use_cache={s.use_cache}, batching={batching})")
             self._notes.append(f"draft_policy={s.draft_policy} (given)")
-            return s.draft_policy, s.draft_k
-        if not executable:
+            depth = gamma.gamma if s.draft_policy == "tree" else 0
+            return s.draft_policy, s.draft_k, depth
+        if not (multi_ok or tree_ok):
             self._notes.append(
-                "draft_policy=linear (multi-draft needs greedy single-stream "
-                "no-cache speculative rounds)")
-            return "linear", s.draft_k
+                "draft_policy=linear (branching needs speculative rounds: "
+                "tree on cached single/per_row, multi on greedy "
+                "single-stream no-cache)")
+            return "linear", s.draft_k, 0
         if s.alpha_topk is None:
             self._notes.append(
                 "draft_policy=linear (no top-k acceptance evidence; measure "
-                "alpha_topk — bench_strategies.py — to arm multi-draft)")
-            return "linear", s.draft_k
+                "alpha_topk — bench_strategies.py — to arm "
+                f"{'tree' if tree_ok else 'multi'}-draft)")
+            return "linear", s.draft_k, 0
         kw = {} if s.stack_cost is None else {"stack_cost": s.stack_cost}
+        if tree_ok:
+            W = max(s.draft_k, 2)
+            s_lin = cost_model.speedup(s.alpha, gamma.gamma, c)
+            best_d, best_s = 0, s_lin
+            for d in range(1, s.gamma_max + 1):
+                if 1 + W * d > cost_model.MAX_TREE_SPAN:
+                    break
+                st = (cost_model.speedup(s.alpha, d, c)
+                      * cost_model.tree_speedup(s.alpha, s.alpha_topk, W, d,
+                                                c, **kw))
+                if st > best_s + 1e-12:
+                    best_d, best_s = d, st
+            if best_d > 0:
+                rel = best_s / s_lin
+                self._notes.append(
+                    f"draft_policy=tree width={W} depth={best_d} "
+                    f"(alpha_topk={s.alpha_topk} vs alpha={s.alpha}: "
+                    f"predicted S={best_s:.2f} — {rel:.2f}x over the "
+                    f"gamma*={gamma.gamma} linear plan; one tree-attention "
+                    f"verify over span {1 + W * best_d})")
+                return "tree", W, best_d
+            self._notes.append(
+                f"draft_policy=linear (tree drafting declined: best "
+                f"width={W} shape predicts <= linear S={s_lin:.2f} at "
+                f"alpha={s.alpha}, alpha_topk={s.alpha_topk}, c={c:.3f})")
+            return "linear", s.draft_k, 0
         rel = cost_model.multi_draft_speedup(s.alpha, s.alpha_topk,
                                              max(gamma.gamma, 1), c,
                                              s.draft_k, **kw)
@@ -307,12 +362,12 @@ class Planner:
                 f"draft_policy=multi k={s.draft_k} (alpha_topk={s.alpha_topk}"
                 f" vs alpha={s.alpha}: predicted round speedup {rel:.2f}x "
                 f"over linear)")
-            return "multi", s.draft_k
+            return "multi", s.draft_k, 0
         self._notes.append(
             f"draft_policy=linear (multi-draft declined: predicted round "
             f"speedup {rel:.2f}x <= 1 at alpha={s.alpha}, "
             f"alpha_topk={s.alpha_topk}, k={s.draft_k})")
-        return "linear", s.draft_k
+        return "linear", s.draft_k, 0
 
     def choose_strategy(self, batching: str, gamma: GammaSchedule) -> str:
         s = self.spec
@@ -338,21 +393,37 @@ class Planner:
         cache = self.choose_cache(batching, s.gamma_max)
         gamma = self.choose_gamma(c, paged=cache.kind == "paged")
         strategy = self.choose_strategy(batching, gamma)
-        draft_policy, draft_k = self.choose_draft_policy(gamma, batching, c)
+        draft_policy, draft_k, tree_depth = self.choose_draft_policy(
+            gamma, batching, c)
+        if draft_policy == "tree":
+            # the tree's depth IS the draft length: decision ⑥ replaces
+            # decision ④'s gamma, and the shape is frozen offline (ring/
+            # fork slack and the verify span are sized from it), so the
+            # adaptive-gamma hook is disarmed for tree plans
+            if tree_depth != gamma.gamma or gamma.adaptive:
+                self._notes.append(
+                    f"gamma<-{tree_depth} (tree depth overrides gamma*="
+                    f"{gamma.gamma}; adaptive gamma disarmed — the tree "
+                    f"shape is frozen offline)")
+            gamma = dataclasses.replace(gamma, gamma=tree_depth,
+                                        adaptive=False, candidates=())
         predicted = cost_model.speedup(s.alpha, gamma.gamma, c) \
             if gamma.gamma > 0 else 1.0
+        kw = {} if s.stack_cost is None else {"stack_cost": s.stack_cost}
+        # pinned tree/multi without alpha_topk evidence keeps the linear
+        # prediction (no measured gain to fold in)
         if draft_policy == "multi" and s.alpha_topk is not None:
-            # pinned multi without alpha_topk evidence keeps the linear
-            # prediction (no measured gain to fold in)
-            kw = {} if s.stack_cost is None else {"stack_cost": s.stack_cost}
             predicted *= cost_model.multi_draft_speedup(
                 s.alpha, s.alpha_topk, max(gamma.gamma, 1), c, draft_k, **kw)
+        if draft_policy == "tree" and s.alpha_topk is not None:
+            predicted *= cost_model.tree_speedup(
+                s.alpha, s.alpha_topk, draft_k, max(gamma.gamma, 1), c, **kw)
         if placement.predicted_speedup > 1.0:
             predicted = max(predicted, placement.predicted_speedup)
         return ExecutionPlan(
             strategy=strategy, batching=batching, cache=cache, gamma=gamma,
             placement=placement, draft_policy=draft_policy, draft_k=draft_k,
-            alpha=s.alpha, cost_coefficient=c,
+            alpha=s.alpha, alpha_topk=s.alpha_topk, cost_coefficient=c,
             gamma_max=s.gamma_max, predicted_speedup=predicted,
             greedy=s.greedy, temperature=s.temperature, use_cache=s.use_cache,
             max_new=s.max_new_cap, rationale=tuple(self._notes))

@@ -139,3 +139,21 @@ def extend(layer_cache, k_new, v_new, index):
 def rollback(cache, accepted_index):
     """O(1) speculative rollback: drop everything after ``accepted_index``."""
     return {**cache, "index": jnp.asarray(accepted_index, jnp.int32)}
+
+
+def compact_positions(cache, src_pos, dst_pos):
+    """Tree-verify commit-by-compaction, ring flavour: copy the KV stored
+    at absolute positions ``src_pos`` to ``dst_pos`` ([B, P] int32 each)
+    across every layer. Positions resolve to slots mod W; the gather
+    completes before the scatter, so overlapping moves are safe."""
+    W = cache["k"].shape[2]
+    B = src_pos.shape[0]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    s = jnp.mod(src_pos, W)
+    d = jnp.mod(dst_pos, W)
+    k = cache["k"][:, rows, s]                       # [L, B, P, Kv, D]
+    v = cache["v"][:, rows, s]
+    out = dict(cache)
+    out["k"] = cache["k"].at[:, rows, d].set(k)
+    out["v"] = cache["v"].at[:, rows, d].set(v)
+    return out

@@ -15,7 +15,11 @@ block pool (paged_kv.py) — implement one small protocol, so the round core
                  per-row [B]);
   live_bound     the round-level max-live-token bound threaded into paged
                  block-scan reads (``Model.apply(..., max_live=)``); ring
-                 buffers mask on positions and need no bound (None).
+                 buffers mask on positions and need no bound (None);
+  compact        commit-by-compaction for tree-verify rounds: copy KV from
+                 scattered winner-path positions to the contiguous committed
+                 tail (ring: slot moves mod W; paged: block-table gather /
+                 scatter), all layers at once.
 
 ``ops_for(cache)`` sniffs a live cache dict and returns the matching ops —
 the round core's only layout dispatch.
@@ -44,6 +48,8 @@ class CacheOps(Protocol):
 
     def live_bound(self, length, active=None) -> Optional[jnp.ndarray]: ...
 
+    def compact(self, cache, src_pos, dst_pos) -> Any: ...
+
 
 class _RingOps:
     """Per-row ring buffers: [L, B, W, Kv, D], token p in slot p % W."""
@@ -68,6 +74,10 @@ class _RingOps:
     @staticmethod
     def live_bound(length, active=None):
         return None                      # position masking; no read bound
+
+    @staticmethod
+    def compact(cache, src_pos, dst_pos):
+        return kv_cache.compact_positions(cache, src_pos, dst_pos)
 
 
 class _PagedOps:
@@ -101,6 +111,11 @@ class _PagedOps:
         if active is not None:
             return jnp.max(jnp.where(active, length, 1))
         return jnp.max(length)
+
+    @staticmethod
+    def compact(cache, src_pos, dst_pos):
+        return paged_kv.compact_positions(cache, cache["block_table"],
+                                          src_pos, dst_pos)
 
 
 RING: CacheOps = _RingOps()

@@ -34,6 +34,13 @@ docs/DESIGN.md §9. ``seize``/``release_seized`` let the fault-injection
 layer withhold free blocks to force that pressure deterministically, and
 ``audit`` is the leak oracle the chaos suite runs after every test. See
 docs/DESIGN.md §3 for the layout comparison.
+
+Tree drafting adds copy-on-write branch forks: ``fork_row`` hands each
+draft branch a table that shares the row's full prefix blocks (refcounted)
+and owns a private copy of the partial tail block, so branches append
+independently; ``adopt_branch`` commits the winner and drops every other
+reference. Within a row family blocks may be multiply referenced; across
+rows they stay disjoint (``audit`` enforces both). See docs/DESIGN.md §5.
 """
 from __future__ import annotations
 
@@ -104,6 +111,42 @@ def write(layer_cache, k_new, v_new, block_table, index):
     return {"k": k_buf, "v": v_buf}
 
 
+def copy_blocks(cache, pairs):
+    """Device-side half of a copy-on-write fork: copy whole pool blocks
+    ``src -> dst`` across every layer. ``pairs`` is the (src, dst) list
+    returned by ``BlockAllocator.fork_row`` — the partial tail block of a
+    forked row is duplicated so each branch can append without clobbering
+    its siblings; full prefix blocks are shared (refcounted), never copied."""
+    if not pairs:
+        return cache
+    src = jnp.asarray([s for s, _ in pairs], jnp.int32)
+    dst = jnp.asarray([d for _, d in pairs], jnp.int32)
+    out = dict(cache)
+    out["k"] = cache["k"].at[:, dst].set(cache["k"][:, src])
+    out["v"] = cache["v"].at[:, dst].set(cache["v"][:, src])
+    return out
+
+
+def compact_positions(cache, block_table, src_pos, dst_pos):
+    """Tree-verify commit-by-compaction: gather KV at scattered ``src_pos``
+    and rewrite it at ``dst_pos`` (both [B, P] absolute positions), all
+    layers at once. The gather completes before the scatter, so overlapping
+    src/dst are safe; the tree layout guarantees src >= dst per step (winner
+    slots always sit at-or-beyond their committed destination)."""
+    BS = cache["k"].shape[2]
+    MB = block_table.shape[1]
+    B = src_pos.shape[0]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    sblk = block_table[rows, jnp.minimum(src_pos // BS, MB - 1)]
+    dblk = block_table[rows, jnp.minimum(dst_pos // BS, MB - 1)]
+    k = cache["k"][:, sblk, src_pos % BS]                    # [L, B, P, Kv, D]
+    v = cache["v"][:, sblk, src_pos % BS]
+    out = dict(cache)
+    out["k"] = cache["k"].at[:, dblk, dst_pos % BS].set(k)
+    out["v"] = cache["v"].at[:, dblk, dst_pos % BS].set(v)
+    return out
+
+
 def rollback(cache, accepted_index):
     """O(1) speculative rollback: drop everything after ``accepted_index``
     ([B] or scalar). Physical blocks stay resident (the next round rewrites
@@ -142,6 +185,13 @@ class BlockAllocator:
         self.version = 0     # bumped on every table mutation; callers gate
                              # device pushes on it (see PagedSpecServer)
         self._seized: deque = deque()  # blocks withheld by fault injection
+        # copy-on-write state: refcnt[b] counts table references to block b
+        # (main tables + branch tables); a block returns to the free list
+        # only when its last reference drops. Without forks every count is 1
+        # and the allocator behaves exactly as before.
+        self.refcnt = np.zeros((num_blocks,), np.int64)
+        self._branches: Dict[int, np.ndarray] = {}       # row -> [n_br, MB]
+        self._branch_alloc: Dict[int, np.ndarray] = {}   # row -> [n_br]
 
     # ------------------------------------------------------------- queries
     @property
@@ -171,27 +221,146 @@ class BlockAllocator:
         if need - have > len(self.free):
             return False
         for j in range(have, need):
-            self.table[row, j] = self.free.popleft()
+            self.table[row, j] = self._take_fresh()
         self.n_alloc[row] = need
         self.peak_in_use = max(self.peak_in_use, int(self.n_alloc.sum()))
         self.version += 1
         return True
 
+    def _take_fresh(self) -> int:
+        blk = self.free.popleft()
+        self.refcnt[blk] = 1
+        return blk
+
+    def _release_ref(self, blk: int) -> int:
+        """Drop one table reference; returns 1 if the block actually went
+        back to the free list (refcount hit zero), else 0."""
+        self.refcnt[blk] -= 1
+        assert self.refcnt[blk] >= 0, f"refcount underflow on block {blk}"
+        if self.refcnt[blk] == 0:
+            self.free.append(blk)
+            return 1
+        return 0
+
     def free_tail(self, row: int, n_tokens: int) -> int:
         """Release blocks beyond the one holding token ``n_tokens - 1``
-        (speculative-rollback reclamation). Returns #blocks freed."""
+        (speculative-rollback reclamation). Returns #blocks actually
+        returned to the free list (CoW-shared blocks stay resident until
+        their last reference drops)."""
         keep = self.blocks_for(n_tokens)
         have = int(self.n_alloc[row])
+        freed = 0
         for j in range(keep, have):
-            self.free.append(int(self.table[row, j]))
+            freed += self._release_ref(int(self.table[row, j]))
             self.table[row, j] = NULL_BLOCK
         self.n_alloc[row] = min(keep, have)
         if have > keep:
             self.version += 1
-        return max(have - keep, 0)
+        return freed
 
     def free_row(self, row: int) -> int:
-        return self.free_tail(row, 0)
+        freed = self.release_branches(row) if row in self._branches else 0
+        return freed + self.free_tail(row, 0)
+
+    # -------------------------------------------- copy-on-write branch forks
+    def fork_row(self, row: int, n_tokens: int, n_branches: int):
+        """Fork ``row`` (committed length ``n_tokens``) into ``n_branches``
+        copy-on-write branch tables for tree drafting. Full prefix blocks
+        are shared (refcount bumped per branch); the partial tail block, if
+        any, is duplicated per branch so branches can append independently.
+
+        Returns the list of (src, dst) pool-copy pairs the caller must apply
+        with ``copy_blocks`` — or None if the pool cannot supply the tail
+        copies (caller falls back to linear drafting). The parent row's own
+        table is left untouched, so dropping every branch is a no-op
+        rollback."""
+        assert row not in self._branches, f"row {row} already forked"
+        BS = self.block_size
+        full = max(n_tokens, 0) // BS
+        tail = 1 if n_tokens % BS else 0
+        assert full + tail <= int(self.n_alloc[row]), \
+            f"fork of row {row} beyond its allocation"
+        if tail * n_branches > len(self.free):
+            return None
+        MB = self.max_blocks_per_row
+        tables = np.full((n_branches, MB), NULL_BLOCK, np.int32)
+        alloc = np.zeros((n_branches,), np.int64)
+        pairs = []
+        for w in range(n_branches):
+            for j in range(full):
+                blk = int(self.table[row, j])
+                tables[w, j] = blk
+                self.refcnt[blk] += 1
+            if tail:
+                src = int(self.table[row, full])
+                dst = self._take_fresh()
+                tables[w, full] = dst
+                pairs.append((src, dst))
+            alloc[w] = full + tail
+        self._branches[row] = tables
+        self._branch_alloc[row] = alloc
+        self.peak_in_use = max(self.peak_in_use,
+                               int(self.n_alloc.sum()) + tail * n_branches)
+        self.version += 1
+        return pairs
+
+    def ensure_branch(self, row: int, branch: int, n_tokens: int) -> bool:
+        """Grow one branch's allocation to cover ``n_tokens`` positions
+        (fresh blocks only — the shared prefix never regrows)."""
+        tables = self._branches[row]
+        alloc = self._branch_alloc[row]
+        need = self.blocks_for(n_tokens)
+        if need > self.max_blocks_per_row:
+            return False
+        have = int(alloc[branch])
+        if need <= have:
+            return True
+        if need - have > len(self.free):
+            return False
+        for j in range(have, need):
+            tables[branch, j] = self._take_fresh()
+        alloc[branch] = need
+        self.version += 1
+        return True
+
+    def branch_tables(self, row: int) -> np.ndarray:
+        """Host-side [n_branches, MB] table stack for a forked row."""
+        return self._branches[row]
+
+    def adopt_branch(self, row: int, branch: int) -> int:
+        """Commit the winning branch: the row's main table becomes the
+        branch's table; every other branch reference and the old main-table
+        references are dropped. Returns #blocks returned to the free list."""
+        tables = self._branches.pop(row)
+        alloc = self._branch_alloc.pop(row)
+        freed = 0
+        for w in range(tables.shape[0]):
+            if w == branch:
+                continue
+            for j in range(int(alloc[w])):
+                freed += self._release_ref(int(tables[w, j]))
+        for j in range(int(self.n_alloc[row])):
+            freed += self._release_ref(int(self.table[row, j]))
+        self.table[row, :] = NULL_BLOCK
+        n = int(alloc[branch])
+        self.table[row, :n] = tables[branch, :n]
+        self.n_alloc[row] = n
+        self.version += 1
+        return freed
+
+    def release_branches(self, row: int) -> int:
+        """Drop every branch of a forked row (tree-round rollback / abort);
+        the parent row's own table is untouched. Returns #blocks freed."""
+        if row not in self._branches:
+            return 0
+        tables = self._branches.pop(row)
+        alloc = self._branch_alloc.pop(row)
+        freed = 0
+        for w in range(tables.shape[0]):
+            for j in range(int(alloc[w])):
+                freed += self._release_ref(int(tables[w, j]))
+        self.version += 1
+        return freed
 
     # ------------------------------------------- fault injection + auditing
     @property
@@ -220,22 +389,47 @@ class BlockAllocator:
         """Full block census; raises AssertionError on any inconsistency.
 
         Invariants: free + live + seized == num_blocks - 1 (block 0 is the
-        null block), no block appears twice across the free list, seized
-        list, and row tables, and table entries beyond each row's
-        ``n_alloc`` are NULL. The chaos suite calls this after every run —
-        'zero leaked blocks' means this census balances, not merely that
-        ``num_free`` looks right."""
-        live = []
-        for b in range(self.batch):
-            n = int(self.n_alloc[b])
-            live.extend(int(x) for x in self.table[b, :n])
-            tail = self.table[b, n:]
+        null block, 'live' = DISTINCT blocks referenced by any main or
+        branch table), every refcount equals the number of table references
+        to that block, no free/seized block is referenced anywhere, table
+        entries beyond each row's/branch's allocation are NULL, and
+        copy-on-write sharing never crosses row families (a block referenced
+        by row b's tables — main or branch — is referenced by no other
+        row's). The chaos suite calls this after every run — 'zero leaked
+        blocks' means this census balances, not merely that ``num_free``
+        looks right."""
+        refs: Dict[int, int] = {}        # block -> #table references
+        families: Dict[int, int] = {}    # block -> owning row
+        def _count(row, tbl, n, what):
+            for x in tbl[:n]:
+                x = int(x)
+                assert x != NULL_BLOCK, f"null block handed out to {what}"
+                refs[x] = refs.get(x, 0) + 1
+                owner = families.setdefault(x, row)
+                assert owner == row, \
+                    (f"block {x} shared across row families "
+                     f"{owner} and {row}")
+            tail = tbl[n:]
             assert (tail == NULL_BLOCK).all(), \
-                f"row {b}: non-NULL table entries beyond n_alloc={n}"
-        assert NULL_BLOCK not in live, "null block handed out to a row"
-        counts = {"free": len(self.free), "live": len(live),
+                f"{what}: non-NULL table entries beyond allocation {n}"
+        for b in range(self.batch):
+            _count(b, self.table[b], int(self.n_alloc[b]), f"row {b}")
+        for b, tables in self._branches.items():
+            alloc = self._branch_alloc[b]
+            for w in range(tables.shape[0]):
+                _count(b, tables[w], int(alloc[w]), f"row {b} branch {w}")
+        for blk, n in refs.items():
+            assert int(self.refcnt[blk]) == n, \
+                (f"block {blk}: refcount {int(self.refcnt[blk])} != "
+                 f"{n} table references")
+        for blk in list(self.free) + list(self._seized):
+            assert blk not in refs, \
+                f"block {blk} is free/seized but still referenced"
+            assert int(self.refcnt[blk]) == 0, \
+                f"free/seized block {blk} has refcount {int(self.refcnt[blk])}"
+        counts = {"free": len(self.free), "live": len(refs),
                   "seized": len(self._seized)}
-        all_ids = list(self.free) + list(self._seized) + live
+        all_ids = list(self.free) + list(self._seized) + list(refs)
         assert len(all_ids) == len(set(all_ids)), \
             "block appears in more than one of free/seized/live"
         total = counts["free"] + counts["live"] + counts["seized"]

@@ -105,3 +105,141 @@ def verify_greedy(draft_tokens, p_logits):
 def empirical_alpha(n_accepted, gamma) -> jnp.ndarray:
     """Per-round acceptance-rate estimate: accepted / drafted (paper's α metric)."""
     return n_accepted.astype(jnp.float32) / float(gamma)
+
+
+# --------------------------------------------------------------- tree verify
+class TreeVerifyResult(NamedTuple):
+    winner: jnp.ndarray         # [B] int32 — accepted chain (0 when none)
+    n_accepted: jnp.ndarray     # [B] int32 — accepted path tokens (0..depth)
+    out_tokens: jnp.ndarray     # [B, depth+1] int32 — committed (padded)
+    n_emitted: jnp.ndarray      # [B] int32 — n_accepted + 1
+
+
+def _winner_result(res, n_em, B, W):
+    """Pick the best chain from a flattened [B*W] VerifyResult."""
+    winner = jnp.argmax(n_em, axis=1).astype(jnp.int32)  # ties -> chain 0
+    def take(x):
+        x = x.reshape(B, W, *x.shape[1:])
+        idx = winner.reshape(B, *([1] * (x.ndim - 1)))
+        return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+    return TreeVerifyResult(winner, take(res.n_accepted), take(res.out_tokens),
+                            take(res.n_emitted))
+
+
+def verify_tree_greedy(draft_chains, p_logits_tree, chain_slots):
+    """Greedy tree verification: every chain is checked against the ONE
+    stacked target pass, the chain with the most emitted tokens wins
+    (ties break to chain 0, keeping width-1 trees identical to the linear
+    round).
+
+    draft_chains:  [B, W, D] drafted tokens, level-major chains
+    p_logits_tree: [B, span, V] target logits over [last committed, nodes]
+    chain_slots:   [W, D] int32 — slot of chain w's level-l node
+                   (core.tree.ChainTree.chain_slots)
+    """
+    B, W, D = draft_chains.shape
+    slots = jnp.concatenate(
+        [jnp.zeros((W, 1), jnp.int32), jnp.asarray(chain_slots)], axis=1)
+    per_chain = p_logits_tree[:, slots]                  # [B, W, D+1, V]
+    res = verify_greedy(draft_chains.reshape(B * W, D),
+                        per_chain.reshape(B * W, D + 1, -1))
+    return _winner_result(res, res.n_emitted.reshape(B, W), B, W)
+
+
+def verify_tree_stochastic(key, draft_chains, q_logits_chains, p_logits_tree,
+                           chain_slots, temperature=1.0):
+    """Lossless multi-path rejection sampling over a chain tree.
+
+    The W root heads are i.i.d. draws from the drafter's root distribution
+    q, so recursive rejection sampling applies (SpecInfer / SpecTr): test
+    head i against p_i with p_1 = p and p_{i+1} = norm(max(p_i - q, 0));
+    the first accepted head selects its chain, which then continues with
+    the ordinary linear accept/reject down the levels. If every head is
+    rejected the root is resampled from the final residual p_{W+1}. This
+    preserves the target distribution EXACTLY for any W, and for W == 1 it
+    reduces bit-for-bit to ``verify_stochastic`` (same key splits, same
+    uniform draws, same residual epsilons — asserted in tests).
+
+    q_logits_chains: [B, W, D, V] drafter logits along each chain (level 1
+                     entries are the shared root distribution).
+    Returns TreeVerifyResult; ``winner`` is meaningful only when
+    ``n_accepted > 0`` (nothing beyond the resampled root commits anyway).
+    """
+    B, W, D = draft_chains.shape
+    t = jnp.maximum(temperature, 1e-6)
+    k_acc, k_res, k_bonus = jax.random.split(key, 3)
+    u = jax.random.uniform(k_acc, (B, W + D - 1), minval=1e-20)
+
+    # ---- root: recursive rejection over the W i.i.d. heads
+    logq_root = jax.nn.log_softmax(q_logits_chains[:, 0, 0] / t, axis=-1)
+    q_root = jnp.exp(logq_root)                          # [B, V]
+    logp_root = jax.nn.log_softmax(p_logits_tree[:, 0] / t, axis=-1)
+    p_cur = jnp.exp(logp_root)                           # p_i, normalized
+    resid_unnorm = p_cur                                 # max(p_i - q, 0) | fb
+    root_acc = jnp.zeros((B,), bool)
+    root_chain = jnp.zeros((B,), jnp.int32)
+    for i in range(W):
+        x = draft_chains[:, i, 0][:, None]               # [B, 1]
+        lq = jnp.take_along_axis(logq_root, x, axis=-1)[:, 0]
+        if i == 0:
+            lp = jnp.take_along_axis(logp_root, x, axis=-1)[:, 0]
+        else:
+            px = jnp.take_along_axis(p_cur, x, axis=-1)[:, 0]
+            lp = jnp.where(px > 0, jnp.log(jnp.maximum(px, 1e-38)), -jnp.inf)
+        acc_i = (jnp.log(u[:, i]) < (lp - lq)) & ~root_acc
+        root_chain = jnp.where(acc_i, i, root_chain)
+        root_acc = root_acc | acc_i
+        residual = jnp.maximum(p_cur - q_root, 0.0)
+        s = residual.sum(-1, keepdims=True)
+        resid_unnorm = jnp.where(s > 1e-9, residual, p_cur)
+        p_cur = jnp.where(s > 1e-9, residual / jnp.maximum(s, 1e-30), p_cur)
+
+    # ---- winning chain: gather its drafts / drafter logits / target logits
+    c = root_chain[:, None]
+    drafts_c = jnp.take_along_axis(draft_chains, c[..., None], axis=1)[:, 0]
+    q_c = jnp.take_along_axis(q_logits_chains, c[..., None, None],
+                              axis=1)[:, 0]              # [B, D, V]
+    slots_c = jnp.take_along_axis(
+        jnp.broadcast_to(jnp.asarray(chain_slots)[None], (B, W, D)),
+        c[..., None], axis=1)[:, 0]                      # [B, D]
+    slots_full = jnp.concatenate(
+        [jnp.zeros((B, 1), jnp.int32), slots_c], axis=1) # [B, D+1]
+    p_chain = jnp.take_along_axis(p_logits_tree, slots_full[..., None],
+                                  axis=1)                # [B, D+1, V]
+
+    logq_c = jax.nn.log_softmax(q_c / t, axis=-1)
+    logp_c = jax.nn.log_softmax(p_chain[:, :D] / t, axis=-1)
+    tok = drafts_c[..., None]
+    lq_lv = jnp.take_along_axis(logq_c, tok, axis=-1)[..., 0]    # [B, D]
+    lp_lv = jnp.take_along_axis(logp_c, tok, axis=-1)[..., 0]
+    # levels 2..D draw from u columns W..W+D-2 (columns 1..D-1 at W == 1,
+    # matching verify_stochastic's layout exactly)
+    acc_lv = jnp.log(u[:, W:]) < (lp_lv[:, 1:] - lq_lv[:, 1:])   # [B, D-1]
+    acc_all = jnp.concatenate([root_acc[:, None], acc_lv], axis=1)  # [B, D]
+    acc_prefix = jnp.cumprod(acc_all.astype(jnp.int32), axis=1)
+    n_accepted = acc_prefix.sum(axis=1)                  # [B] 0..D
+
+    # ---- one residual resample serves both rejection sites
+    first_rej = jnp.minimum(n_accepted, D - 1)
+    p_rej = jnp.take_along_axis(jnp.exp(logp_c), first_rej[:, None, None],
+                                axis=1)[:, 0]
+    q_rej = jnp.take_along_axis(jnp.exp(logq_c), first_rej[:, None, None],
+                                axis=1)[:, 0]
+    chain_resid = jnp.maximum(p_rej - q_rej, 0.0)
+    chain_resid = jnp.where(chain_resid.sum(-1, keepdims=True) > 1e-9,
+                            chain_resid, p_rej)
+    resid_sel = jnp.where((n_accepted == 0)[:, None], resid_unnorm,
+                          chain_resid)
+    resampled = _categorical(k_res, jnp.log(resid_sel + 1e-30))  # [B]
+
+    logp_bonus = jax.nn.log_softmax(p_chain[:, D] / t, axis=-1)
+    bonus = _categorical(k_bonus, logp_bonus)
+    extra = jnp.where(n_accepted == D, bonus, resampled)
+
+    pos = jnp.arange(D + 1)[None, :]
+    drafts_pad = jnp.pad(drafts_c, ((0, 0), (0, 1)))
+    out = jnp.where(pos < n_accepted[:, None], drafts_pad, 0)
+    out = jnp.where(pos == n_accepted[:, None], extra[:, None], out)
+    return TreeVerifyResult(root_chain, n_accepted.astype(jnp.int32),
+                            out.astype(jnp.int32),
+                            (n_accepted + 1).astype(jnp.int32))

@@ -44,8 +44,9 @@ class BatchedEngineConfig:
     max_new_tokens: int = 32
     greedy: bool = True
     temperature: float = 1.0
-    draft_policy: str = "linear"        # DraftPolicy seam (cached rounds are
-    draft_k: int = 2                    # linear today; multi = roadmap/tree)
+    draft_policy: str = "linear"        # DraftPolicy seam: "linear" or
+                                        # "tree" (cached W-chain tree rounds;
+    draft_k: int = 2                    # draft_k = tree width)
 
 
 class BatchedSpecEngine:
@@ -101,7 +102,8 @@ class BatchedSpecEngine:
         buf = jnp.zeros((B, max_len), jnp.int32)
         buf = jax.lax.dynamic_update_slice(buf, prompt.astype(jnp.int32), (0, 0))
 
-        slack = e.gamma + 2
+        slack = (1 + self._round_spec.policy.width * e.gamma + 1
+                 if e.draft_policy == "tree" else e.gamma + 2)
         tcache = RING.init(self.target, B, max_len=max_len, spec_slack=slack)
         dcache = RING.init(self.drafter, B, max_len=max_len, spec_slack=slack)
         _, tcache, _ = self.target.apply(params_t, prompt[:, :-1], tcache)

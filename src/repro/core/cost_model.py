@@ -85,6 +85,79 @@ def multi_draft_speedup(alpha: float, alpha_topk: float, gamma: int,
     return gain * cost_lin / cost_multi
 
 
+MAX_TREE_SPAN = 31   # core.tree: 1 + width*depth <= 31 (int32 ancestor masks)
+
+
+def tree_gain(alpha: float, alpha_topk: float, width: int,
+              depth: int) -> float:
+    """Expected emitted-tokens multiplier of a (width × depth) chain tree
+    over linear drafting at gamma = depth (core.rounds.TreeDraftPolicy).
+
+    The tree branches once at the root: width head alternates, each continued
+    as a linear chain. A round emits the bonus/correction token always, plus
+    — iff SOME head is accepted, probability ``head_alpha`` — that chain's
+    linear continuation:
+
+        E_tree = 1 + head_alpha · E(alpha, depth − 1)
+
+    ``head_alpha`` is alpha_topk (P[target argmax ∈ drafter top-width],
+    measured at THIS width) for width ≥ 2 and plain alpha for width = 1,
+    where the identity E(α, d) = 1 + α·E(α, d−1) makes the tree reduce
+    exactly to linear. Gain = E_tree / E(alpha, depth)."""
+    head = float(alpha_topk) if width >= 2 else float(alpha)
+    head = max(head, float(alpha))
+    e_tree = 1.0 + head * expected_accepted(alpha, depth - 1)
+    return e_tree / expected_accepted(alpha, depth)
+
+
+def tree_speedup(alpha: float, alpha_topk: float, width: int, depth: int,
+                 c: float, stack_cost: float = 0.35) -> float:
+    """Round-speedup of TreeDraftPolicy(width) over LINEAR drafting at
+    gamma = depth and equal c.
+
+    Cost side mirrors multi_draft_speedup, but for cached rounds: the root
+    draft step runs unstacked (chains branch on its top-width), the
+    remaining depth−1 draft steps run the width branches stacked on the
+    batch axis at ``m = 1 + (width−1)·stack_cost`` each, and the single
+    tree-attention verify stacks the span's queries at the same m:
+
+        cost_tree = c·(1 + (depth−1)·m) + m     vs     cost_lin = depth·c + 1
+
+    Speedup = emitted gain / relative round cost; width = 1 gives exactly
+    1.0 (the tree degenerates to the linear round it replaces)."""
+    gain = tree_gain(alpha, alpha_topk, width, depth)
+    m = 1.0 + (width - 1) * float(stack_cost)
+    cost_lin = depth * c + 1.0
+    cost_tree = c * (1.0 + (depth - 1) * m) + m
+    return gain * cost_lin / cost_tree
+
+
+def optimal_tree(alpha: float, alpha_topk: Optional[float], c: float,
+                 gamma_max: int = GAMMA_MAX_DEFAULT, width_max: int = 4,
+                 stack_cost: float = 0.35,
+                 max_span: int = MAX_TREE_SPAN) -> Tuple[Tuple[int, int], float]:
+    """Best (width, depth) over the span-feasible grid, scored as ABSOLUTE
+    speedup over autoregressive decoding:
+
+        S_tree(W, D) = S(alpha, D, c) · tree_speedup(alpha, alpha_topk, W, D)
+
+    (the second factor is relative to linear at the same depth, so the
+    product composes). width = 1 rows ARE the linear candidates, so the
+    returned optimum never loses to plain optimal_gamma; a (1, D) winner
+    means 'stay linear'. Returns ((width, depth), S)."""
+    topk = alpha if alpha_topk is None else float(alpha_topk)
+    best = ((1, 0), 1.0)
+    for w in range(1, width_max + 1):
+        for d in range(1, gamma_max + 1):
+            if 1 + w * d > max_span:
+                continue
+            s = speedup(alpha, d, c) * tree_speedup(alpha, topk, w, d, c,
+                                                    stack_cost)
+            if s > best[1] + 1e-12:
+                best = ((w, d), s)
+    return best
+
+
 # ---------------------------------------------------------------------------
 # Overlapped-round time (placement realization, api/placement.py)
 # ---------------------------------------------------------------------------

@@ -52,8 +52,10 @@ class EngineConfig:
     temperature: float = 1.0
     use_cache: bool = False             # False = paper-faithful mode
     strategy: str = "monolithic"        # or "modular"
-    draft_policy: str = "linear"        # or "multi" (greedy no-cache only)
-    draft_k: int = 2                    # candidates per row for "multi"
+    draft_policy: str = "linear"        # "multi" (greedy no-cache only) or
+                                        # "tree" (cached, greedy or sampled)
+    draft_k: int = 2                    # candidates per row for "multi";
+                                        # tree width for "tree"
 
 
 # ==================================================================== engine
@@ -92,7 +94,8 @@ class SpecEngine:
             if not ecfg.use_cache:
                 self.placement_note = "no-cache rounds are single-mesh"
             elif ecfg.draft_policy != "linear":
-                self.placement_note = "multi-draft rounds are single-mesh"
+                self.placement_note = (f"{ecfg.draft_policy}-draft rounds "
+                                       "are single-mesh")
             elif self.d_stateful:
                 self.placement_note = "stateful drafters are single-mesh"
             else:
@@ -141,7 +144,11 @@ class SpecEngine:
                       extras_t=extras_t, extras_d=extras_d)
         if not e.use_cache:
             return st
-        slack = e.gamma + 2
+        # ring slack past the committed length: linear rounds write at most
+        # gamma+1 unverified slots; a tree round's stacked verify writes the
+        # whole span (1 + width*gamma)
+        slack = (1 + self._policy.width * e.gamma + 1
+                 if e.draft_policy == "tree" else e.gamma + 2)
         tcache = RING.init(self.target, B, max_len=max_len, spec_slack=slack)
         dcache = RING.init(self.drafter, B, max_len=max_len, spec_slack=slack)
         _, tcache, aux_t = self.target.apply(params_t, prompt[:, :-1], tcache,

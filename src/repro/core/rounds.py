@@ -15,8 +15,12 @@ paged ``PagedSpecServer`` — drives THIS module's ``spec_round()`` /
     drafts k candidate chains per row (top-k first-token alternates, greedy
     continuations), verifies all k in ONE stacked target pass, and commits
     the best accepted prefix — greedy mode, recompute (no-cache)
-    verification (cached k-candidate verification needs tree attention —
-    roadmap);
+    verification; ``TreeDraftPolicy`` is its cached successor: a W-wide
+    chain tree drafted against branch caches (ring rows replicated, paged
+    tables CoW-forked), verified in ONE stacked cached target pass through
+    the tree-attention kernel (``Model.apply(tree=...)``), winner path
+    committed by cache compaction — greedy or sampled (multi-path rejection
+    sampling keeps sampled mode lossless);
   * **commit semantics**: ``"per_row"`` (each row commits its own accepted
     prefix — serving) or ``"batch_min"`` (batch-synchronized commit of the
     batch-minimum emitted length — exact standard speculative sampling at
@@ -43,9 +47,11 @@ from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.cache import ops as cache_ops
 from repro.core import acceptance
+from repro.core.tree import chain_tree
 from repro.obs.trace import NULL_TRACER
 
 COMMIT_MODES = ("batch_min", "per_row")
@@ -154,6 +160,53 @@ def _take_candidate(x, win):
     B, K = x.shape[:2]
     idx = win.reshape((B,) + (1,) * (x.ndim - 1))
     return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+
+def _replicate_rows(cache, W):
+    """Row-replicate a ring KV cache for tree drafting: [B] rows -> [B*W]
+    branch rows (branch w of row b is row b*W + w). KV-family caches only —
+    the drafter's branches are LINEAR chains, so each replica just runs
+    plain causal decode steps."""
+    if W == 1:
+        return cache
+    if not (isinstance(cache, dict) and "k" in cache and "v" in cache):
+        raise NotImplementedError(
+            "tree drafting needs a KV-family drafter cache")
+    out = dict(cache)
+    out["k"] = jnp.repeat(cache["k"], W, axis=1)
+    out["v"] = jnp.repeat(cache["v"], W, axis=1)
+    idx = jnp.asarray(cache["index"])
+    if idx.ndim:
+        out["index"] = jnp.repeat(idx, W, axis=0)
+    return out
+
+
+def _take_branch(cache, winner, W):
+    """Inverse of ``_replicate_rows``: keep each row's winning branch from a
+    [B*W]-row cache -> [B] rows. The winner's replica holds exactly the
+    committed chain's KV at contiguous positions, so it simply BECOMES the
+    next round's drafter cache (no compaction needed on the drafter side)."""
+    if W == 1:
+        return cache
+    B = winner.shape[0]
+    out = dict(cache)
+    for kk in ("k", "v"):
+        leaf = cache[kk]
+        resh = leaf.reshape(leaf.shape[0], B, W, *leaf.shape[2:])
+        idx = winner.reshape(1, B, 1, *([1] * (leaf.ndim - 2)))
+        out[kk] = jnp.take_along_axis(resh, idx, axis=2)[:, :, 0]
+    idx0 = jnp.asarray(cache["index"])
+    if idx0.ndim:
+        out["index"] = jnp.take_along_axis(idx0.reshape(B, W),
+                                           winner[:, None], axis=1)[:, 0]
+    return out
+
+
+def _is_paged_branched(dcache, B):
+    """A paged drafter cache whose table has B*W rows was pre-branched by
+    the host (PagedTreeRound CoW forks); shapes are static under jit."""
+    return (isinstance(dcache, dict) and "block_table" in dcache
+            and dcache["block_table"].shape[0] != B)
 
 
 # ================================================================= policies
@@ -285,6 +338,101 @@ class MultiDraftPolicy:
                         t_last=None, key=state.key)
 
 
+@dataclass(frozen=True)
+class TreeDraftPolicy:
+    """Tree drafting: ``width`` chains branching once at the root, drafted
+    against branch caches and verified in ONE stacked CACHED target pass
+    through the tree-attention kernel (``Model.apply(tree=...)``) — the
+    cached successor ``MultiDraftPolicy``'s no-cache gate pointed at.
+
+    Draft: one root step on the unbranched drafter cache yields the root
+    distribution q0; the W chain heads are its top-k (greedy) or W i.i.d.
+    samples (sampled — the i.i.d.-ness is what makes multi-path rejection
+    sampling lossless, see ``acceptance.verify_tree_stochastic``). Each head
+    then continues as a LINEAR chain against its own branch cache — ring
+    rows replicated [B] -> [B*W], paged tables CoW-forked host-side
+    (``PagedTreeRound``) — so the drafter itself never needs tree attention.
+
+    Verify: the span [t_last, level-major nodes] goes through the target
+    once with the chain tree's (depths, bits) mask; the winner path's KV is
+    committed by cache compaction (``CacheOps.compact``), the winner's
+    drafter branch becomes the next round's drafter cache.
+
+    width == 1 is EXACTLY the linear round (same key-split sequence, same
+    draws, same acceptance) — asserted in tests; ``k`` stays 1 so the
+    multi-draft (no-cache, greedy-only) gates never fire for trees.
+    """
+    name: str = "tree"
+    width: int = 2
+    k: int = 1
+
+    def draft_cached(self, drafter, params_d, state: RoundState, spec,
+                     live0) -> DraftOut:
+        W, D = self.width, spec.gamma
+        ex_d = state.extras_d or {}
+        t_last = _gather_last(state.tokens, state.length)
+        B = t_last.shape[0]
+        key = state.key
+        branched = _is_paged_branched(state.dcache, B)
+        ex_w = (ex_d if W == 1 else
+                {kk: jnp.repeat(v, W, axis=0) for kk, v in ex_d.items()})
+
+        # root step: consume t_last, read q0. Pre-branched paged caches run
+        # it per branch row (each branch's private tail block gets t_last's
+        # KV); branch logits are identical, so row 0 of each group is q0.
+        if branched:
+            logits, dcache, _ = drafter.apply(
+                params_d, jnp.repeat(t_last, W)[:, None], state.dcache,
+                logits_slice="last", max_live=live0, **ex_w)
+            q0 = logits[:, -1].reshape(B, W, -1)[:, 0]
+        else:
+            logits, cache0, _ = drafter.apply(
+                params_d, t_last[:, None], state.dcache,
+                logits_slice="last", max_live=live0, **ex_d)
+            q0 = logits[:, -1]                                 # [B, V]
+            dcache = _replicate_rows(cache0, W)
+        if spec.greedy:
+            _, heads = jax.lax.top_k(q0, W)                    # [B, W]
+        else:
+            # W i.i.d. root draws: ONE categorical over the row-repeated q0
+            # (at W == 1 this is bit-for-bit the linear round's draw)
+            key, ks = jax.random.split(key)
+            flat = jnp.repeat(q0 / spec.temperature, W, axis=0)
+            heads = jax.random.categorical(ks, flat, axis=-1).reshape(B, W)
+        heads = heads.astype(jnp.int32)
+
+        def dstep(carry, i):
+            tok, cache, k = carry                              # tok [B*W]
+            ml = None if live0 is None else live0 + 1 + i
+            lg, cache, _ = drafter.apply(params_d, tok[:, None], cache,
+                                         logits_slice="last", max_live=ml,
+                                         **ex_w)
+            q = lg[:, -1]
+            if spec.greedy:
+                nxt = jnp.argmax(q, axis=-1)
+            else:
+                k, ks = jax.random.split(k)
+                nxt = jax.random.categorical(ks, q / spec.temperature,
+                                             axis=-1)
+            return (nxt.astype(jnp.int32), cache, k), (nxt.astype(jnp.int32),
+                                                       q)
+        (_, dcache, key), (toks, q_lv) = jax.lax.scan(
+            dstep, (heads.reshape(B * W), dcache, key), jnp.arange(D - 1))
+        toks = jnp.moveaxis(toks, 0, 1).reshape(B, W, D - 1)
+        q_lv = jnp.moveaxis(q_lv, 0, 1).reshape(B, W, D - 1, -1)
+        drafts = jnp.concatenate([heads[..., None], toks], axis=2)
+        q_logits = jnp.concatenate(
+            [jnp.broadcast_to(q0[:, None, None], (B, W, 1, q0.shape[-1])),
+             q_lv], axis=2)                                    # [B, W, D, V]
+        return DraftOut(drafts=drafts, q_logits=q_logits, cand_tokens=None,
+                        t_last=t_last, dcache=dcache, snaps=None, key=key)
+
+    def draft_nocache(self, drafter, params_d, state, spec):
+        raise NotImplementedError(
+            "tree drafting is cached-only (branch caches + tree-attention "
+            "verify); use MultiDraftPolicy for no-cache k-candidate rounds")
+
+
 def make_policy(name: str, k: int = 2):
     if name == "linear":
         return LinearDraftPolicy()
@@ -292,8 +440,12 @@ def make_policy(name: str, k: int = 2):
         if k < 2:
             raise ValueError(f"multi-draft needs k >= 2 candidates, got {k}")
         return MultiDraftPolicy(k=k)
+    if name == "tree":
+        if k < 1:
+            raise ValueError(f"tree draft needs width >= 1, got {k}")
+        return TreeDraftPolicy(width=k)
     raise ValueError(f"unknown draft policy {name!r} "
-                     f"(expected 'linear' or 'multi')")
+                     f"(expected 'linear', 'multi' or 'tree')")
 
 
 # ===================================================================== spec
@@ -324,6 +476,15 @@ class RoundSpec:
                                 or self.commit != "batch_min"):
             raise ValueError("stateful drafters need the cached "
                              "batch-synchronized path (docs/DESIGN.md §5)")
+        if getattr(self.policy, "name", "") == "tree":
+            if not self.use_cache:
+                raise ValueError("tree drafting is cached-only (branch "
+                                 "caches + tree-attention verify)")
+            if self.d_stateful:
+                raise ValueError("tree drafting needs a KV-family drafter "
+                                 "(branch caches replicate/fork KV rows)")
+            # validates span = 1 + width*gamma <= MAX_SPAN up front
+            chain_tree(self.policy.width, self.gamma)
 
     @property
     def drafted_per_round(self) -> int:
@@ -373,6 +534,31 @@ def verify_phase(target, params_t, state: RoundState, d: DraftOut,
     K = d.drafts.shape[1]
     ex_t = state.extras_t or {}
     key = d.key
+
+    if spec.use_cache and getattr(spec.policy, "name", "") == "tree":
+        # ONE stacked cached pass over the whole tree: the span is
+        # [t_last, level-major nodes]; the chain tree's (depths, bits)
+        # select the tree-attention path in the target's attention layers
+        B, W = d.drafts.shape[:2]
+        tree = chain_tree(W, G)
+        level_major = jnp.swapaxes(d.drafts, 1, 2).reshape(B, W * G)
+        verify_in = jnp.concatenate([d.t_last[:, None], level_major], axis=1)
+        live0 = _live0(state, spec)
+        ml = None if live0 is None else live0 + tree.span - 1
+        p_logits, tcache, _ = target.apply(params_t, verify_in, state.tcache,
+                                           want_trail=True, max_live=ml,
+                                           tree=(tree.depths, tree.bits),
+                                           **ex_t)
+        cs = jnp.asarray(tree.chain_slots)
+        if spec.greedy:
+            res = acceptance.verify_tree_greedy(d.drafts, p_logits, cs)
+        else:
+            key, kv = jax.random.split(key)
+            res = acceptance.verify_tree_stochastic(kv, d.drafts, d.q_logits,
+                                                    p_logits, cs,
+                                                    spec.temperature)
+        return VerifyOut(res=res, base_tokens=state.tokens, tcache=tcache,
+                         key=key)
 
     if spec.use_cache:                     # incremental: [t_last, d_1..d_G]
         drafts = d.drafts[:, 0]
@@ -436,6 +622,67 @@ def _scatter_commit(tokens, length, out_tokens, n_eff, gamma):
     return tokens.at[rows, cols].set(vals.astype(tokens.dtype))
 
 
+def _tree_commit(target, state: RoundState, d: DraftOut, v: VerifyOut,
+                 spec: RoundSpec) -> RoundState:
+    """Tree-round commit: compact the winner path's scattered KV into the
+    committed tail, then the ordinary rollback. The winner chain's level-l
+    token sits at cache position (length-1) + chain_slots[winner][l-1]; its
+    committed home is length + l - 1 — src >= dst always, and the compact
+    primitives gather before they scatter, so the move is overlap-safe.
+    Compacting all G levels is fine: rollback masks everything past the
+    accepted length. The drafter side needs NO compaction — the winner's
+    branch cache already holds the committed chain contiguously, so it
+    simply becomes the next round's drafter cache (ring: ``_take_branch``;
+    paged: the host adopts the winning CoW branch, see ``PagedTreeRound``).
+    """
+    G = spec.gamma
+    res = v.res
+    B, W = d.drafts.shape[:2]
+    ops_t = cache_ops.ops_for(v.tcache)
+    cs = jnp.asarray(chain_tree(W, G).chain_slots)            # [W, G]
+    lvec = jnp.broadcast_to(jnp.asarray(state.length), (B,))
+    src = (lvec - 1)[:, None] + cs[res.winner] + state.t_off
+    dst = lvec[:, None] + jnp.arange(G, dtype=jnp.int32) + state.t_off
+    tcache = ops_t.compact(v.tcache, src, dst)
+
+    if spec.commit == "per_row":
+        active = (state.active if state.active is not None
+                  else jnp.ones((B,), bool))
+        n_eff = jnp.where(active, res.n_emitted, 0)
+        tokens = _scatter_commit(v.base_tokens, state.length,
+                                 res.out_tokens, n_eff, G)
+        new_len = state.length + n_eff
+        tcache = ops_t.rollback(tcache, new_len - 1)
+        dcache = d.dcache
+        if dcache is not None and not _is_paged_branched(dcache, B):
+            dcache = _take_branch(dcache, res.winner, W)
+            dcache = cache_ops.ops_for(dcache).rollback(dcache, new_len - 1)
+        return state._replace(
+            tokens=tokens, length=new_len, key=v.key,
+            dcache=dcache, tcache=tcache,
+            n_rounds=state.n_rounds + 1,
+            n_accepted=state.n_accepted + jnp.where(active, res.n_accepted, 0),
+            n_drafted=state.n_drafted + spec.drafted_per_round)
+
+    n_commit = jnp.min(res.n_emitted)
+    n_eff = jnp.broadcast_to(n_commit, (B,))
+    tokens = _scatter_commit(v.base_tokens, state.length, res.out_tokens,
+                             n_eff, G)
+    new_len = state.length + n_commit
+    st = state._replace(tokens=tokens, length=new_len, key=v.key,
+                        n_rounds=state.n_rounds + 1,
+                        n_accepted=state.n_accepted + (n_commit - 1),
+                        n_drafted=state.n_drafted + spec.drafted_per_round)
+    tcache = target.rollback(tcache, new_len - 1 + state.t_off,
+                             1 + W * G)
+    dcache = d.dcache
+    if dcache is not None and not _is_paged_branched(dcache, B):
+        dcache = _take_branch(dcache, res.winner, W)
+        dcache = cache_ops.ops_for(dcache).rollback(
+            dcache, new_len - 1 + state.d_off)
+    return st._replace(dcache=dcache, tcache=tcache)
+
+
 def commit_phase(target, state: RoundState, d: DraftOut, v: VerifyOut,
                  spec: RoundSpec) -> RoundState:
     """Phase 3: commit the accepted prefix + roll both caches back.
@@ -445,6 +692,9 @@ def commit_phase(target, state: RoundState, d: DraftOut, v: VerifyOut,
     separately on the drafter mesh (``PlacedRound``); the committed state
     then carries ``dcache=None`` until the runner reattaches it.
     """
+    if getattr(spec.policy, "name", "") == "tree":
+        return _tree_commit(target, state, d, v, spec)
+
     G = spec.gamma
     res = v.res
     B = state.tokens.shape[0]
@@ -588,7 +838,7 @@ class PlacedRound:
 
     def __init__(self, target, drafter, spec: RoundSpec, placement,
                  tracer=None):
-        if spec.policy.k > 1:
+        if spec.policy.k > 1 or getattr(spec.policy, "name", "") != "linear":
             raise ValueError("placed rounds are linear-draft only")
         if not spec.use_cache:
             raise ValueError("placed rounds need cached execution "
@@ -674,6 +924,95 @@ class PlacedRound:
             new_len_d = pm.to_drafter(new.length)
             dcache = self._drb_jit(dcache, new_len_d, d_off_d)
         return new._replace(dcache=dcache)
+
+
+class PagedTreeRound:
+    """ONE paged tree round driven from the host: CoW-fork each row's
+    drafter block table (one branch per chain, shared prefix blocks
+    refcounted, partial tail copied — ``BlockAllocator.fork_row``), run the
+    SAME jitted three phases ``spec_round`` composes against the
+    pre-branched [B*W]-row drafter cache, then adopt each row's winning
+    branch and free the losers (``adopt_branch``). The target cache needs no
+    forks — the stacked verify writes every tree slot to its own position
+    past the committed tail and ``_tree_commit`` compacts the winner path in
+    place.
+
+    ``TreeDraftPolicy`` detects the pre-branched table purely by shape
+    (``_is_paged_branched``), so the device round stays one jit-compatible
+    program; this class owns only the host/allocator choreography around
+    it. Scope: a fully-live batch (tests/benchmarks) — serving admission,
+    preemption and capacity degradation stay with the scheduler.
+    """
+
+    def __init__(self, target, drafter, spec: RoundSpec, alloc_t, alloc_d):
+        if getattr(spec.policy, "name", "") != "tree":
+            raise ValueError("PagedTreeRound needs a TreeDraftPolicy spec")
+        if spec.commit != "per_row":
+            raise ValueError("paged rounds are per-row (serving) rounds")
+        self.spec = spec
+        self.W = spec.policy.width
+        self.alloc_t, self.alloc_d = alloc_t, alloc_d
+        d, v, c = phase_fns(target, drafter, spec)
+        self._draft_jit = jax.jit(d)
+        self._verify_jit = jax.jit(v)
+        self._commit_jit = jax.jit(c)
+
+    def _fork(self, state: RoundState) -> RoundState:
+        from repro.cache import paged_kv
+        W, D = self.W, self.spec.gamma
+        span = 1 + W * D
+        B = state.tokens.shape[0]
+        lengths = np.asarray(jax.device_get(state.length))
+        pairs = []
+        for b in range(B):
+            L = int(lengths[b])
+            if not self.alloc_t.ensure(b, L - 1 + span):
+                raise RuntimeError(f"target pool exhausted growing row {b} "
+                                   f"to {L - 1 + span} tokens")
+            # the adopted branch was only ever grown to last round's draft
+            # horizon — a fully-accepted round can commit past it, so the
+            # row must be re-ensured to its new tail before forking
+            if not self.alloc_d.ensure(b, L - 1):
+                raise RuntimeError(f"drafter pool exhausted growing row {b} "
+                                   f"to {L - 1} tokens")
+            p = self.alloc_d.fork_row(b, L - 1, W)
+            if p is None:
+                raise RuntimeError(f"drafter pool exhausted forking row {b} "
+                                   f"into {W} branches")
+            pairs += p
+            for w in range(W):
+                if not self.alloc_d.ensure_branch(b, w, L - 1 + D):
+                    raise RuntimeError(f"drafter pool exhausted growing "
+                                       f"branch {w} of row {b}")
+        dcache = paged_kv.copy_blocks(state.dcache, pairs)
+        tbl = np.stack([self.alloc_d.branch_tables(b) for b in range(B)])
+        dcache = {**dcache,
+                  "block_table": jnp.asarray(tbl.reshape(B * W, -1)),
+                  "index": jnp.repeat(jnp.asarray(state.dcache["index"],
+                                                  jnp.int32), W)}
+        tcache = {**state.tcache,
+                  "block_table": self.alloc_t.device_table()}
+        return state._replace(dcache=dcache, tcache=tcache)
+
+    def __call__(self, params_t, params_d, state: RoundState) -> RoundState:
+        B = state.tokens.shape[0]
+        state = self._fork(state)
+        d = self._draft_jit(params_d, state)
+        v = self._verify_jit(params_t, state, d)
+        new = self._commit_jit(state, d, v)
+        winner, new_len = map(np.asarray, jax.device_get(
+            (v.res.winner, new.length)))
+        for b in range(B):
+            self.alloc_d.adopt_branch(b, int(winner[b]))
+            keep = max(int(new_len[b]) - 1, 1)
+            self.alloc_d.free_tail(b, keep)
+            self.alloc_t.free_tail(b, keep)
+        dcache = {**new.dcache,
+                  "block_table": self.alloc_d.device_table(),
+                  "index": jnp.asarray(new_len - 1, jnp.int32)}
+        tcache = {**new.tcache,
+                  "block_table": self.alloc_t.device_table()}
+        return new._replace(dcache=dcache, tcache=tcache)
 
 
 def phase_fns(target, drafter, spec: RoundSpec):

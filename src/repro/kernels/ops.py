@@ -17,6 +17,7 @@ from repro.kernels import int8_matmul as _imm
 from repro.kernels import paged_attention as _pa
 from repro.kernels import spec_verify as _sv
 from repro.kernels import ssd_scan as _ssd
+from repro.kernels import tree_attention as _ta
 
 
 def _interpret() -> bool:
@@ -87,6 +88,21 @@ def paged_attention(q, k_pool, v_pool, block_table, index, *, window=None,
     return _pa.paged_flash_attention(q, k_pool, v_pool, block_table, index,
                                      window=window, interpret=_interpret(),
                                      max_live=max_live)
+
+
+def tree_attention(q, k_pool, v_pool, block_table, index, depths, bits, *,
+                   window=None, max_live=None):
+    """Block-table-native tree-verify attention: one stacked pass scores all
+    root-to-leaf paths of a speculation tree (depths/bits from core/tree.py).
+    int8 KV pools fall back to the jnp oracle, mirroring paged_attention."""
+    if k_pool.dtype == jnp.int8:
+        from repro.models.attention import attn_tree
+        return attn_tree(q, k_pool, v_pool, block_table, index, depths, bits,
+                         window=window, max_live=max_live)
+    return _ta.tree_flash_attention(q, k_pool, v_pool, block_table, index,
+                                    depths, bits, window=window,
+                                    interpret=_interpret(),
+                                    max_live=max_live)
 
 
 def ssd_scan(x, dA, Bm, Cm, *, chunk=128):

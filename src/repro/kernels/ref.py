@@ -34,6 +34,15 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, index, *,
     return attn_paged(q, k_pool, v_pool, block_table, index, window=window)
 
 
+def tree_attention_ref(q, k_pool, v_pool, block_table, index, depths, bits,
+                       *, window=None):
+    """Oracle via the model-level block-scan tree attention (itself built on
+    the equivalence-tested online-softmax step)."""
+    from repro.models.attention import attn_tree
+    return attn_tree(q, k_pool, v_pool, block_table, index, depths, bits,
+                     window=window)
+
+
 def ssd_scan_ref(x, dA, Bm, Cm, chunk=128):
     """Oracle: the model-level chunked SSD (itself equivalence-tested against
     the sequential recurrence in tests/test_models)."""

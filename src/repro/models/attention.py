@@ -58,13 +58,17 @@ def _gqa_scores(q, k):
     return jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32))
 
 
-def attn_dense(q, k, v, q_pos, kv_pos, *, window=None, scale=None, causal=True):
-    """q:[B,Q,H,D] k,v:[B,S,Kv,D] positions int32 -> [B,Q,H,D]."""
+def attn_dense(q, k, v, q_pos, kv_pos, *, window=None, scale=None, causal=True,
+               mask=None):
+    """q:[B,Q,H,D] k,v:[B,S,Kv,D] positions int32 -> [B,Q,H,D].
+
+    ``mask`` overrides the causal/window mask (the tree-speculation path
+    builds its ancestor-bitmask visibility explicitly)."""
     B, Q, H, D = q.shape
     Kv = k.shape[2]
     scale = scale if scale is not None else D ** -0.5
     s = _gqa_scores(q, k) * scale                             # [B,Kv,G,Q,S]
-    m = _mask(q_pos, kv_pos, window, causal)
+    m = mask if mask is not None else _mask(q_pos, kv_pos, window, causal)
     s = jnp.where(_expand_mask(m), s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
@@ -78,13 +82,14 @@ def _online_carry(B, Kv, G, Q, D):
 
 
 def _online_step(carry, qf, k_i, v_i, q_pos, kv_pos, window, scale,
-                 causal=True):
+                 causal=True, mask=None):
     """One online-softmax update over a KV slab — the shared inner step of
     attn_chunked (pre-chunked scan) and attn_paged (block-table fetch); the
-    Pallas kernels implement the same recurrence in-VMEM."""
+    Pallas kernels implement the same recurrence in-VMEM. ``mask`` overrides
+    the causal/window mask (tree-speculation visibility)."""
     acc, mx, den = carry
     s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k_i.astype(jnp.float32)) * scale
-    m = _mask(q_pos, kv_pos, window, causal)
+    m = mask if mask is not None else _mask(q_pos, kv_pos, window, causal)
     s = jnp.where(_expand_mask(m), s, NEG_INF)
     mx_new = jnp.maximum(mx, s.max(axis=-1))
     alpha = jnp.exp(mx - mx_new)
@@ -205,3 +210,106 @@ def attention_paged(q, k_pool, v_pool, block_table, index, *, window=None,
                                    window=window, max_live=max_live)
     return attn_paged(q, k_pool, v_pool, block_table, index, window=window,
                       scale=scale, max_live=max_live)
+
+
+# -------------------------------------------------------------- tree read path
+def _tree_mask(idx, kv_pos, depths, bits, window):
+    """[B, span, S] visibility for one stacked tree-verify pass.
+
+    Query slot ``s`` sits at RoPE position ``idx + depths[s]``; its KV row is
+    physically written at cache slot ``idx + s``.  Visibility:
+
+      * committed prefix (kv_pos < idx): ordinary causal (+ window vs the
+        query's RoPE position);
+      * in-span slot t (idx <= kv_pos < idx + span): visible iff bit t of the
+        query's ancestor mask is set — i.e. only along the query's own
+        root path (+ window over the depth gap);
+      * beyond the span: stale slots, never visible.
+    """
+    span = depths.shape[0]
+    if kv_pos.ndim == 1:                                         # [S] shared
+        kv_pos = jnp.broadcast_to(kv_pos[None, :], (idx.shape[0],
+                                                    kv_pos.shape[0]))
+    rel = kv_pos - idx[:, None]                                  # [B, S]
+    span_vis = ((bits[:, None] >> jnp.arange(span, dtype=jnp.int32)[None, :])
+                & 1) > 0                                         # [span, span]
+    if window is not None:
+        span_vis &= (depths[:, None] - depths[None, :]) < window
+    prefix = (rel < 0)[:, None, :] & (kv_pos >= 0)[:, None, :]
+    if window is not None:
+        q_pos = idx[:, None] + depths[None, :]
+        prefix &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    relc = jnp.clip(rel, 0, span - 1)
+    # span_vis[:, relc]: [span, B, S] -> [B, span, S]
+    inspan = jnp.take(span_vis, relc, axis=1).transpose(1, 0, 2)
+    inspan &= ((rel >= 0) & (rel < span))[:, None, :]
+    return prefix | inspan
+
+
+def attn_tree_ring(q, k, v, index, depths, bits, *, window=None, scale=None):
+    """Tree-verify attention over a ring cache (jnp path).
+
+    q: [B, span, H, D] — the packed [root, node_1..node_N] verify span, whose
+    KV was just written at contiguous cache slots index..index+span-1."""
+    B = q.shape[0]
+    S = k.shape[1]
+    idx = jnp.asarray(index)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (B,))
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    m = _tree_mask(idx, kv_pos, depths, bits, window)
+    q_pos = idx[:, None] + depths[None, :]
+    return attn_dense(q, k, v, q_pos, kv_pos, window=window, scale=scale,
+                      mask=m)
+
+
+def attn_tree(q, k_pool, v_pool, block_table, index, depths, bits, *,
+              window=None, scale=None, max_live=None):
+    """Tree-verify attention over a paged block pool (jnp oracle).
+
+    Same block-bounded online-softmax loop as ``attn_paged``, with the
+    causal mask replaced by ``_tree_mask``: the span slots written at
+    index..index+span-1 are only visible along each query's root path."""
+    from repro.cache.kv_cache import _from_buf
+
+    B, S, H, D = q.shape                                        # S = span
+    BS, Kv = k_pool.shape[1], k_pool.shape[2]
+    MB = block_table.shape[1]
+    G = H // Kv
+    scale = scale if scale is not None else D ** -0.5
+    idx = jnp.asarray(index)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (B,))
+    live = (jnp.max(idx) + S) if max_live is None else jnp.asarray(max_live)
+    n_blocks = jnp.clip((live + BS - 1) // BS, 1, MB).astype(jnp.int32)
+    depths = jnp.asarray(depths, jnp.int32)
+    bits = jnp.asarray(bits, jnp.int32)
+    q_pos = idx[:, None] + depths[None, :]
+    qf = q.reshape(B, S, Kv, G, D).astype(jnp.float32)
+
+    def body(j, carry):
+        blk = jnp.take(block_table, j, axis=1)                   # [B]
+        k_j = _from_buf(jnp.take(k_pool, blk, axis=0), q.dtype)
+        v_j = _from_buf(jnp.take(v_pool, blk, axis=0), q.dtype)
+        kv_pos = j * BS + jnp.arange(BS, dtype=jnp.int32)
+        m = _tree_mask(idx, kv_pos, depths, bits, window)
+        return _online_step(carry, qf, k_j, v_j, q_pos, kv_pos, window,
+                            scale, mask=m)
+
+    acc, _, den = jax.lax.fori_loop(0, n_blocks, body,
+                                    _online_carry(B, Kv, G, S, D))
+    return _online_emit(acc, den, B, S, H, D, q.dtype)
+
+
+def attention_tree(q, k_pool, v_pool, block_table, index, depths, bits, *,
+                   window=None, scale=None, max_live=None):
+    """Tree-attention dispatch: Pallas kernel on TPU (float pools), jnp
+    oracle everywhere else (CPU, dry-run, int8 KV pools)."""
+    if jax.default_backend() == "tpu" and k_pool.dtype != jnp.int8 \
+            and scale is None:
+        from repro.kernels import ops
+        return ops.tree_attention(q, k_pool, v_pool, block_table, index,
+                                  depths, bits, window=window,
+                                  max_live=max_live)
+    return attn_tree(q, k_pool, v_pool, block_table, index, depths, bits,
+                     window=window, scale=scale, max_live=max_live)

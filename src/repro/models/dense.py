@@ -17,7 +17,8 @@ import jax.numpy as jnp
 
 from repro.cache.ops import PAGED, RING
 from repro.models import layers as L
-from repro.models.attention import attention, attention_paged
+from repro.models.attention import (_tree_mask, attention, attention_paged,
+                                    attention_tree, attn_dense)
 
 
 # ---------------------------------------------------------------------- init
@@ -63,13 +64,17 @@ def init(cfg, rng):
 
 # ------------------------------------------------------------------- forward
 def attn_block(cfg, p, x, q_pos, layer_cache, index, window, use_rope=True,
-               block_table=None, max_live=None):
+               block_table=None, max_live=None, tree=None):
     """Self-attention sub-block; returns (out, new_layer_cache or None).
     ``block_table`` non-None selects the paged-pool cache path: the pool
     write and the block-table-native read are split, so no gathered
     ``[B, MB*BS, Kv, D]`` view is ever materialized and attention reads are
     bounded by the live block count (``max_live`` threads the round-level
-    bound down from the engines; None recomputes it from ``index``)."""
+    bound down from the engines; None recomputes it from ``index``).
+    ``tree`` = (depths, bits) int32 [Q] marks this as a stacked tree-verify
+    pass (core/tree.py): q_pos already carries the depth offsets, the KV
+    lands at contiguous slots index..index+Q-1, and visibility follows each
+    slot's ancestor bitmask instead of plain causality."""
     B, Q, _ = x.shape
     hd = cfg.head_dim
     h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
@@ -85,20 +90,33 @@ def attn_block(cfg, p, x, q_pos, layer_cache, index, window, use_rope=True,
         new_cache = None
     elif block_table is not None:
         new_cache = PAGED.write(layer_cache, k, v, block_table, index)
-        o = attention_paged(q, new_cache["k"], new_cache["v"], block_table,
-                            index, window=window, max_live=max_live)
+        if tree is not None:
+            o = attention_tree(q, new_cache["k"], new_cache["v"], block_table,
+                               index, tree[0], tree[1], window=window,
+                               max_live=max_live)
+        else:
+            o = attention_paged(q, new_cache["k"], new_cache["v"], block_table,
+                                index, window=window, max_live=max_live)
     else:
         k_all, v_all, kv_pos, new_cache = RING.write(layer_cache, k, v, index)
-        o = attention(q, k_all, v_all, q_pos, kv_pos, window=window)
+        if tree is not None:
+            idx = jnp.asarray(index)
+            if idx.ndim == 0:
+                idx = jnp.broadcast_to(idx, (B,))
+            m = _tree_mask(idx, kv_pos, tree[0], tree[1], window)
+            o = attn_dense(q, k_all, v_all, q_pos, kv_pos, window=window,
+                           mask=m)
+        else:
+            o = attention(q, k_all, v_all, q_pos, kv_pos, window=window)
     o = L.linear(p["o"], o.reshape(B, Q, cfg.num_heads * hd))
     return o, new_cache
 
 
 def dense_layer(cfg, p, x, q_pos, layer_cache, index, block_table=None,
-                max_live=None):
+                max_live=None, tree=None):
     o, new_cache = attn_block(cfg, p["attn"], x, q_pos, layer_cache, index,
                               cfg.sliding_window, block_table=block_table,
-                              max_live=max_live)
+                              max_live=max_live, tree=tree)
     x = x + o
     x = x + L.swiglu(p["mlp"], L.rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
     return x, new_cache
@@ -132,7 +150,7 @@ def scan_layers(layer_fn, stacked_params, x, cache, remat=False, cfg=None):
 
 
 def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=None,
-            max_live=None):
+            max_live=None, tree=None):
     """tokens: [B, Q] int32 (or input_embeds [B, Q, D]).
 
     cache=None  -> full-sequence causal pass (train / paper-faithful no-cache mode)
@@ -140,6 +158,9 @@ def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=
     logits_slice: if "last", only unembed the final position (decode fast-path).
     max_live: paged caches only — live-token bound for the block-scan read
               (ignored on the ring path; None derives it from the index).
+    tree: (depths, bits) int32 [Q] — stacked tree-verify pass (core/tree.py):
+          RoPE positions become index + depths and attention follows the
+          ancestor bitmasks (requires cache).
     """
     x = input_embeds if input_embeds is not None else L.embed(params["embed"], tokens)
     x = x.astype(cfg.act_dtype)
@@ -147,11 +168,14 @@ def forward(cfg, params, tokens, cache=None, *, input_embeds=None, logits_slice=
     index = cache["index"] if cache is not None else jnp.zeros((), jnp.int32)
     block_table = cache.get("block_table") if cache is not None else None
     # index: scalar (shared) or [B] (per-row batched speculation)
-    q_pos = jnp.asarray(index)[..., None] + jnp.arange(Q, dtype=jnp.int32) \
-        if jnp.asarray(index).ndim else index + jnp.arange(Q, dtype=jnp.int32)
+    offs = jnp.asarray(tree[0], jnp.int32) if tree is not None \
+        else jnp.arange(Q, dtype=jnp.int32)
+    q_pos = jnp.asarray(index)[..., None] + offs \
+        if jnp.asarray(index).ndim else index + offs
 
     def layer_fn(lp, h, lc):
-        return dense_layer(cfg, lp, h, q_pos, lc, index, block_table, max_live)
+        return dense_layer(cfg, lp, h, q_pos, lc, index, block_table,
+                           max_live, tree)
 
     x, new_kv = scan_layers(layer_fn, params["layers"], x, cache,
                             remat=cfg.remat, cfg=cfg)

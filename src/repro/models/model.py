@@ -47,16 +47,21 @@ class Model:
     # ----------------------------------------------------------------- apply
     def apply(self, params, tokens, cache=None, *, want_trail=False,
               logits_slice=None, patches=None, frames=None, cross=None,
-              max_live=None):
+              max_live=None, tree=None):
         """``max_live``: paged caches only — the engines' round-level
         live-token bound for the block-scan attention read (KV families;
-        ignored elsewhere and on ring caches)."""
+        ignored elsewhere and on ring caches). ``tree``: (depths, bits)
+        int32 [Q] — stacked tree-verify pass (core/tree.py), dense family
+        only."""
         cfg = self.cfg
         fam = self.family
+        if tree is not None and fam != "dense":
+            raise NotImplementedError(
+                f"tree-verify passes need a dense-family target (got {fam!r})")
         if fam == "dense":
             logits, new_cache = dense.forward(cfg, params, tokens, cache,
                                               logits_slice=logits_slice,
-                                              max_live=max_live)
+                                              max_live=max_live, tree=tree)
             return logits, new_cache, {}
         if fam == "vlm":
             logits, new_cache = vlm.forward(cfg, params, tokens, cache,

@@ -1,0 +1,98 @@
+"""Shared allocator-interleaving model (no hypothesis dependency).
+
+Applies a flat op list to a BlockAllocator while mirroring expected state
+host-side and auditing after every op — the conservation law under test:
+
+    free + live + seized == num_blocks - 1
+
+with 'live' = DISTINCT referenced blocks (copy-on-write branches share
+prefix blocks). Used by tests/test_allocator_properties.py (hypothesis
+drives the op list) and tests/test_cow_fork.py (seeded random fallback, so
+bare checkouts keep the coverage).
+"""
+from repro.cache.paged_kv import BlockAllocator
+
+NUM_BLOCKS = 24
+BLOCK_SIZE = 4
+MAX_BLOCKS = 8
+BATCH = 4
+
+OP_KINDS = ["admit", "grow", "shrink", "preempt", "complete",
+            "seize", "release", "fork", "growbr", "adopt", "dropbr"]
+
+
+def _blocks_for(t):
+    return -(-t // BLOCK_SIZE)
+
+
+def run_allocator_model(ops, alloc=None):
+    """ops: iterable of (kind, row, amount) with kind in OP_KINDS,
+    0 <= row < BATCH, 0 <= amount <= 3 * BLOCK_SIZE."""
+    alloc = alloc or BlockAllocator(NUM_BLOCKS, BLOCK_SIZE, MAX_BLOCKS, BATCH)
+    tokens = [0] * BATCH          # model: committed tokens per live row
+    live = [False] * BATCH
+    branches = {}                 # row -> [branch tokens] while forked
+
+    def family_blocks(b):
+        n = _blocks_for(tokens[b])
+        if b in branches:
+            full = tokens[b] // BLOCK_SIZE      # shared prefix blocks
+            n += sum(_blocks_for(t) - full for t in branches[b])
+        return n
+
+    def expected_live():
+        return sum(family_blocks(b) for b in range(BATCH) if live[b])
+
+    for kind, row, amount in ops:
+        if kind == "admit" and not live[row]:
+            n = 1 + amount
+            if alloc.ensure(row, n):
+                live[row], tokens[row] = True, n
+        elif kind == "grow" and live[row] and row not in branches:
+            n = tokens[row] + amount
+            if alloc.ensure(row, n):
+                tokens[row] = n
+        elif kind == "shrink" and live[row] and row not in branches:
+            # rollback after a rejected speculation: keep a shorter prefix
+            n = max(1, tokens[row] - amount)
+            alloc.free_tail(row, n)
+            tokens[row] = n
+        elif kind in ("preempt", "complete") and live[row]:
+            family = family_blocks(row)
+            freed = alloc.free_row(row)
+            assert freed == family
+            live[row], tokens[row] = False, 0
+            branches.pop(row, None)
+        elif kind == "fork" and live[row] and row not in branches:
+            n_br = 1 + amount % 3
+            pairs = alloc.fork_row(row, tokens[row], n_br)
+            if pairs is not None:
+                tail = 1 if tokens[row] % BLOCK_SIZE else 0
+                assert len(pairs) == tail * n_br
+                branches[row] = [tokens[row]] * n_br
+        elif kind == "growbr" and row in branches:
+            w = amount % len(branches[row])
+            n = branches[row][w] + 1 + amount
+            if alloc.ensure_branch(row, w, n):
+                branches[row][w] = n
+        elif kind == "adopt" and row in branches:
+            w = amount % len(branches[row])
+            alloc.adopt_branch(row, w)
+            tokens[row] = branches[row][w]
+            del branches[row]
+        elif kind == "dropbr" and row in branches:
+            alloc.release_branches(row)
+            del branches[row]
+        elif kind == "seize":
+            alloc.seize(amount)
+        elif kind == "release":
+            alloc.release_seized(amount if amount else None)
+
+        counts = alloc.audit()    # asserts conservation + refcounts + no alias
+        assert counts["live"] == expected_live()
+
+    # drain everything: the pool must come back whole
+    for b in range(BATCH):
+        alloc.free_row(b)
+    alloc.release_seized()
+    assert alloc.audit() == {"free": NUM_BLOCKS - 1, "live": 0, "seized": 0}

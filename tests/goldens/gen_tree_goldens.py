@@ -1,0 +1,64 @@
+"""Generate the tree-draft round goldens (tree_rounds.json).
+
+Seeded tree-round outputs for tests/test_tree_rounds.py: greedy W=2 tree
+generation (asserted AGAINST the target's own AR argmax before writing —
+the golden is the AR continuation, not just a snapshot) and sampled W=2
+tree generation (seeded multi-path rejection sampling; the golden pins
+determinism, distributional losslessness is tested separately). Regenerate
+only on an INTENTIONAL output-changing modification:
+
+    PYTHONPATH=src python tests/goldens/gen_tree_goldens.py
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.engine import (EngineConfig, SpecEngine,
+                               autoregressive_generate)
+from repro.models.model import build_model
+
+OUT = pathlib.Path(__file__).resolve().parent / "tree_rounds.json"
+
+GAMMA = 3      # tree depth
+WIDTH = 2
+MAX_NEW = 12
+
+
+def main():
+    cfg_t = registry.smoke_config("llama3.2-1b")
+    cfg_d = cfg_t.replace(num_layers=max(1, cfg_t.num_layers - 1),
+                          name="draft")
+    mt, md = build_model(cfg_t), build_model(cfg_d)
+    pt, pd = mt.init(jax.random.PRNGKey(0)), md.init(jax.random.PRNGKey(7))
+    ps = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg_t.vocab_size, (2, 6)).astype(np.int32))
+
+    gold = {"meta": {"arch": "llama3.2-1b", "gamma": GAMMA, "width": WIDTH,
+                     "max_new": MAX_NEW, "prompt_seed": 0, "key_seed": 11}}
+    for greedy in (True, False):
+        eng = SpecEngine(mt, md, EngineConfig(
+            gamma=GAMMA, greedy=greedy, temperature=1.0, use_cache=True,
+            strategy="modular", draft_policy="tree", draft_k=WIDTH))
+        toks, stats = eng.generate(pt, pd, ps, MAX_NEW,
+                                   key=jax.random.PRNGKey(11))
+        name = f"tree_{'greedy' if greedy else 'sampled'}_w{WIDTH}"
+        gold[name] = {"tokens": np.asarray(toks).tolist(),
+                      "rounds": stats["rounds"],
+                      "accepted": stats["accepted"]}
+        if greedy:
+            # the greedy golden must BE the target's AR argmax continuation
+            ref = autoregressive_generate(mt, pt, ps, MAX_NEW, use_cache=True)
+            n = min(toks.shape[1], ref.shape[1])
+            np.testing.assert_array_equal(np.asarray(toks)[:, :n],
+                                          np.asarray(ref)[:, :n])
+
+    OUT.write_text(json.dumps(gold, indent=1))
+    print(f"wrote {OUT} ({len(gold) - 1} golden entries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,35 +1,34 @@
 """Property-based allocator invariants (skipped when hypothesis is absent).
 
 Drives BlockAllocator through random admit / grow / shrink / preempt /
-complete / seize / release sequences and checks, after every operation, the
-conservation law the serving stack's zero-leak guarantee rests on:
+complete / seize / release — and, since the tree-drafting PR, copy-on-write
+fork / branch-grow / adopt / drop-branches — sequences and checks, after
+every operation, the conservation law the serving stack's zero-leak
+guarantee rests on:
 
     free + live + seized == num_blocks - 1   (block 0 is the NULL block)
 
-plus: no block appears in two rows' tables, no live block is on the free or
-seized list, and table entries beyond n_alloc are NULL. All of that is what
+where 'live' counts DISTINCT referenced blocks (CoW branches share prefix
+blocks); plus: refcounts equal table-reference counts, no sharing across
+row families, no live block on the free or seized list, and table entries
+beyond each allocation are NULL. All of that is what
 ``BlockAllocator.audit()`` asserts — the property test's job is to reach it
-from adversarial operation orders a hand-written test would not."""
-import numpy as np
+from adversarial operation orders a hand-written test would not.
+
+The interleaving model itself lives in tests/_allocator_model.py; a seeded,
+hypothesis-free run of the same model is in tests/test_cow_fork.py so bare
+checkouts keep the coverage."""
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.cache.paged_kv import BlockAllocator  # noqa: E402
+from _allocator_model import (BATCH, BLOCK_SIZE, OP_KINDS,  # noqa: E402
+                              run_allocator_model)
 
-NUM_BLOCKS = 24
-BLOCK_SIZE = 4
-MAX_BLOCKS = 8
-BATCH = 4
-
-# One op = (kind, row, amount). Row/amount are reinterpreted per kind so a
-# single flat strategy shrinks well.
 _ops = st.lists(
     st.tuples(
-        st.sampled_from(
-            ["admit", "grow", "shrink", "preempt", "complete",
-             "seize", "release"]),
+        st.sampled_from(OP_KINDS),
         st.integers(min_value=0, max_value=BATCH - 1),
         st.integers(min_value=0, max_value=3 * BLOCK_SIZE),
     ),
@@ -40,39 +39,4 @@ _ops = st.lists(
 @settings(max_examples=60, deadline=None)
 @given(ops=_ops)
 def test_random_lifecycles_never_leak_or_alias_blocks(ops):
-    alloc = BlockAllocator(NUM_BLOCKS, BLOCK_SIZE, MAX_BLOCKS, BATCH)
-    tokens = [0] * BATCH          # model: committed tokens per live row
-    live = [False] * BATCH
-
-    for kind, row, amount in ops:
-        if kind == "admit" and not live[row]:
-            n = 1 + amount
-            if alloc.ensure(row, n):
-                live[row], tokens[row] = True, n
-        elif kind == "grow" and live[row]:
-            n = tokens[row] + amount
-            if alloc.ensure(row, n):
-                tokens[row] = n
-        elif kind == "shrink" and live[row]:
-            # rollback after a rejected speculation: keep a shorter prefix
-            n = max(1, tokens[row] - amount)
-            alloc.free_tail(row, n)
-            tokens[row] = n
-        elif kind in ("preempt", "complete") and live[row]:
-            freed = alloc.free_row(row)
-            assert freed == -(-tokens[row] // BLOCK_SIZE)
-            live[row], tokens[row] = False, 0
-        elif kind == "seize":
-            alloc.seize(amount)
-        elif kind == "release":
-            alloc.release_seized(amount if amount else None)
-
-        counts = alloc.audit()    # asserts conservation + no aliasing
-        assert counts["live"] == sum(-(-t // BLOCK_SIZE)
-                                     for t, lv in zip(tokens, live) if lv)
-
-    # drain everything: the pool must come back whole
-    for b in range(BATCH):
-        alloc.free_row(b)
-    alloc.release_seized()
-    assert alloc.audit() == {"free": NUM_BLOCKS - 1, "live": 0, "seized": 0}
+    run_allocator_model(ops)

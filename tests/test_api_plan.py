@@ -135,6 +135,55 @@ def test_planner_shapes_traffic_into_batching_and_cache():
     assert max(ragged.cache.prefill_buckets) >= 11
 
 
+# ----------------------------------- decision ⑥: tree-draft rationale numbers
+def test_planner_tree_rationale_carries_rederived_numbers():
+    """The accept note must quote the SAME numbers the cost model produces
+    when re-derived from the plan's own inputs — no stale strings."""
+    spec = DeploymentSpec(batch_size=1, prompt_lens=(6,), max_new=16,
+                          alpha=0.3, alpha_topk=0.8, cost_coefficient=0.1,
+                          adaptive_gamma=False)
+    plan = Planner(spec).plan()
+    assert plan.draft_policy == "tree" and plan.alpha_topk == 0.8
+    W, D = plan.draft_k, plan.gamma.gamma
+    assert W >= 2 and D > 0
+    g_lin, s_lin = cost_model.optimal_gamma(0.3, 0.1, spec.gamma_max)
+    best_d, best_s = max(
+        ((d, cost_model.speedup(0.3, d, 0.1)
+          * cost_model.tree_speedup(0.3, 0.8, W, d, 0.1))
+         for d in range(1, spec.gamma_max + 1)
+         if 1 + W * d <= cost_model.MAX_TREE_SPAN),
+        key=lambda t: t[1])
+    assert D == best_d
+    note = next(n for n in plan.rationale if n.startswith("draft_policy=tree"))
+    assert f"width={W} depth={D}" in note
+    assert f"predicted S={best_s:.2f}" in note
+    assert f"{best_s / s_lin:.2f}x over the gamma*={g_lin} linear plan" in note
+    assert f"span {1 + W * D}" in note
+    # tree depth replaced decision ④'s gamma; the override note names both
+    assert any(f"gamma<-{D}" in n and f"gamma*={g_lin}" in n
+               for n in plan.rationale)
+    assert not plan.gamma.adaptive and plan.gamma.candidates == ()
+
+
+def test_planner_tree_decline_and_no_evidence_notes():
+    # equal evidence (alpha_topk == alpha): branching can never pay, and the
+    # decline note must quote the linear S it lost to
+    spec = DeploymentSpec(batch_size=1, prompt_lens=(6,), max_new=16,
+                          alpha=0.8, alpha_topk=0.8, cost_coefficient=0.3,
+                          adaptive_gamma=False)
+    plan = Planner(spec).plan()
+    assert plan.draft_policy == "linear"
+    s_lin = cost_model.speedup(0.8, plan.gamma.gamma, 0.3)
+    note = next(n for n in plan.rationale if "tree drafting declined" in n)
+    assert f"S={s_lin:.2f}" in note and "alpha_topk=0.8" in note
+    # no evidence at all -> linear, with the note naming what to measure
+    plan = Planner(DeploymentSpec(batch_size=4, prompt_lens=(6,), max_new=16,
+                                  cost_coefficient=0.2,
+                                  adaptive_gamma=False)).plan()
+    assert plan.draft_policy == "linear" and plan.alpha_topk is None
+    assert any("alpha_topk" in n and "tree" in n for n in plan.rationale)
+
+
 # ------------------------------------------- (c) facade == legacy, per backend
 def _plan(**kw):
     kw.setdefault("cost_coefficient", 0.2)

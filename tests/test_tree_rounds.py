@@ -1,0 +1,274 @@
+"""Tree-draft rounds: W-chain drafting, one tree-attention verify, CoW forks.
+
+What this suite pins:
+  * W=1 tree rounds are BIT-IDENTICAL to linear rounds (greedy and sampled,
+    batch_min and per_row commits, including the drafter cache contents) —
+    the tree policy strictly generalizes the linear one;
+  * greedy W>=2 tree generation equals the target's own AR argmax (exact
+    verification survives branching), against the committed goldens
+    (tests/goldens/tree_rounds.json, gen_tree_goldens.py);
+  * sampled tree rounds replay the seeded goldens exactly, and multi-path
+    rejection sampling is distributionally lossless at the branching root
+    (the marginal of the first emitted token IS the target distribution);
+  * PagedTreeRound — copy-on-write block-table forks per branch — is
+    token-identical to the ring tree round, with BlockAllocator.audit()'s
+    exact pool partition intact after every round, and its greedy output
+    matches the committed rounds-parity per-row goldens;
+  * the tree gates on RoundSpec / make_policy / ExecutionPlan.
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache.ops import PAGED, RING
+from repro.cache.paged_kv import BlockAllocator
+from repro.configs import registry
+from repro.core import acceptance, rounds
+from repro.core.engine import (EngineConfig, SpecEngine,
+                               autoregressive_generate)
+from repro.core.rounds import (PagedTreeRound, RoundSpec, RoundState,
+                               make_policy, spec_round)
+from repro.models.model import build_model
+
+GOLD = json.loads((pathlib.Path(__file__).parent
+                   / "goldens" / "tree_rounds.json").read_text())
+PARITY = json.loads((pathlib.Path(__file__).parent
+                     / "goldens" / "rounds_parity.json").read_text())
+GAMMA = GOLD["meta"]["gamma"]
+WIDTH = GOLD["meta"]["width"]
+MAX_NEW = GOLD["meta"]["max_new"]
+
+B, T, L0 = 2, 48, 7
+
+
+@pytest.fixture(scope="module")
+def pair():
+    cfg_t = registry.smoke_config("llama3.2-1b")
+    cfg_d = cfg_t.replace(num_layers=max(1, cfg_t.num_layers - 1),
+                          name="draft")
+    mt, md = build_model(cfg_t), build_model(cfg_d)
+    return (mt, md, mt.init(jax.random.PRNGKey(0)),
+            md.init(jax.random.PRNGKey(7)), cfg_t)
+
+
+def _toks(cfg, n=B, length=T, seed=5):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n, length), 0,
+                              cfg.vocab_size, jnp.int32)
+
+
+def _ring_state(pair, greedy, per_row=False, toks=None, length=L0):
+    mt, md, pt, pd, cfg = pair
+    toks = _toks(cfg) if toks is None else toks
+    n = toks.shape[0]
+    tc = RING.init(mt, n, max_len=toks.shape[1])
+    dc = RING.init(md, n, max_len=toks.shape[1])
+    _, tc, _ = mt.apply(pt, toks[:, :length - 1], tc)
+    _, dc, _ = md.apply(pd, toks[:, :length - 1], dc)
+    ln = (jnp.full((n,), length, jnp.int32) if per_row
+          else jnp.asarray(length, jnp.int32))
+    return RoundState(tokens=toks, length=ln, dcache=dc, tcache=tc,
+                      key=None if greedy else jax.random.PRNGKey(7),
+                      active=jnp.ones((n,), bool) if per_row else None)
+
+
+# ------------------------------------------------------- W=1 == linear, exact
+@pytest.mark.parametrize("commit", ["batch_min", "per_row"])
+@pytest.mark.parametrize("greedy", [True, False])
+def test_tree_w1_is_linear(pair, greedy, commit):
+    mt, md, pt, pd, cfg = pair
+    per_row = commit == "per_row"
+    sp_lin = RoundSpec(gamma=GAMMA, greedy=greedy, commit=commit,
+                       policy=make_policy("linear"), fused_verify=False)
+    sp_t1 = RoundSpec(gamma=GAMMA, greedy=greedy, commit=commit,
+                      policy=make_policy("tree", 1), fused_verify=False)
+    s_lin = spec_round(mt, md, pt, pd, _ring_state(pair, greedy, per_row),
+                       sp_lin)
+    s_t1 = spec_round(mt, md, pt, pd, _ring_state(pair, greedy, per_row),
+                      sp_t1)
+    np.testing.assert_array_equal(np.asarray(s_lin.length),
+                                  np.asarray(s_t1.length))
+    np.testing.assert_array_equal(np.asarray(s_lin.tokens),
+                                  np.asarray(s_t1.tokens))
+    np.testing.assert_array_equal(np.asarray(s_lin.n_accepted),
+                                  np.asarray(s_t1.n_accepted))
+    # not just the tokens — the surviving drafter-branch cache must be the
+    # cache the linear round would have produced
+    for kk in ("k", "v"):
+        np.testing.assert_allclose(np.asarray(s_lin.dcache[kk]),
+                                   np.asarray(s_t1.dcache[kk]), atol=1e-5)
+
+
+# ------------------------------------------------ greedy tree == AR (goldens)
+def test_tree_greedy_matches_golden_and_ar(pair):
+    mt, md, pt, pd, cfg = pair
+    ps = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 6)).astype(np.int32))
+    eng = SpecEngine(mt, md, EngineConfig(
+        gamma=GAMMA, greedy=True, use_cache=True, strategy="modular",
+        draft_policy="tree", draft_k=WIDTH))
+    toks, stats = eng.generate(pt, pd, ps, MAX_NEW)
+    name = f"tree_greedy_w{WIDTH}"
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(GOLD[name]["tokens"]))
+    assert stats["rounds"] == GOLD[name]["rounds"]
+    assert stats["accepted"] == GOLD[name]["accepted"]
+    ref = autoregressive_generate(mt, pt, ps, MAX_NEW, use_cache=True)
+    n = min(toks.shape[1], ref.shape[1])
+    np.testing.assert_array_equal(np.asarray(toks)[:, :n],
+                                  np.asarray(ref)[:, :n])
+
+
+def test_tree_sampled_matches_golden(pair):
+    mt, md, pt, pd, cfg = pair
+    ps = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 6)).astype(np.int32))
+    eng = SpecEngine(mt, md, EngineConfig(
+        gamma=GAMMA, greedy=False, temperature=1.0, use_cache=True,
+        strategy="modular", draft_policy="tree", draft_k=WIDTH))
+    toks, stats = eng.generate(pt, pd, ps, MAX_NEW,
+                               key=jax.random.PRNGKey(11))
+    name = f"tree_sampled_w{WIDTH}"
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(GOLD[name]["tokens"]))
+    assert stats["rounds"] == GOLD[name]["rounds"]
+
+
+# ------------------------- multi-path rejection sampling is lossless (root)
+def test_multipath_root_resampling_is_lossless():
+    """SpecInfer/SpecTr recursive rejection at the branching root: with W
+    i.i.d. heads drawn from the drafter q, the marginal of the FIRST
+    emitted token (accepted head or residual resample) must be the target
+    distribution p — for a drafter that disagrees with the target."""
+    V, W, N = 8, 3, 20000
+    kq, kp = jax.random.split(jax.random.PRNGKey(0))
+    q_log = jax.random.normal(kq, (V,)) * 2.0
+    p_log = jax.random.normal(kp, (V,)) * 2.0
+    chain_slots = jnp.arange(1, W + 1, dtype=jnp.int32)[:, None]   # [W, D=1]
+    q_chains = jnp.broadcast_to(q_log, (1, W, 1, V))
+    p_tree = jnp.concatenate(
+        [p_log[None, None], jnp.zeros((1, W, V))], axis=1)         # [1,1+W,V]
+
+    def one(key):
+        kh, kv = jax.random.split(key)
+        heads = jax.random.categorical(kh, jnp.broadcast_to(q_log, (W, V)),
+                                       axis=-1)                    # iid ~ q
+        res = acceptance.verify_tree_stochastic(
+            kv, heads[None, :, None], q_chains, p_tree, chain_slots)
+        return res.out_tokens[0, 0]
+
+    first = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(42), N))
+    emp = np.bincount(np.asarray(first), minlength=V) / N
+    want = np.asarray(jax.nn.softmax(p_log))
+    tv = 0.5 * np.abs(emp - want).sum()
+    assert tv < 0.02, f"total variation {tv:.4f} (emp={emp}, target={want})"
+
+
+# ----------------------------------------------- paged CoW forks == ring tree
+def _paged_state(pair, greedy, toks, length, bs=4, nb=64, mb=12):
+    mt, md, pt, pd, cfg = pair
+    n = toks.shape[0]
+    at = BlockAllocator(nb, bs, mb, n)
+    ad = BlockAllocator(nb, bs, mb, n)
+    for b in range(n):
+        assert at.ensure(b, length) and ad.ensure(b, length)
+    geom = dict(num_blocks=nb, block_size=bs, max_blocks_per_row=mb)
+    tc = PAGED.init(mt, n, **geom)
+    dc = PAGED.init(md, n, **geom)
+    tc = {**tc, "block_table": at.device_table(),
+          "index": jnp.zeros((n,), jnp.int32)}
+    dc = {**dc, "block_table": ad.device_table(),
+          "index": jnp.zeros((n,), jnp.int32)}
+    _, tc, _ = mt.apply(pt, toks[:, :length - 1], tc)
+    _, dc, _ = md.apply(pd, toks[:, :length - 1], dc)
+    st = RoundState(tokens=toks, length=jnp.full((n,), length, jnp.int32),
+                    dcache=dc, tcache=tc,
+                    key=None if greedy else jax.random.PRNGKey(7),
+                    active=jnp.ones((n,), bool))
+    return st, at, ad
+
+
+@pytest.mark.parametrize("greedy", [True, False])
+def test_paged_tree_round_matches_ring(pair, greedy):
+    """CoW block-table forks must be a pure storage change: the paged tree
+    round commits the same tokens as the ring tree round, and the
+    allocator's exact pool partition (audit) survives every fork/adopt/
+    free cycle."""
+    mt, md, pt, pd, cfg = pair
+    sp = RoundSpec(gamma=GAMMA, greedy=greedy, commit="per_row",
+                   policy=make_policy("tree", 2), fused_verify=False)
+    toks = _toks(cfg)
+    stp, at, ad = _paged_state(pair, greedy, toks, L0)
+    rnd = PagedTreeRound(mt, md, sp, at, ad)
+    ref = _ring_state(pair, greedy, per_row=True, toks=toks)
+    for _ in range(4):
+        stp = rnd(pt, pd, stp)
+        ref = spec_round(mt, md, pt, pd, ref, sp)
+        at.audit()
+        ad.audit()
+    np.testing.assert_array_equal(np.asarray(stp.length),
+                                  np.asarray(ref.length))
+    np.testing.assert_array_equal(np.asarray(stp.tokens),
+                                  np.asarray(ref.tokens))
+
+
+def test_paged_tree_greedy_matches_parity_golden(pair):
+    """Acceptance pin: the paged CoW tree round reproduces the committed
+    rounds-parity per-row goldens (generated by the pre-tree linear
+    engines) token-for-token in greedy mode."""
+    mt, md, pt, pd, cfg = pair
+    g = PARITY["per_row_greedy_ring"]
+    P, new = 6, PARITY["meta"]["max_new"]
+    ps = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (4, P)).astype(np.int32)
+    buf = jnp.zeros((4, 48), jnp.int32).at[:, :P].set(jnp.asarray(ps))
+    sp = RoundSpec(gamma=PARITY["meta"]["gamma"], greedy=True,
+                   commit="per_row", policy=make_policy("tree", 2),
+                   fused_verify=False)
+    st, at, ad = _paged_state(pair, True, buf, P, nb=96)
+    rnd = PagedTreeRound(mt, md, sp, at, ad)
+    while int(jnp.min(st.length)) < P + new:
+        st = rnd(pt, pd, st)
+        at.audit()
+        ad.audit()
+    for b in range(4):
+        np.testing.assert_array_equal(np.asarray(st.tokens)[b, :P + new],
+                                      np.asarray(g["tokens"][b]))
+
+
+# ------------------------------------------------------------------ the gates
+def test_tree_round_spec_validation():
+    with pytest.raises(ValueError, match="cached-only"):
+        RoundSpec(use_cache=False, policy=make_policy("tree", 2))
+    with pytest.raises(ValueError, match="KV-family"):
+        RoundSpec(d_stateful=True, policy=make_policy("tree", 2))
+    with pytest.raises(ValueError, match="span"):
+        RoundSpec(gamma=4, policy=make_policy("tree", 10))   # 41 > 31
+    with pytest.raises(ValueError, match="width"):
+        make_policy("tree", 0)
+    # W=1 at any gamma is always a valid (degenerate-linear) tree
+    RoundSpec(gamma=8, policy=make_policy("tree", 1))
+
+
+def test_tree_plan_validation():
+    import dataclasses as dc
+
+    from repro.api import DeploymentSpec, ExecutionPlan, Planner
+    plan = Planner(DeploymentSpec(batch_size=1, prompt_lens=(6,), max_new=8,
+                                  alpha=0.3, alpha_topk=0.8,
+                                  cost_coefficient=0.1,
+                                  adaptive_gamma=False)).plan()
+    assert plan.draft_policy == "tree" and plan.gamma.gamma > 0
+    assert ExecutionPlan.from_json(plan.to_json()) == plan
+    with pytest.raises(ValueError, match="cached-only"):
+        DeploymentSpec(draft_policy="tree", use_cache=False)
+    with pytest.raises(ValueError, match="gamma"):
+        dc.replace(plan, gamma=dc.replace(plan.gamma, gamma=0))
+    with pytest.raises(ValueError, match="span"):
+        dc.replace(plan, draft_k=16)
+    with pytest.raises(ValueError, match="continuous"):
+        dc.replace(plan, batching="continuous",
+                   cache=dc.replace(plan.cache, kind="ring"))
