@@ -183,6 +183,17 @@ def main():
         "drift": drift.to_dict() if drift is not None else None,
     }
     (CACHE / "paged_serving.json").write_text(json.dumps(record, indent=2))
+    from benchmarks.common import update_bench_snapshot
+    path = update_bench_snapshot("paged_serving", {
+        "tokens_per_s_paged": record["tokens_per_s_paged"],
+        "tokens_per_s_fixed": record["tokens_per_s_fixed"],
+        "rounds_paged": record["rounds_paged"],
+        "rounds_fixed": record["rounds_fixed"],
+        "mean_latency_ms": s["mean_latency_s"] * 1e3,
+        "mem_paged_resident_mb": record["mem_paged_resident_mb"],
+        "mem_fixed_mb": record["mem_fixed_mb"],
+    })
+    print(f"# snapshot -> {path}")
 
 
 if __name__ == "__main__":

@@ -111,10 +111,16 @@ def replay_trace(pair_t, pair_d, scfg, trace, faults=None):
         async with AsyncSpecServer(srv) as front:
             return await replay(front, trace)
 
+    from repro.obs import clock
+    t0 = clock.wall()
     records = asyncio.run(go())
-    # return any still-seized fault blocks, then demand a balanced census:
-    # audit() raises if a block leaked or landed in two tables
+    wall = clock.wall() - t0
+    # return any still-seized fault blocks and flush the prefix pool (cached
+    # blocks are pinned by design, not leaked), then demand a balanced
+    # census: audit() raises if a block leaked or landed in two tables
     srv.alloc.release_seized()
+    if srv.prefix_pool is not None:
+        srv.prefix_pool.flush()
     srv.alloc.audit()
     leaked = free0 - srv.alloc.num_free
     met = [r["deadline_met"] for r in records
@@ -125,6 +131,9 @@ def replay_trace(pair_t, pair_d, scfg, trace, faults=None):
         "n_requests": len(records),
         "n_tokens": int(sum(r["n_tokens"] for r in records)),
         "rounds": srv.total_rounds,
+        "wall_s": wall,
+        "tokens_per_s": sum(r["n_tokens"] for r in records) / wall
+        if wall > 0 else None,
         "ttft_p50_s": _pct([r["ttft_s"] for r in records], 50),
         "ttft_p95_s": _pct([r["ttft_s"] for r in records], 95),
         "ttft_p99_s": _pct([r["ttft_s"] for r in records], 99),
@@ -147,6 +156,13 @@ def replay_trace(pair_t, pair_d, scfg, trace, faults=None):
         "requests_failed": m["requests_failed"],
         "failed_rids": sorted(r.rid for r in srv.metrics.failed),
         "expired_rids": sorted(r.rid for r in srv.metrics.expired),
+        # chunked-prefill / prefix-cache accounting (docs/DESIGN.md §4/§10)
+        "prefill_tokens": m["prefill_tokens"],
+        "prefix_hit_tokens": m["prefix_hit_tokens"],
+        "prefix_hit_rate": m["prefix_hit_rate"],
+        "chunks_per_prefill": m["chunks_per_prefill"],
+        "prefix_pool": (srv.prefix_pool.stats()
+                        if srv.prefix_pool is not None else None),
     }
     return summary, records
 
@@ -179,10 +195,57 @@ def run_pressure(pair_t, pair_d, scfg_small, trace):
     return out
 
 
+def run_shared_prefix(pair_t, pair_d, scfg, trace):
+    """Shared-system-prompt trace, twice: legacy all-at-once prefill vs
+    chunked prefill + prefix cache. The acceptance bars: the cached run
+    records a NONZERO hit-rate, leaks nothing, keeps every request
+    byte-identical to a cache-less synchronous run, and its TTFT p95 is no
+    worse than the all-at-once baseline (modulo host-timing tolerance —
+    the hit-rate/compute-saved numbers are the deterministic signal)."""
+    cached_scfg = dataclasses.replace(scfg, prefix_cache=True,
+                                      prefill_chunk=2 * scfg.block_size)
+    out = {}
+    for label, cfg in (("all_at_once", scfg), ("prefix_cache", cached_scfg)):
+        summary, records = replay_trace(pair_t, pair_d, cfg, trace)
+        # byte identity vs a CACHE-LESS synchronous serve of the same trace:
+        # attached prefix blocks must never change a single token
+        summary["verified_requests"] = verify_byte_identical(
+            pair_t, pair_d, scfg, trace, records,
+            exclude=summary["failed_rids"] + summary["expired_rids"])
+        assert summary["leaked_blocks"] == 0, \
+            f"shared_prefix/{label}: {summary['leaked_blocks']} blocks leaked"
+        out[label] = summary
+        hr = summary["prefix_hit_rate"]
+        print(f"shared_prefix/{label}: "
+              f"ttft_p50={summary['ttft_p50_s']:.3f}s "
+              f"p95={summary['ttft_p95_s']:.3f}s | "
+              f"prefilled {summary['prefill_tokens']} tok, "
+              f"hit {summary['prefix_hit_tokens']} tok "
+              f"(hit-rate {hr if hr is None else round(hr, 2)}) | "
+              f"leaked={summary['leaked_blocks']} | "
+              f"byte-identical={summary['verified_requests']}/"
+              f"{summary['n_requests']}")
+    hit = out["prefix_cache"]["prefix_hit_rate"]
+    assert hit is not None and hit > 0, \
+        "shared-system-prompt trace recorded no prefix-cache hits"
+    assert (out["prefix_cache"]["prefill_tokens"]
+            < out["all_at_once"]["prefill_tokens"]), \
+        "prefix cache did not reduce prefilled tokens"
+    p95_base = out["all_at_once"]["ttft_p95_s"]
+    p95_cache = out["prefix_cache"]["ttft_p95_s"]
+    if p95_base is not None and p95_cache is not None:
+        assert p95_cache <= p95_base * 1.25, \
+            (f"prefix-cache TTFT p95 {p95_cache:.3f}s regressed past the "
+             f"all-at-once baseline {p95_base:.3f}s")
+        out["ttft_p95_delta_s"] = p95_cache - p95_base
+    return out
+
+
 def main(smoke=False, n=20, rate=20.0, seed=0, faults=False, pressure=False):
-    from benchmarks.common import CACHE, emit
+    from benchmarks.common import CACHE, emit, update_bench_snapshot
     from repro.serving import FaultPlan, SchedulerConfig
-    from repro.serving.frontend import bursty_trace, poisson_trace
+    from repro.serving.frontend import (bursty_trace, poisson_trace,
+                                        shared_prefix_trace)
 
     if smoke:
         pair_t, pair_d, vocab = _smoke_pair()
@@ -267,8 +330,42 @@ def main(smoke=False, n=20, rate=20.0, seed=0, faults=False, pressure=False):
         out["pressure"] = run_pressure(pair_t, pair_d, pressure_scfg,
                                        traces["poisson"])
 
+    if not faults:
+        # chaos timing would pollute the prefix-cache comparison's TTFT bar
+        sp = (dict(prefix_len=12, suffix_lens=(2, 6), max_news=(3, 8))
+              if smoke else
+              dict(prefix_len=16, suffix_lens=(2, 8), max_news=(4, 24)))
+        sp_trace = shared_prefix_trace(
+            n, rate, vocab, seed=seed, slo_base_s=kw["slo_base_s"],
+            slo_per_token_s=kw["slo_per_token_s"], **sp)
+        out["shared_prefix"] = run_shared_prefix(pair_t, pair_d, scfg,
+                                                 sp_trace)
+
     (CACHE / "serving_slo.json").write_text(json.dumps(out, indent=1))
     print(f"# wrote {CACHE / 'serving_slo.json'}")
+
+    if not faults:
+        def _headline(s):
+            return {k: s[k] for k in ("tokens_per_s", "ttft_p50_s",
+                                      "ttft_p95_s", "goodput")}
+        shared = out["shared_prefix"]
+        path = update_bench_snapshot("serving_slo", {
+            "mode": "smoke" if smoke else "full",
+            "requests": n, "rate_rps": rate, "seed": seed,
+            "poisson": _headline(out["poisson"]),
+            "bursty": _headline(out["bursty"]),
+            "shared_prefix": {
+                "ttft_p95_all_at_once_s":
+                    shared["all_at_once"]["ttft_p95_s"],
+                "ttft_p95_prefix_cache_s":
+                    shared["prefix_cache"]["ttft_p95_s"],
+                "prefix_hit_rate": shared["prefix_cache"]["prefix_hit_rate"],
+                "prefill_tokens_saved":
+                    shared["all_at_once"]["prefill_tokens"]
+                    - shared["prefix_cache"]["prefill_tokens"],
+            },
+        })
+        print(f"# snapshot -> {path}")
 
     if smoke:  # the CI gate
         for name in traces:

@@ -167,3 +167,21 @@ def prompts(n, length, vocab=VOCAB, seed=0):
 
 def emit(name, us_per_call, derived):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def update_bench_snapshot(section: str, payload: dict):
+    """Merge one bench's headline numbers into the repo-root
+    ``BENCH_serving.json`` perf snapshot (one top-level key per bench, so
+    bench_serving_slo and bench_paged_serving each own their section and a
+    re-run replaces only its own numbers)."""
+    import json
+    path = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+    snap = {}
+    if path.exists():
+        try:
+            snap = json.loads(path.read_text())
+        except ValueError:
+            snap = {}
+    snap[section] = payload
+    path.write_text(json.dumps(snap, indent=2, sort_keys=True) + "\n")
+    return path

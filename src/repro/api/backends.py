@@ -319,7 +319,9 @@ class PagedBackend:
             prefill_buckets=cache.prefill_buckets,
             alpha_prior=plan.gamma.alpha_init,
             cost_coefficient=plan.cost_coefficient,
-            overcommit=cache.overcommit)
+            overcommit=cache.overcommit,
+            prefill_chunk=cache.prefill_chunk,
+            prefix_cache=cache.prefix_cache)
         gamma_override = None if plan.gamma.adaptive else plan.gamma.gamma
         self.server = PagedSpecServer(target, drafter, params_t, params_d,
                                       scfg, gamma=gamma_override,

@@ -52,6 +52,10 @@ class DeploymentSpec:
                                             # cap); when the worst case does
                                             # not fit, the planner overcommits
                                             # admission + relies on preemption
+    shared_prefix_len: int = 0              # expected shared system-prompt
+                                            # length (tokens) across requests;
+                                            # > 0 arms the prefix block cache
+    chunked_prefill: Optional[bool] = None  # None = planner decides (paged)
 
     # speculation economics
     alpha: float = 0.8
@@ -109,6 +113,8 @@ class DeploymentSpec:
             raise ValueError("tree drafting is cached-only (branch KV + "
                              "tree-attention verify); use draft_policy="
                              "'multi' for no-cache candidate drafting")
+        if self.shared_prefix_len < 0:
+            raise ValueError("shared_prefix_len must be >= 0")
 
     # convenience views the planner keys its decisions on
     @property
@@ -202,6 +208,11 @@ class CacheLayout:
     max_blocks_per_row: int = 16
     prefill_buckets: Tuple[int, ...] = (8, 16, 32, 64, 128, 256)
     overcommit: float = 1.0
+    # chunked prefill: fixed token budget per interleaved chunk program
+    # (None = legacy bucketed all-at-once prefill); prefix_cache arms the
+    # shared-prefix block pool (docs/DESIGN.md §10). Paged-only knobs.
+    prefill_chunk: Optional[int] = None
+    prefix_cache: bool = False
 
 
 @dataclass(frozen=True)
@@ -248,6 +259,12 @@ class ExecutionPlan:
         if self.cache.overcommit < 1.0:
             raise ValueError("cache.overcommit must be >= 1.0 (1.0 = "
                              "worst-case reservation, no preemption)")
+        if self.cache.prefill_chunk is not None and self.cache.prefill_chunk < 1:
+            raise ValueError("cache.prefill_chunk must be >= 1 when set")
+        if ((self.cache.prefill_chunk is not None or self.cache.prefix_cache)
+                and self.cache.kind != "paged"):
+            raise ValueError("prefill_chunk/prefix_cache are paged-cache "
+                             "knobs (cache.kind == 'paged')")
         if self.draft_policy not in DRAFT_POLICIES:
             raise ValueError(f"draft_policy must be one of {DRAFT_POLICIES}")
         if self.draft_policy == "multi" and (not self.greedy or self.use_cache

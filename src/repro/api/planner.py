@@ -217,7 +217,8 @@ class Planner:
             f"streaming={s.streaming})")
         return mode
 
-    def choose_cache(self, batching: str, gamma_max: int) -> CacheLayout:
+    def choose_cache(self, batching: str, gamma_max: int,
+                     c: Optional[float] = None) -> CacheLayout:
         """Decision ⑤b: ragged continuous traffic gets the paged block pool;
         everything else keeps per-row ring buffers. Geometry is sized so the
         worst-case request fits a row and the pool holds a full batch with
@@ -247,7 +248,41 @@ class Planner:
                 f"dry-pool rounds preempt the most-slack row")
             num_blocks = capped
         maxp = max(s.prompt_lens)
-        if overcommit > 1.0:
+        # Decision ⑤c: chunked prefill + prefix cache. The prefix cache needs
+        # chunking (suffix lengths after a cache hit are arbitrary); chunking
+        # alone pays whenever resume prefixes are arbitrary too (overcommit
+        # admits by expectation and preempts, so re-prefill lengths are any
+        # committed length) — it replaces the bucket-cover requirement with
+        # ONE fixed-shape chunk program. chunked_prefill=False vetoes both.
+        prefix_cache = s.shared_prefix_len > 0 and s.chunked_prefill is not False
+        chunked = (s.chunked_prefill if s.chunked_prefill is not None
+                   else (overcommit > 1.0 or prefix_cache))
+        prefill_chunk = None
+        if chunked:
+            # smallest power-of-two budget that prefills the worst prompt in
+            # <= 4 interleaved chunk programs: each chunk is launch-latency
+            # priced (cost_model.prefill_time), so fewer launches is cheaper,
+            # but a smaller chunk bounds how long decode rounds stall
+            cc = DEFAULT_COST_COEFFICIENT if c is None else c
+            per_launch = cost_model.prefill_time(2, chunk=1, c=cc)
+            prefill_chunk = block
+            while cost_model.prefill_time(maxp, chunk=prefill_chunk,
+                                          c=cc) > 4 * per_launch:
+                prefill_chunk *= 2
+            pt_cold = cost_model.prefill_time(maxp, chunk=prefill_chunk, c=cc)
+            note = (f"chunked prefill (chunk={prefill_chunk}): worst prompt "
+                    f"{maxp} costs {pt_cold:.2f} t_target units over "
+                    f"{-(-max(maxp - 1, 1) // prefill_chunk)} chunk programs; "
+                    f"resume/suffix prefixes need no bucket cover")
+            if prefix_cache:
+                hit = (s.shared_prefix_len // block) * block
+                pt_hit = cost_model.prefill_time(maxp, chunk=prefill_chunk,
+                                                 prefix_hit_tokens=hit, c=cc)
+                note += (f"; prefix cache on (~{s.shared_prefix_len}-token "
+                         f"shared prefix -> {hit} cached tokens, hit prefill "
+                         f"{pt_hit:.2f} vs cold {pt_cold:.2f})")
+            self._notes.append(note)
+        elif overcommit > 1.0:
             # a preempted request resumes by prefilling its committed prefix
             # (up to prompt + max_new - 1 tokens); buckets must cover it
             maxp = maxp + s.max_new_cap - 1
@@ -264,7 +299,9 @@ class Planner:
                            num_blocks=num_blocks,
                            max_blocks_per_row=blocks_per_row,
                            prefill_buckets=buckets,
-                           overcommit=round(overcommit, 3))
+                           overcommit=round(overcommit, 3),
+                           prefill_chunk=prefill_chunk,
+                           prefix_cache=prefix_cache)
 
     def choose_draft_policy(self, gamma: GammaSchedule, batching: str,
                             c: float = DEFAULT_COST_COEFFICIENT):
@@ -390,7 +427,7 @@ class Planner:
         c = self.resolve_cost_coefficient()
         placement = self.explore_placement(c)
         batching = self.choose_batching()
-        cache = self.choose_cache(batching, s.gamma_max)
+        cache = self.choose_cache(batching, s.gamma_max, c)
         gamma = self.choose_gamma(c, paged=cache.kind == "paged")
         strategy = self.choose_strategy(batching, gamma)
         draft_policy, draft_k, tree_depth = self.choose_draft_policy(

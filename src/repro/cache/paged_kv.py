@@ -41,6 +41,17 @@ and owns a private copy of the partial tail block, so branches append
 independently; ``adopt_branch`` commits the winner and drops every other
 reference. Within a row family blocks may be multiply referenced; across
 rows they stay disjoint (``audit`` enforces both). See docs/DESIGN.md §5.
+
+Prefix caching (cache/prefix_pool.py) adds a fourth block partition:
+``cache_ref`` pins a row's fully-written prompt-prefix blocks into the
+pool (one extra reference each), ``attach`` installs them at the front of
+another row's table so that row prefills only its unique suffix, and
+``uncache`` drops the pool's pin at LRU eviction. Cached blocks are the
+one sanctioned exception to family-disjoint sharing — they are immutable
+by construction (every attaching row writes strictly past them), so
+``audit`` exempts them and counts them as their own partition. When the
+free list runs dry the allocator calls the installed ``reclaimer`` (the
+prefix pool's LRU eviction) before failing. See docs/DESIGN.md §10.
 """
 from __future__ import annotations
 
@@ -192,6 +203,11 @@ class BlockAllocator:
         self.refcnt = np.zeros((num_blocks,), np.int64)
         self._branches: Dict[int, np.ndarray] = {}       # row -> [n_br, MB]
         self._branch_alloc: Dict[int, np.ndarray] = {}   # row -> [n_br]
+        # prefix-cache state: blocks pinned by the prefix pool (one extra
+        # reference each; immutable, shareable across row families) and the
+        # pool's LRU eviction hook, tried before any allocation fails
+        self.cached: set = set()
+        self.reclaimer = None            # callable(n_blocks) -> n_freed
 
     # ------------------------------------------------------------- queries
     @property
@@ -209,6 +225,15 @@ class BlockAllocator:
         return jnp.asarray(self.table)
 
     # ----------------------------------------------------------- mutation
+    def _want_free(self, n: int) -> bool:
+        """True if ``n`` free blocks are available, evicting idle cached
+        prefix blocks through the installed ``reclaimer`` if needed."""
+        if n <= len(self.free):
+            return True
+        if self.reclaimer is not None:
+            self.reclaimer(n - len(self.free))
+        return n <= len(self.free)
+
     def ensure(self, row: int, n_tokens: int) -> bool:
         """Grow row's allocation to cover ``n_tokens`` positions. Returns
         False (allocating nothing) if the pool cannot satisfy the request."""
@@ -218,7 +243,7 @@ class BlockAllocator:
         have = int(self.n_alloc[row])
         if need <= have:
             return True
-        if need - have > len(self.free):
+        if not self._want_free(need - have):
             return False
         for j in range(have, need):
             self.table[row, j] = self._take_fresh()
@@ -280,7 +305,7 @@ class BlockAllocator:
         tail = 1 if n_tokens % BS else 0
         assert full + tail <= int(self.n_alloc[row]), \
             f"fork of row {row} beyond its allocation"
-        if tail * n_branches > len(self.free):
+        if not self._want_free(tail * n_branches):
             return None
         MB = self.max_blocks_per_row
         tables = np.full((n_branches, MB), NULL_BLOCK, np.int32)
@@ -315,7 +340,7 @@ class BlockAllocator:
         have = int(alloc[branch])
         if need <= have:
             return True
-        if need - have > len(self.free):
+        if not self._want_free(need - have):
             return False
         for j in range(have, need):
             tables[branch, j] = self._take_fresh()
@@ -362,6 +387,45 @@ class BlockAllocator:
         self.version += 1
         return freed
 
+    # -------------------------------------------------- prefix-cache blocks
+    def cache_ref(self, blk: int):
+        """Pin ``blk`` into the prefix cache: one extra reference held by the
+        prefix pool. The block must be live (a row's table references it) and
+        fully written — the pool only registers blocks strictly below the
+        owner's first decode position, so pinned blocks are immutable."""
+        assert blk != NULL_BLOCK, "cannot cache the null block"
+        assert self.refcnt[blk] > 0, f"caching unreferenced block {blk}"
+        assert blk not in self.cached, f"block {blk} cached twice"
+        self.refcnt[blk] += 1
+        self.cached.add(blk)
+
+    def uncache(self, blk: int) -> int:
+        """Drop the prefix pool's pin on ``blk`` (LRU eviction). Returns 1
+        if the block actually returned to the free list (no row was still
+        attached to it), else 0."""
+        assert blk in self.cached, f"uncaching non-cached block {blk}"
+        self.cached.discard(blk)
+        return self._release_ref(blk)
+
+    def attach(self, row: int, blocks) -> int:
+        """Install cached prefix blocks at the FRONT of an EMPTY row's table
+        (prefix-cache hit: the row reuses their KV and prefills only its
+        suffix). Each block gains one table reference; returns the number of
+        tokens covered."""
+        assert int(self.n_alloc[row]) == 0, \
+            f"attach into non-empty row {row}"
+        assert len(blocks) <= self.max_blocks_per_row
+        for j, blk in enumerate(blocks):
+            blk = int(blk)
+            assert blk in self.cached, f"attaching non-cached block {blk}"
+            self.refcnt[blk] += 1
+            self.table[row, j] = blk
+        self.n_alloc[row] = len(blocks)
+        self.peak_in_use = max(self.peak_in_use, int(self.n_alloc.sum()))
+        if blocks:
+            self.version += 1
+        return len(blocks) * self.block_size
+
     # ------------------------------------------- fault injection + auditing
     @property
     def num_seized(self) -> int:
@@ -388,14 +452,17 @@ class BlockAllocator:
     def audit(self) -> Dict[str, int]:
         """Full block census; raises AssertionError on any inconsistency.
 
-        Invariants: free + live + seized == num_blocks - 1 (block 0 is the
-        null block, 'live' = DISTINCT blocks referenced by any main or
-        branch table), every refcount equals the number of table references
-        to that block, no free/seized block is referenced anywhere, table
+        Invariants: free + live + cached + seized == num_blocks - 1 (block 0
+        is the null block; 'live' = DISTINCT blocks referenced by any main
+        or branch table and NOT pinned in the prefix cache; 'cached' =
+        blocks pinned by the prefix pool, attached to rows or idle), every
+        refcount equals the number of table references plus the prefix
+        pool's pin, no free/seized block is referenced or cached, table
         entries beyond each row's/branch's allocation are NULL, and
         copy-on-write sharing never crosses row families (a block referenced
         by row b's tables — main or branch — is referenced by no other
-        row's). The chaos suite calls this after every run — 'zero leaked
+        row's) EXCEPT for cached blocks, which are immutable and shared by
+        design. The chaos suite calls this after every run — 'zero leaked
         blocks' means this census balances, not merely that ``num_free``
         looks right."""
         refs: Dict[int, int] = {}        # block -> #table references
@@ -405,10 +472,11 @@ class BlockAllocator:
                 x = int(x)
                 assert x != NULL_BLOCK, f"null block handed out to {what}"
                 refs[x] = refs.get(x, 0) + 1
-                owner = families.setdefault(x, row)
-                assert owner == row, \
-                    (f"block {x} shared across row families "
-                     f"{owner} and {row}")
+                if x not in self.cached:
+                    owner = families.setdefault(x, row)
+                    assert owner == row, \
+                        (f"block {x} shared across row families "
+                         f"{owner} and {row}")
             tail = tbl[n:]
             assert (tail == NULL_BLOCK).all(), \
                 f"{what}: non-NULL table entries beyond allocation {n}"
@@ -419,20 +487,31 @@ class BlockAllocator:
             for w in range(tables.shape[0]):
                 _count(b, tables[w], int(alloc[w]), f"row {b} branch {w}")
         for blk, n in refs.items():
-            assert int(self.refcnt[blk]) == n, \
+            want = n + (1 if blk in self.cached else 0)
+            assert int(self.refcnt[blk]) == want, \
                 (f"block {blk}: refcount {int(self.refcnt[blk])} != "
-                 f"{n} table references")
+                 f"{n} table references"
+                 + (" + 1 cache pin" if blk in self.cached else ""))
+        for blk in self.cached:
+            if blk not in refs:          # idle cached block: pool pin only
+                assert int(self.refcnt[blk]) == 1, \
+                    (f"idle cached block {blk} has refcount "
+                     f"{int(self.refcnt[blk])}, expected 1 (pool pin)")
         for blk in list(self.free) + list(self._seized):
             assert blk not in refs, \
                 f"block {blk} is free/seized but still referenced"
+            assert blk not in self.cached, \
+                f"block {blk} is free/seized but still cached"
             assert int(self.refcnt[blk]) == 0, \
                 f"free/seized block {blk} has refcount {int(self.refcnt[blk])}"
-        counts = {"free": len(self.free), "live": len(refs),
-                  "seized": len(self._seized)}
-        all_ids = list(self.free) + list(self._seized) + list(refs)
+        live = [blk for blk in refs if blk not in self.cached]
+        counts = {"free": len(self.free), "live": len(live),
+                  "cached": len(self.cached), "seized": len(self._seized)}
+        all_ids = (list(self.free) + list(self._seized) + live
+                   + list(self.cached))
         assert len(all_ids) == len(set(all_ids)), \
-            "block appears in more than one of free/seized/live"
-        total = counts["free"] + counts["live"] + counts["seized"]
+            "block appears in more than one of free/seized/live/cached"
+        total = sum(counts.values())
         assert total == self.num_blocks - 1, \
             (f"block census mismatch: {counts} sums to {total}, "
              f"expected {self.num_blocks - 1}")

@@ -190,6 +190,32 @@ def round_time(gamma: int, c: float,
     return base + dispatch_overhead
 
 
+def prefill_time(prompt_len: int, chunk: Optional[int] = None,
+                 prefix_hit_tokens: int = 0, c: float = 0.0,
+                 dispatch_overhead: float = DISPATCH_OVERHEAD_DEFAULT) -> float:
+    """Expected prefill cost in t_target units under chunking + prefix reuse.
+
+    Prefill feeds ``prompt_len - 1`` positions through BOTH caches (the
+    drafter must hold the same prefix KV to draft from it), minus any prefix
+    tokens attached from the shared-prefix block cache. On the edge-class
+    models this repo targets, a forward pass is launch-latency dominated well
+    past typical chunk sizes, so each chunk program prices like one combined
+    target+drafter step plus its dispatch:
+
+        T = ceil(max(P − 1 − hit, 0) / chunk) · (1 + c + h)
+
+    ``chunk=None`` means the legacy all-at-once path (one program). The
+    planner uses the RATIO of this across configurations (chunked vs not,
+    hit vs cold) to stamp plan.cache rationale — same prescriptive use as
+    Eq. (1), not an absolute-seconds claim.
+    """
+    suffix = max(int(prompt_len) - 1 - max(int(prefix_hit_tokens), 0), 0)
+    if suffix == 0:
+        return 0.0
+    n_chunks = 1 if chunk is None else -(-suffix // max(int(chunk), 1))
+    return n_chunks * (1.0 + float(c) + float(dispatch_overhead))
+
+
 def overlap_gain(gamma: int, c: float,
                  dispatch_overhead: float = DISPATCH_OVERHEAD_DEFAULT) -> float:
     """Round-speedup of overlapped dispatch over serialized dispatch at equal

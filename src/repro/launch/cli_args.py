@@ -60,22 +60,51 @@ def add_robustness_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
     return ap
 
 
+def add_prefill_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="N",
+                    help="chunked prefill: at most N prompt tokens per "
+                         "interleaved chunk program (replaces bucketed "
+                         "all-at-once prefill; decode rounds keep running "
+                         "between chunks — docs/DESIGN.md §4)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cache committed prompt-prefix KV blocks and attach "
+                         "them copy-on-write to requests sharing the same "
+                         "prefix (implies chunked prefill for the unique "
+                         "suffix — docs/DESIGN.md §10)")
+    return ap
+
+
+def apply_prefill_args(plan, args):
+    """Fold ``--prefill-chunk``/``--prefix-cache`` into the plan's cache
+    layout (paged plans only; a no-op when neither flag is set)."""
+    chunk = getattr(args, "prefill_chunk", None)
+    prefix = bool(getattr(args, "prefix_cache", False))
+    if chunk is None and not prefix:
+        return plan
+    import dataclasses
+    return dataclasses.replace(plan, cache=dataclasses.replace(
+        plan.cache, prefill_chunk=chunk, prefix_cache=prefix))
+
+
 def apply_overcommit_arg(plan, overcommit):
-    """Fold ``--overcommit`` into the plan's cache layout. Overcommitted
-    admission must be able to re-prefill a preempted request's committed
-    prefix (up to prompt + max_new - 1 tokens), so the prefill buckets are
-    extended to cover it — the planner does the same when IT decides to
-    overcommit (api/planner.py)."""
+    """Fold ``--overcommit`` into the plan's cache layout. With legacy
+    bucketed prefill, overcommitted admission must be able to re-prefill a
+    preempted request's committed prefix (up to prompt + max_new - 1
+    tokens), so the buckets are extended to cover it — the planner does the
+    same when IT decides to overcommit (api/planner.py). Chunked-prefill
+    plans skip the extension: any resume length is a sequence of fixed-size
+    chunks, no bucket cover needed."""
     if overcommit is None or overcommit <= 1.0:
         return plan
     import dataclasses
-    buckets = list(plan.cache.prefill_buckets)
-    resume_max = buckets[-1] + plan.max_new - 1
-    while buckets[-1] < resume_max:
-        buckets.append(buckets[-1] * 2)
-    return dataclasses.replace(plan, cache=dataclasses.replace(
-        plan.cache, overcommit=float(overcommit),
-        prefill_buckets=tuple(buckets)))
+    cache = dataclasses.replace(plan.cache, overcommit=float(overcommit))
+    if cache.prefill_chunk is None and not cache.prefix_cache:
+        buckets = list(cache.prefill_buckets)
+        resume_max = buckets[-1] + plan.max_new - 1
+        while buckets[-1] < resume_max:
+            buckets.append(buckets[-1] * 2)
+        cache = dataclasses.replace(cache, prefill_buckets=tuple(buckets))
+    return dataclasses.replace(plan, cache=cache)
 
 
 def make_fault_plan(seed):
@@ -97,6 +126,22 @@ def report_robustness(server):
               f"degradations={s['degradations']}, "
               f"expired={s['requests_expired']}, "
               f"failed={s['requests_failed']}")
+
+
+def report_prefill(server):
+    """Post-run chunked-prefill / prefix-cache counters, printed only when
+    the run recorded prefill work (ring-cache drivers stay silent)."""
+    s = server.metrics.summary()
+    if not (s.get("prefill_tokens") or s.get("prefix_hit_tokens")):
+        return
+    line = (f"prefill: {s['prefill_tokens']} tokens computed, "
+            f"{s['prefix_hit_tokens']} attached from prefix cache")
+    if s["prefix_hit_rate"] is not None:
+        line += (f" (hit-rate {s['prefix_hit_rate']:.0%}, prefill compute "
+                 f"saved {s['prefill_compute_saved']:.0%})")
+    if s["chunks_per_prefill"]:
+        line += f", {s['chunks_per_prefill']:.1f} chunks/prefill"
+    print(line)
 
 
 def add_trace_args(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:

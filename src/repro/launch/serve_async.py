@@ -49,6 +49,7 @@ def build_session(args):
         gamma=(plan.gamma if args.gamma is None else
                dataclasses.replace(plan.gamma, gamma=args.gamma)))
     plan = cli_args.apply_placement_arg(plan, args.placement)
+    plan = cli_args.apply_prefill_args(plan, args)
     plan = cli_args.apply_overcommit_arg(plan, args.overcommit)
     sess = Session(mt, md, pt, pd, plan, max_batch=args.batch,
                    tracer=cli_args.make_tracer(args))
@@ -107,6 +108,7 @@ def report(records, dt, front):
     if depths:
         print(f"queue depth mean={np.mean(depths):.1f} max={max(depths)}")
     from repro.launch import cli_args
+    cli_args.report_prefill(front.server)
     cli_args.report_robustness(front.server)
 
 
@@ -116,6 +118,7 @@ def main():
     cli_args.add_spec_args(ap, gamma=None)
     cli_args.add_trace_args(ap)
     cli_args.add_robustness_args(ap)
+    cli_args.add_prefill_args(ap)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--arrivals", choices=("poisson", "bursty"),
                     default="poisson")

@@ -38,6 +38,7 @@ def main():
     cli_args.add_spec_args(ap, gamma=None)
     cli_args.add_trace_args(ap)
     cli_args.add_robustness_args(ap)
+    cli_args.add_prefill_args(ap)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--num-blocks", type=int, default=256)
@@ -67,6 +68,7 @@ def main():
         gamma=(plan.gamma if args.gamma is None else
                dataclasses.replace(plan.gamma, gamma=args.gamma)))
     plan = cli_args.apply_placement_arg(plan, args.placement)
+    plan = cli_args.apply_prefill_args(plan, args)
     plan = cli_args.apply_overcommit_arg(plan, args.overcommit)
     sess = Session(mt, md, pt, pd, plan, max_batch=args.batch,
                    tracer=cli_args.make_tracer(args))
@@ -96,6 +98,7 @@ def main():
           f"alpha_hat={alpha if alpha is None else round(alpha, 2)})")
     print(f"acceptance histogram (n_accepted per round): "
           f"{s['accept_hist'][:(srv.gamma or 0) + 1].tolist()}")
+    cli_args.report_prefill(srv)
     cli_args.report_robustness(srv)
     cli_args.report_telemetry(sess, args)
 

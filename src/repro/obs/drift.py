@@ -34,7 +34,7 @@ from typing import Dict, List, Optional
 
 from repro.core import cost_model
 
-COMPONENTS = ("draft", "verify", "commit", "handoff", "round")
+COMPONENTS = ("draft", "verify", "commit", "handoff", "prefill", "round")
 
 
 @dataclass(frozen=True)
@@ -103,7 +103,7 @@ class DriftMonitor:
             return 1.0
         if component == "round":
             return cost_model.round_time(g, self.c, self.h, self.overlap)
-        return self._baseline_units.get(component)   # commit / handoff
+        return self._baseline_units.get(component)   # commit/handoff/prefill
 
     # ------------------------------------------------------------ observation
     def observe(self, t_round: Optional[float] = None,
@@ -111,14 +111,19 @@ class DriftMonitor:
                 t_verify: Optional[float] = None,
                 t_commit: Optional[float] = None,
                 t_handoff: Optional[float] = None,
+                t_prefill: Optional[float] = None,
                 gamma: Optional[int] = None):
-        """Feed one round's measured seconds (any subset of components)."""
+        """Feed one round's measured seconds (any subset of components).
+        ``t_prefill`` is the interleaved chunk-program time of steps that
+        advanced a prefill (one fixed-size chunk per step, so the baseline
+        is as uniform as the other no-model-term components)."""
         if self._warmup_left > 0:
             self._warmup_left -= 1
             return
         g = self.gamma if gamma is None else max(int(gamma), 1)
         measured = {"draft": t_draft, "verify": t_verify, "commit": t_commit,
-                    "handoff": t_handoff, "round": t_round}
+                    "handoff": t_handoff, "prefill": t_prefill,
+                    "round": t_round}
         if self.unit is None:
             self._calibrate(measured, g)
             return
@@ -166,7 +171,7 @@ class DriftMonitor:
         else:
             self._cal_rounds -= 1    # nothing usable yet; keep calibrating
             return
-        for comp in ("commit", "handoff"):
+        for comp in ("commit", "handoff", "prefill"):
             if self._cal[comp]:
                 self._baseline_units[comp] = min(self._cal[comp]) / self.unit
 

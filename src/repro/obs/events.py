@@ -49,6 +49,12 @@ class RoundEvent:
                                  # drafter failure (not a cost-model choice)
     fault_delay: float = 0.0     # injected virtual straggle included in
                                  # t_round (chaos runs; 0 in production)
+    prefill_tokens: int = 0      # suffix tokens prefilled this step (chunked
+                                 # prefill interleaves them with the round)
+    prefill_chunks: int = 0      # chunk programs run this step
+    t_prefill: Optional[float] = None  # host seconds spent in chunk programs
+    prefix_hit_rate: Optional[float] = None  # running prefix-cache hit rate
+                                 # (tokens attached / candidate tokens)
 
     @property
     def alpha_round(self) -> Optional[float]:
@@ -114,7 +120,7 @@ class RoundEventLog:
         counts: Dict[str, int] = {}
         for ev in self._events:
             for key in ("t_round", "t_draft", "t_verify", "t_commit",
-                        "t_handoff"):
+                        "t_handoff", "t_prefill"):
                 v = getattr(ev, key)
                 if v is not None:
                     sums[key] = sums.get(key, 0.0) + v

@@ -16,7 +16,8 @@ See docs/DESIGN.md §8 for the stepper/queue/backpressure architecture.
 """
 from repro.serving.frontend.async_server import AsyncSpecServer, StreamEvent
 from repro.serving.frontend.traffic import (TraceRequest, bursty_trace,
-                                            poisson_trace, replay)
+                                            poisson_trace, replay,
+                                            shared_prefix_trace)
 
 __all__ = ["AsyncSpecServer", "StreamEvent", "TraceRequest",
-           "poisson_trace", "bursty_trace", "replay"]
+           "poisson_trace", "bursty_trace", "shared_prefix_trace", "replay"]

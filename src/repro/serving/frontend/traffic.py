@@ -91,6 +91,29 @@ def bursty_trace(n: int, burst_rate_rps: float, vocab: int, *, seed: int = 0,
     return _build(arrivals, prompts, news, slo_base_s, slo_per_token_s)
 
 
+def shared_prefix_trace(n: int, rate_rps: float, vocab: int, *,
+                        seed: int = 0, prefix_len: int = 16,
+                        suffix_lens: Tuple[int, int] = (2, 8),
+                        max_news: Tuple[int, int] = (4, 24),
+                        slo_base_s: Optional[float] = None,
+                        slo_per_token_s: float = 0.0) -> List[TraceRequest]:
+    """Poisson arrivals where every prompt opens with the SAME
+    ``prefix_len``-token system prompt followed by a unique ragged suffix —
+    the multi-client chat shape the prefix cache exists for. A prefix-cache
+    run on this trace must record a nonzero hit-rate; a cache-less run
+    re-prefills the shared head ``n`` times."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, n)
+    gaps[0] = 0.0
+    system = rng.integers(0, vocab, prefix_len).astype(np.int32)
+    Ps = rng.integers(suffix_lens[0], suffix_lens[1] + 1, n)
+    news = rng.integers(max_news[0], max_news[1] + 1, n)
+    prompts = [np.concatenate(
+        [system, rng.integers(0, vocab, int(P)).astype(np.int32)])
+        for P in Ps]
+    return _build(np.cumsum(gaps), prompts, news, slo_base_s, slo_per_token_s)
+
+
 async def replay(front, trace: Sequence[TraceRequest], *, now=clock.wall,
                  on_token=None) -> List[dict]:
     """Replay ``trace`` open-loop against an AsyncSpecServer: each request

@@ -93,6 +93,11 @@ class ServingMetrics:
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
         self.total_generated = 0
+        # prefill accounting (chunked prefill + prefix cache)
+        self.prefill_tokens = 0       # suffix tokens actually prefilled
+        self.prefix_hit_tokens = 0    # prefill tokens skipped via cached blocks
+        self.prefill_chunks = 0       # chunk programs run
+        self.n_prefills = 0           # prefills completed (1 + resumes)
 
     # ------------------------------------------------------------- requests
     def submit(self, rid: int, prompt_len: int, max_new: int,
@@ -186,6 +191,23 @@ class ServingMetrics:
         self.failed.append(rec)
         return rec
 
+    def prefill(self, rid: int, n_tokens: int, hit_tokens: int = 0,
+                chunks: int = 1):
+        """One completed prefill: ``n_tokens`` suffix tokens computed across
+        ``chunks`` chunk programs, ``hit_tokens`` skipped by attaching cached
+        prefix blocks. Resume prefills (after preemption) record again — the
+        recompute debt shows up here as extra prefill work."""
+        self.prefill_tokens += max(int(n_tokens), 0)
+        self.prefix_hit_tokens += max(int(hit_tokens), 0)
+        self.prefill_chunks += max(int(chunks), 0)
+        self.n_prefills += 1
+
+    def prefix_hit_rate(self) -> Optional[float]:
+        """Fraction of candidate prefill tokens served from the prefix cache
+        (None until a prefill ran)."""
+        total = self.prefill_tokens + self.prefix_hit_tokens
+        return self.prefix_hit_tokens / total if total else None
+
     def degrade(self, round_idx: int, reason: str):
         """A batch fell back from speculative to AR rounds (watchdog trip or
         drafter failure) — a quality-of-service event, not a request event."""
@@ -262,4 +284,10 @@ class ServingMetrics:
             "spec_rounds": self.n_spec_rounds,
             "alpha_hat": self._alpha,
             "accept_hist": self.accept_hist.copy(),
+            "prefill_tokens": self.prefill_tokens,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hit_rate": self.prefix_hit_rate(),
+            "prefill_compute_saved": self.prefix_hit_rate() or 0.0,
+            "chunks_per_prefill": (self.prefill_chunks / self.n_prefills
+                                   if self.n_prefills else None),
         }

@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache.paged_kv import BlockAllocator
+from repro.cache.paged_kv import NULL_BLOCK, BlockAllocator
+from repro.cache.prefix_pool import PrefixPool
 from repro.core.batched_engine import (KV_FAMILIES, BatchedEngineConfig,
                                        BatchedSpecEngine, RowState)
 from repro.core.rounds import TracedRound
@@ -98,6 +99,28 @@ class PagedSpecServer:
         self.T = self.scfg.max_tokens_per_row + self.scfg.gamma_max + 2
         self._slots: List[Optional[ServeRequest]] = [None] * self.B
         self._target_len = np.zeros(self.B, np.int64)
+        # chunked-prefill state (docs/DESIGN.md §4/§10). ``_chunk`` is None
+        # on the legacy bucketed all-at-once path; otherwise prefills run as
+        # fixed-[1, C] chunk programs interleaved with decode rounds.
+        # Mid-prefill rows are tracked host-side (``_masked``) and their rows
+        # of the PUSHED device tables are nulled so stale-index speculative
+        # writes for those (inactive) rows land in the null block — never in
+        # their real blocks, and never in SHARED cached prefix blocks.
+        self._chunk = self.scfg.effective_chunk if self.scfg.chunked else None
+        self.prefix_pool = (PrefixPool(self.alloc) if self.scfg.prefix_cache
+                            else None)
+        self._prefill_pos = np.zeros(self.B, np.int64)  # next suffix position
+        self._prefill_hit = np.zeros(self.B, np.int64)  # tokens from cache
+        self._prefill_chunks = np.zeros(self.B, np.int64)
+        self._masked: set = set()          # rows mid-prefill (inactive)
+        self._table_masked: frozenset = frozenset()  # masked set last pushed
+        self._chunk_jit = None
+        # per-step prefill spans for the RoundEvent / drift monitor
+        self._round_prefill_tokens = 0
+        self._round_prefill_chunks = 0
+        self._round_prefill_t = 0.0
+        self._aborted_pending: List[int] = []  # mid-prefill evictions
+                                               # awaiting "preempted" fanout
         self._state: Optional[RowState] = None
         self._lengths: Optional[np.ndarray] = None  # host mirror of .length
         self._batch_formed = False   # gamma decided for the current batch
@@ -179,20 +202,32 @@ class PagedSpecServer:
 
     def _sync_tables(self, state: RowState) -> RowState:
         """Push the host block table to the device — only when it actually
-        changed since the last push (allocator.version gates the transfer;
-        admission/release bump it, idle rounds do not). Two separate device
-        arrays: tcache/dcache must not share one buffer or the donated round
-        state would donate it twice."""
-        if self._table_version == self.alloc.version:
+        changed since the last push (allocator.version plus the mid-prefill
+        mask gate the transfer; admission/release/chunk-completion bump
+        them, idle rounds do not). Mid-prefill rows are pushed as NULL:
+        decode rounds keep issuing speculative writes for every row at its
+        (stale) device index, and for a row whose prefill is still in
+        flight those writes must land in the null block, not in its real
+        blocks (chunk programs carry the TRUE row table in their own
+        views). Two separate device arrays: tcache/dcache must not share
+        one buffer or the donated round state would donate it twice."""
+        masked = frozenset(self._masked)
+        if (self._table_version == self.alloc.version
+                and self._table_masked == masked):
             return state
         self._table_version = self.alloc.version
+        self._table_masked = masked
+        host = self.alloc.table
+        if masked:
+            host = host.copy()
+            host[sorted(masked)] = NULL_BLOCK
         # two INDEPENDENT uploads on purpose: a single host array pinned onto
         # both roles can alias one device buffer on shared devices
         # (device_put reuses resident shards), and the speculative round
         # DONATES the drafter cache — a shared buffer would be deleted out
         # from under the target's table
-        t_table = self.alloc.device_table()
-        d_table = self.alloc.device_table()
+        t_table = jnp.asarray(host)
+        d_table = jnp.asarray(host)
         if self.placement is not None:
             t_table = self.placement.to_target(t_table)
             d_table = self.placement.to_drafter(d_table)
@@ -287,6 +322,200 @@ class PagedSpecServer:
                                tcache=tcache, dcache=dcache)
         return state, bool(jax.device_get(ok))
 
+    # ------------------------------------------------- chunked prefill path
+    def _chunk_fn(self):
+        """Fixed-shape [1, C] chunk program, compiled ONCE (vs once per
+        bucket on the legacy path): writes KV for C suffix tokens starting
+        at the view's index and returns the finite-logits guard."""
+        if self._chunk_jit is None:
+            if self.placement is None:
+                def chunk(pt, pd, toks, tc, dc):
+                    logits, tc, _ = self.target.apply(pt, toks, tc)
+                    _, dc, _ = self.drafter.apply(pd, toks, dc)
+                    return tc, dc, jnp.isfinite(logits).all()
+                self._chunk_jit = jax.jit(chunk, donate_argnums=(3, 4))
+            else:
+                def t_fn(pt, toks, tc):
+                    logits, tc, _ = self.target.apply(pt, toks, tc)
+                    return tc, jnp.isfinite(logits).all()
+                t_jit = jax.jit(t_fn, donate_argnums=(2,))
+                d_jit = jax.jit(
+                    lambda pd, toks, dc: self.drafter.apply(pd, toks, dc)[1],
+                    donate_argnums=(2,))
+                pm = self.placement
+
+                def chunk(pt, pd, toks, tc, dc):
+                    tc, ok = t_jit(pt, pm.to_target(toks), tc)
+                    return tc, d_jit(pd, pm.to_drafter(toks), dc), ok
+                self._chunk_jit = chunk
+        return self._chunk_jit
+
+    def _begin_prefill(self, state: RowState, b: int,
+                       req: ServeRequest) -> RowState:
+        """Admit ``req`` into row ``b`` on the chunked path: look up the
+        prefix cache, attach any cached block chain (the row then prefills
+        only its unique suffix), stage the prompt tokens, and mark the row
+        mid-prefill (masked + inactive) until ``_advance_prefills`` finishes
+        the suffix. The attach rebuild cannot fail: admission's grant is
+        returned to the free list first and cached blocks consume none."""
+        prompt = np.asarray(req.effective_prompt, np.int32)
+        P = req.resume_len
+        hit_blocks: List[int] = []
+        if self.prefix_pool is not None and P > 1:
+            # cap at (P-1)//BS blocks: the row's first decode write lands at
+            # position P-1, which must NEVER fall inside a shared block
+            cap = min((P - 1) // self.scfg.block_size,
+                      self.scfg.max_blocks_per_row)
+            hit_blocks = self.prefix_pool.lookup(prompt, cap)
+            if hit_blocks:
+                admit = self.sched.admit_tokens(req)
+                self.alloc.free_row(b)
+                self.alloc.attach(b, hit_blocks)
+                ok = self.alloc.ensure(b, admit)
+                assert ok, "re-grow after cached-prefix attach cannot fail"
+        start = len(hit_blocks) * self.scfg.block_size
+        self._prefill_pos[b] = start
+        self._prefill_hit[b] = start
+        self._prefill_chunks[b] = 0
+        self._target_len[b] = req.prompt_len + req.max_new
+        self._masked.add(b)
+        tokens = state.tokens.at[b].set(0).at[b, :P].set(
+            jnp.asarray(prompt, jnp.int32))
+        # reset the device length: the slot's previous occupant left its
+        # FINAL length behind, which must not read as instant completion
+        return state._replace(tokens=tokens,
+                              length=state.length.at[b].set(1),
+                              active=state.active.at[b].set(False))
+
+    def _run_chunk(self, state: RowState, b: int, req: ServeRequest):
+        """One chunk program for mid-prefill row ``b``: write KV for suffix
+        positions [pos, min(pos+C, P-1)). The views carry the TRUE row table
+        (the batch-wide device copy has this row masked to NULL) and the
+        chunk-base index; final-chunk padding past P-1 is overwritten by the
+        first decode rounds before it can become causally visible — the
+        same argument as the legacy bucket padding. Returns ``(state, ok)``
+        with ok=None when the pool is dry (caller aborts the prefill)."""
+        prompt = np.asarray(req.effective_prompt, np.int32)
+        P, C = req.resume_len, self._chunk
+        s = int(self._prefill_pos[b])
+        e = min(s + C, P - 1)
+        if not self.sched.grow(b, e):
+            return state, None
+        padded = np.zeros(C, np.int32)
+        padded[:e - s] = prompt[s:e]
+        t0 = self.tracer.clock()
+        # fresh per-chunk uploads of the one-row table — never a slice of
+        # the donated batch-wide device table (see _prefill_into's aliasing
+        # note); two independent uploads for the two donated views
+        t_row = jnp.asarray(self.alloc.table[b:b + 1])
+        d_row = jnp.asarray(self.alloc.table[b:b + 1])
+        if self.placement is not None:
+            t_row = self.placement.to_target(t_row)
+            d_row = self.placement.to_drafter(d_row)
+        tc_view = {**state.tcache, "block_table": t_row,
+                   "index": jnp.full((1,), s, jnp.int32)}
+        dc_view = {**state.dcache, "block_table": d_row,
+                   "index": jnp.full((1,), s, jnp.int32)}
+        with self.tracer.span("prefill_chunk", phase="prefill", role="target",
+                              rid=req.rid, start=s, end=e):
+            tc, dc, ok = self._chunk_fn()(self.params_t, self.params_d,
+                                          jnp.asarray(padded[None]),
+                                          tc_view, dc_view)
+        ok = bool(jax.device_get(ok))
+        # merge: pools carry the new KV; the batch tables/indices are kept
+        # (this row's merged index is set once, at completion)
+        state = state._replace(
+            tcache={**tc, "block_table": state.tcache["block_table"],
+                    "index": state.tcache["index"]},
+            dcache={**dc, "block_table": state.dcache["block_table"],
+                    "index": state.dcache["index"]})
+        self._prefill_pos[b] = e
+        self._prefill_chunks[b] += 1
+        self._round_prefill_tokens += e - s
+        self._round_prefill_chunks += 1
+        self._round_prefill_t += self.tracer.clock() - t0
+        return state, ok
+
+    def _complete_prefill(self, state: RowState, b: int,
+                          req: ServeRequest) -> RowState:
+        """Suffix done: register the fully-written prefix blocks for future
+        sharers, unmask the row, set its committed length/index, activate.
+        Registered blocks sit strictly below position P-1, so this row (and
+        every attacher) only ever writes PAST them — they are immutable
+        from here on (the prefix pool's safety invariant)."""
+        P = req.resume_len
+        if self.prefix_pool is not None and P > 1:
+            F = min((P - 1) // self.scfg.block_size,
+                    self.scfg.max_blocks_per_row)
+            if F > 0:
+                prompt = np.asarray(req.effective_prompt, np.int32)
+                self.prefix_pool.insert(
+                    prompt[:F * self.scfg.block_size],
+                    [int(x) for x in self.alloc.table[b, :F]])
+        self._masked.discard(b)
+        self.metrics.prefill(req.rid,
+                             max(P - 1 - int(self._prefill_hit[b]), 0),
+                             hit_tokens=int(self._prefill_hit[b]),
+                             chunks=int(self._prefill_chunks[b]))
+        self._lengths[b] = P
+        return state._replace(
+            length=state.length.at[b].set(P),
+            active=state.active.at[b].set(True),
+            tcache={**state.tcache,
+                    "index": state.tcache["index"].at[b].set(P - 1)},
+            dcache={**state.dcache,
+                    "index": state.dcache["index"].at[b].set(P - 1)})
+
+    def _abort_prefill(self, state: RowState, b: int,
+                       req: ServeRequest) -> RowState:
+        """Mid-prefill eviction (pool ran dry): free the row's blocks and
+        re-queue. Re-admission restarts the prefill — cheap when the prefix
+        cache still holds the chain (the eviction freed only this row's
+        table references, not the pool's pins)."""
+        self.alloc.free_row(b)
+        self._masked.discard(b)
+        self._slots[b] = None
+        self.sched.requeue(req)
+        self._aborted_pending.append(req.rid)
+        return state._replace(active=state.active.at[b].set(False))
+
+    def _advance_prefills(self, state: RowState) -> RowState:
+        """Advance mid-prefill rows by at most ONE chunk program per step —
+        the interleave policy: bounded prefill work per decode round keeps
+        running rows' TPOT bounded, while a newly admitted prompt still
+        reaches its first token in ceil(suffix/C) steps. Fully-cached rows
+        (empty suffix) and rows whose chunk just finished the suffix
+        activate THIS step."""
+        if self._chunk is None or not self._masked:
+            return state
+        budget = 1
+        for b in sorted(self._masked):
+            req = self._slots[b]
+            P = req.resume_len
+            if int(self._prefill_pos[b]) >= P - 1:
+                state = self._complete_prefill(state, b, req)
+                continue
+            if budget <= 0:
+                continue
+            budget -= 1
+            state, ok = self._run_chunk(state, b, req)
+            if ok is None:
+                state = self._abort_prefill(state, b, req)
+                continue
+            if not ok:
+                # non-finite target logits: fail cleanly, as on the legacy
+                # path — never decode from a poisoned cache
+                self.alloc.free_row(b)
+                self._masked.discard(b)
+                self.metrics.fail(req.rid, "non-finite prefill logits",
+                                  n_generated=req.resume_len - req.prompt_len)
+                self._failed_pending.append(req.rid)
+                self._slots[b] = None
+                continue
+            if int(self._prefill_pos[b]) >= P - 1:
+                state = self._complete_prefill(state, b, req)
+        return state
+
     # ------------------------------------------------------------- AR round
     def _ar_round(self, state: RowState) -> RowState:
         """gamma* = 0 fallback: one committed token per active row per round,
@@ -313,6 +542,14 @@ class PagedSpecServer:
             req = self.sched.try_admit(b)
             if req is None:
                 break                       # FCFS head-blocking
+            if self._chunk is not None:
+                # chunked path: stage the row mid-prefill; the suffix runs
+                # as interleaved chunk programs (_advance_prefills)
+                state = self._begin_prefill(state, b, req)
+                if lengths is not None:
+                    lengths[b] = 1          # mirrors the reset device length
+                self._slots[b] = req
+                continue
             state = self._sync_tables(state)
             state, ok = self._prefill_into(state, b, req)
             if not ok:
@@ -325,6 +562,7 @@ class PagedSpecServer:
                 self._failed_pending.append(req.rid)
                 state = state._replace(active=state.active.at[b].set(False))
                 continue
+            self.metrics.prefill(req.rid, max(req.resume_len - 1, 0))
             if lengths is not None:
                 # keep the host mirror current; a resumed request starts at
                 # its committed prefix, not its original prompt
@@ -341,7 +579,8 @@ class PagedSpecServer:
         instead of returning garbage."""
         for b in range(self.B):
             req = self._slots[b]
-            if req is None or lengths[b] < self._target_len[b]:
+            if (req is None or b in self._masked
+                    or lengths[b] < self._target_len[b]):
                 continue
             toks = np.asarray(state.tokens[b, :self._target_len[b]])
             gen = toks[req.prompt_len:]
@@ -403,6 +642,10 @@ class PagedSpecServer:
         re-admission the prefix is prefilled again and greedy decode resumes
         byte-identically (chaos-suite checked)."""
         req = self._slots[b]
+        if b in self._masked:
+            # mid-prefill victim: nothing committed beyond the resume prefix
+            # it is already re-prefilling — no new snapshot to take
+            return self._abort_prefill(state, b, req)
         cur = int(min(self._lengths[b], self._target_len[b]))
         req.resume_tokens = np.asarray(jax.device_get(
             state.tokens[b, :cur])).astype(np.int32)
@@ -423,8 +666,8 @@ class PagedSpecServer:
         Returns ``(state, preempted_rids)``."""
         preempted: List[int] = []
         for b in range(self.B):
-            if self._slots[b] is None:
-                continue
+            if self._slots[b] is None or b in self._masked:
+                continue   # mid-prefill rows grow chunk by chunk instead
             needed = (int(min(self._lengths[b], self._target_len[b]))
                       + self.gamma + 1)
             while self._slots[b] is not None and not self.sched.grow(b, needed):
@@ -527,9 +770,16 @@ class PagedSpecServer:
             for b, req in enumerate(self._slots):
                 if req is None or req.rid != rid:
                     continue
-                cur = int(min(self._lengths[b], self._target_len[b]))
-                req.tokens = np.asarray(jax.device_get(
-                    self._state.tokens[b, :cur]))
+                if b in self._masked:
+                    # cancelled mid-prefill: nothing decoded; the committed
+                    # prefix is just what re-admission would have prefilled
+                    req.tokens = np.asarray(req.effective_prompt, np.int32)
+                    self._masked.discard(b)
+                    cur = req.prompt_len
+                else:
+                    cur = int(min(self._lengths[b], self._target_len[b]))
+                    req.tokens = np.asarray(jax.device_get(
+                        self._state.tokens[b, :cur]))
                 self.alloc.free_row(b)          # KV blocks back to the pool
                 self.metrics.cancel(rid, cur - req.prompt_len)
                 self._slots[b] = None
@@ -559,6 +809,12 @@ class PagedSpecServer:
     def _drain_failed(self) -> List[int]:
         out, self._failed_pending = self._failed_pending, []
         return out
+
+    def _drain_aborted(self, seen: List[int]) -> List[int]:
+        """Mid-prefill evictions since the last step, minus rids already in
+        ``seen`` (capacity-driven aborts land in both bookkeeping paths)."""
+        out, self._aborted_pending = self._aborted_pending, []
+        return [r for r in out if r not in seen]
 
     def step(self) -> Optional[Dict]:
         """ONE serving round: apply scheduled faults, process cancellations,
@@ -596,8 +852,14 @@ class PagedSpecServer:
         elif delta < 0:
             self.alloc.release_seized(-delta)
         cancelled = self._process_cancels()
-        self._state = self._sync_tables(self._refill(self._state,
-                                                     self._lengths))
+        self._round_prefill_tokens = 0
+        self._round_prefill_chunks = 0
+        self._round_prefill_t = 0.0
+        self._state = self._refill(self._state, self._lengths)
+        # interleaved chunked prefill: one chunk program per step, BEFORE the
+        # decode round, so a row whose suffix completes decodes this step
+        self._state = self._advance_prefills(self._state)
+        self._state = self._sync_tables(self._state)
         expired = self.sched.drain_expired()
         if not any(r is not None for r in self._slots):
             self._batch_drained()
@@ -608,10 +870,20 @@ class PagedSpecServer:
                 # notification-only step so front ends see the events and
                 # the loop outlives the squeeze
                 return {"streams": {}, "finished": [], "cancelled": cancelled,
-                        "expired": expired, "failed": failed, "preempted": [],
+                        "expired": expired, "failed": failed,
+                        "preempted": self._drain_aborted([]),
                         "round": None, "queue_depth": len(self.sched.queue),
                         "n_live": 0}
             return None
+        if all(b in self._masked for b in range(self.B)
+               if self._slots[b] is not None):
+            # every occupied row is still mid-prefill: no decode round to
+            # run — deliver events and keep stepping (the next steps keep
+            # advancing chunks until a row activates)
+            return {"streams": {}, "finished": [], "cancelled": cancelled,
+                    "expired": expired, "failed": self._drain_failed(),
+                    "preempted": self._drain_aborted([]), "round": None,
+                    "queue_depth": len(self.sched.queue), "n_live": 0}
 
         # gamma/AR decision (paper Eq. 1, telemetry alpha): decided at batch
         # formation, then re-decided online while speculative. Spec->spec
@@ -634,6 +906,7 @@ class PagedSpecServer:
         # overcommit: grow every live row to this round's block demand,
         # evicting victims when the pool is dry; tables changed -> re-sync
         self._state, preempted = self._ensure_capacity(self._state)
+        preempted += self._drain_aborted(preempted)
         self._state = self._sync_tables(self._state)
         if not any(r is not None for r in self._slots):
             # extreme pressure evicted the whole batch; deliver and retry
@@ -750,8 +1023,8 @@ class PagedSpecServer:
         streams: Dict[int, np.ndarray] = {}
         tok_host = None
         for b, req in enumerate(self._slots):
-            if req is None:
-                continue
+            if req is None or b in self._masked:
+                continue        # mid-prefill: nothing committed yet
             cur = int(min(lengths[b], self._target_len[b]))
             if cur > req.prompt_len:
                 self.metrics.first_token(req.rid)   # idempotent
@@ -789,7 +1062,12 @@ class PagedSpecServer:
             blocks_read=blocks_read, blocks_written=blocks_written,
             rids=live_rids, t_wall=clock.wall(), queue_depth=queue_depth,
             n_preempted=n_preempted, n_expired=n_expired, n_failed=n_failed,
-            degraded=self._degraded, fault_delay=fault_delay))
+            degraded=self._degraded, fault_delay=fault_delay,
+            prefill_tokens=self._round_prefill_tokens,
+            prefill_chunks=self._round_prefill_chunks,
+            t_prefill=(self._round_prefill_t
+                       if self._round_prefill_chunks else None),
+            prefix_hit_rate=self.metrics.prefix_hit_rate()))
         if self.gamma > 0:
             if self.drift is None:
                 c = (self._c_override if self._c_override is not None
@@ -799,4 +1077,7 @@ class PagedSpecServer:
                                t_draft=phase_t.get("draft"),
                                t_verify=phase_t.get("verify"),
                                t_commit=phase_t.get("commit"),
+                               t_prefill=(self._round_prefill_t
+                                          if self._round_prefill_chunks
+                                          else None),
                                gamma=self.gamma)

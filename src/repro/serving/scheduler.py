@@ -63,10 +63,28 @@ class SchedulerConfig:
     overcommit: float = 1.0            # admission reservation divisor; 1.0 =
                                        # worst-case reservation, >1 admits on
                                        # expected demand + preempts on dry pool
+    prefill_chunk: Optional[int] = None  # tokens per prefill chunk, run
+                                       # interleaved with decode rounds; None
+                                       # = legacy bucketed all-at-once prefill
+    prefix_cache: bool = False         # shared-prefix block reuse (radix
+                                       # pool; cache/prefix_pool.py)
 
     @property
     def max_tokens_per_row(self) -> int:
         return self.max_blocks_per_row * self.block_size
+
+    @property
+    def chunked(self) -> bool:
+        """Chunked prefill path on? Prefix caching forces it: attaching
+        cached blocks means prefill starts mid-sequence, which the fixed
+        per-bucket whole-prompt program cannot do."""
+        return self.prefill_chunk is not None or self.prefix_cache
+
+    @property
+    def effective_chunk(self) -> int:
+        """Chunk budget when the chunked path runs (prefix_cache without an
+        explicit budget prefills the whole suffix as one chunk)."""
+        return self.prefill_chunk or self.prefill_buckets[-1]
 
 
 @dataclass
@@ -133,22 +151,27 @@ class Scheduler:
                     f"allocatable pool {pool_tokens} "
                     f"({self.cfg.num_blocks - 1} blocks x "
                     f"{self.cfg.block_size}; block 0 is reserved)")
-            self.bucket(req.prompt_len)  # over-bucket prompts fail loudly
-                                         # here, not mid-flight in the prefill
-            if self.cfg.overcommit > 1.0:
-                # a preempted request resumes by prefilling its committed
-                # prefix (up to prompt_len + max_new - 1 tokens); that
-                # resume-prefill must also fit a bucket, or eviction would
-                # strand the request un-resumable
-                try:
-                    self.bucket(req.prompt_len + req.max_new - 1)
-                except ValueError:
-                    raise ValueError(
-                        f"request {req.rid}: committed prefix can reach "
-                        f"{req.prompt_len + req.max_new - 1} tokens, past "
-                        f"the largest prefill bucket "
-                        f"{self.cfg.prefill_buckets[-1]} — not admissible "
-                        f"under overcommit (preemption could strand it)")
+            if not self.cfg.chunked:
+                # chunked prefill has no bucket bound — any prompt that fits
+                # the row fits the chunk loop, and a preempted request's
+                # committed prefix re-prefills in chunks too
+                self.bucket(req.prompt_len)  # over-bucket prompts fail loudly
+                                             # here, not mid-flight in prefill
+                if self.cfg.overcommit > 1.0:
+                    # a preempted request resumes by prefilling its committed
+                    # prefix (up to prompt_len + max_new - 1 tokens); that
+                    # resume-prefill must also fit a bucket, or eviction
+                    # would strand the request un-resumable
+                    try:
+                        self.bucket(req.prompt_len + req.max_new - 1)
+                    except ValueError:
+                        raise ValueError(
+                            f"request {req.rid}: committed prefix can reach "
+                            f"{req.prompt_len + req.max_new - 1} tokens, "
+                            f"past the largest prefill bucket "
+                            f"{self.cfg.prefill_buckets[-1]} — not "
+                            f"admissible under overcommit (preemption could "
+                            f"strand it)")
         except ValueError as e:
             self.metrics.reject(req.rid, str(e))
             raise
@@ -179,8 +202,16 @@ class Scheduler:
         if self.cfg.overcommit <= 1.0:
             return worst
         start = req.resume_len
-        remaining = req.prompt_len + req.max_new - start
         floor = self.cfg.gamma_max + 1 + self.cfg.block_size
+        if self.cfg.chunked:
+            # chunked prefill grows residency chunk by chunk (the server
+            # ``grow``s before every chunk), so admission charges only the
+            # FIRST chunk of prefill plus the progress floor — queued
+            # requests stop paying up-front for prompts they prefill
+            # incrementally (a prefix-cache hit shrinks even that)
+            expected = min(start, self.cfg.effective_chunk) + floor
+            return min(worst, expected)
+        remaining = req.prompt_len + req.max_new - start
         expected = start + max(int(np.ceil(remaining / self.cfg.overcommit)),
                                floor)
         return min(worst, expected)

@@ -3,12 +3,14 @@
 Applies a flat op list to a BlockAllocator while mirroring expected state
 host-side and auditing after every op — the conservation law under test:
 
-    free + live + seized == num_blocks - 1
+    free + live + cached + seized == num_blocks - 1
 
-with 'live' = DISTINCT referenced blocks (copy-on-write branches share
-prefix blocks). Used by tests/test_allocator_properties.py (hypothesis
-drives the op list) and tests/test_cow_fork.py (seeded random fallback, so
-bare checkouts keep the coverage).
+with 'live' = DISTINCT referenced blocks NOT pinned by the prefix cache
+(copy-on-write branches share prefix blocks; cached blocks may be shared
+across row families and count in their own partition whether idle or
+attached). Used by tests/test_allocator_properties.py (hypothesis drives
+the op list) and tests/test_cow_fork.py (seeded random fallback, so bare
+checkouts keep the coverage).
 """
 from repro.cache.paged_kv import BlockAllocator
 
@@ -18,7 +20,8 @@ MAX_BLOCKS = 8
 BATCH = 4
 
 OP_KINDS = ["admit", "grow", "shrink", "preempt", "complete",
-            "seize", "release", "fork", "growbr", "adopt", "dropbr"]
+            "seize", "release", "fork", "growbr", "adopt", "dropbr",
+            "cache", "attach", "evict"]
 
 
 def _blocks_for(t):
@@ -32,6 +35,9 @@ def run_allocator_model(ops, alloc=None):
     tokens = [0] * BATCH          # model: committed tokens per live row
     live = [False] * BATCH
     branches = {}                 # row -> [branch tokens] while forked
+    cached = []                   # block ids pinned into the prefix cache,
+                                  # registration order (the model's "chain")
+    attached = [[] for _ in range(BATCH)]   # cached blocks in row's prefix
 
     def family_blocks(b):
         n = _blocks_for(tokens[b])
@@ -41,7 +47,10 @@ def run_allocator_model(ops, alloc=None):
         return n
 
     def expected_live():
-        return sum(family_blocks(b) for b in range(BATCH) if live[b])
+        # cached blocks are their own partition even while attached — a
+        # row family's contribution to 'live' is its blocks minus them
+        return sum(family_blocks(b) - len(attached[b])
+                   for b in range(BATCH) if live[b])
 
     for kind, row, amount in ops:
         if kind == "admit" and not live[row]:
@@ -54,14 +63,18 @@ def run_allocator_model(ops, alloc=None):
                 tokens[row] = n
         elif kind == "shrink" and live[row] and row not in branches:
             # rollback after a rejected speculation: keep a shorter prefix
-            n = max(1, tokens[row] - amount)
+            # (never below the attached cached chain — the serving path only
+            # ever rolls back past its own suffix writes)
+            n = max(1, len(attached[row]) * BLOCK_SIZE, tokens[row] - amount)
             alloc.free_tail(row, n)
             tokens[row] = n
         elif kind in ("preempt", "complete") and live[row]:
             family = family_blocks(row)
             freed = alloc.free_row(row)
-            assert freed == family
+            # attached cached blocks drop a reference but stay pinned
+            assert freed == family - len(attached[row])
             live[row], tokens[row] = False, 0
+            attached[row] = []
             branches.pop(row, None)
         elif kind == "fork" and live[row] and row not in branches:
             n_br = 1 + amount % 3
@@ -87,12 +100,43 @@ def run_allocator_model(ops, alloc=None):
             alloc.seize(amount)
         elif kind == "release":
             alloc.release_seized(amount if amount else None)
+        elif kind == "cache" and live[row] and row not in branches:
+            # register the row's full prefix blocks (the serving path caches
+            # blocks strictly below the first decode position; sharing and
+            # refcounts are what the model checks, not token content)
+            full = tokens[row] // BLOCK_SIZE
+            for j in range(full):
+                blk = int(alloc.table[row, j])
+                if blk not in alloc.cached:
+                    alloc.cache_ref(blk)
+                    cached.append(blk)
+                    if blk not in attached[row]:
+                        attached[row].append(blk)
+        elif kind == "attach" and not live[row] and cached:
+            # CoW attach of a cached chain into an empty row, then the row
+            # "prefills" (grows) its own suffix past it
+            k = 1 + amount % min(len(cached), MAX_BLOCKS)
+            chain = cached[:k]
+            alloc.attach(row, chain)
+            live[row] = True
+            tokens[row] = k * BLOCK_SIZE
+            attached[row] = list(chain)
+        elif kind == "evict":
+            # LRU-style eviction: uncache blocks nobody is attached to
+            idle = [blk for blk in cached if int(alloc.refcnt[blk]) == 1]
+            for blk in idle[:max(amount, 1)]:
+                assert alloc.uncache(blk) == 1
+                cached.remove(blk)
 
         counts = alloc.audit()    # asserts conservation + refcounts + no alias
         assert counts["live"] == expected_live()
+        assert counts["cached"] == len(cached)
 
     # drain everything: the pool must come back whole
     for b in range(BATCH):
         alloc.free_row(b)
+    for blk in cached:
+        alloc.uncache(blk)
     alloc.release_seized()
-    assert alloc.audit() == {"free": NUM_BLOCKS - 1, "live": 0, "seized": 0}
+    assert alloc.audit() == {"free": NUM_BLOCKS - 1, "live": 0,
+                             "cached": 0, "seized": 0}

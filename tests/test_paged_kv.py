@@ -144,11 +144,11 @@ def test_seize_and_release_only_touch_free_blocks():
     assert alloc.num_free == 0
     assert [int(x) for x in alloc.table[0, :3]] == live
     assert not alloc.ensure(0, 16)             # pool dry under seizure
-    assert alloc.audit() == {"free": 0, "live": 3, "seized": 4}
+    assert alloc.audit() == {"free": 0, "live": 3, "cached": 0, "seized": 4}
     assert alloc.release_seized(2) == 2
     assert alloc.ensure(0, 16)                 # headroom back
     assert alloc.release_seized() == 2
-    assert alloc.audit() == {"free": 3, "live": 4, "seized": 0}
+    assert alloc.audit() == {"free": 3, "live": 4, "cached": 0, "seized": 0}
 
 
 def test_allocator_reserves_null_block_and_bounds():

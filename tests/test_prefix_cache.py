@@ -1,0 +1,281 @@
+"""Chunked prefill + shared-prefix KV cache: byte-identity and accounting.
+
+The two acceptance bars of DESIGN.md §4/§10:
+  * outputs are token-for-token identical to the legacy all-at-once prefill
+    path (and therefore to each request's standalone greedy AR
+    continuation) — chunk grouping and attached cached blocks change WHERE
+    prefix KV comes from, never what it contains;
+  * the allocator's four-way partition (free/live/cached/seized) stays
+    exact under arbitrary attach/insert/evict interleavings, and the pool
+    returns whole after a flush (zero leaked blocks).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache.paged_kv import BlockAllocator
+from repro.cache.prefix_pool import PrefixPool
+from repro.configs import registry
+from repro.core.engine import autoregressive_generate
+from repro.models.model import build_model
+from repro.serving import PagedSpecServer, SchedulerConfig, ServeRequest
+
+NB, BS, MB, B = 32, 4, 8, 4
+
+
+def _pair(arch="llama3.2-1b"):
+    cfg_t = registry.smoke_config(arch)
+    cfg_d = cfg_t.replace(num_layers=max(1, cfg_t.num_layers - 1),
+                          name="draft")
+    mt, md = build_model(cfg_t), build_model(cfg_d)
+    return (mt, md, mt.init(jax.random.PRNGKey(0)),
+            md.init(jax.random.PRNGKey(7)), cfg_t)
+
+
+def _assert_matches_ar(mt, pt, done):
+    for r in done:
+        ref = autoregressive_generate(
+            mt, pt, jnp.asarray(np.asarray(r.prompt)[None]), r.max_new)
+        np.testing.assert_array_equal(r.tokens, np.asarray(ref[0]))
+
+
+def _assert_pool_whole(srv):
+    srv.alloc.release_seized()
+    if srv.prefix_pool is not None:
+        srv.prefix_pool.flush()
+    assert srv.alloc.audit() == {
+        "free": srv.scfg.num_blocks - 1, "live": 0, "cached": 0, "seized": 0}
+
+
+# ------------------------------------------------ pool partition property
+def test_prefix_pool_partition_under_random_interleavings():
+    """Random admit(lookup+attach)/complete(insert)/evict/pressure
+    interleavings: after EVERY op the allocator's census must balance and
+    the cached partition must equal the pool's node count — the same
+    invariant tests/_allocator_model.py drives at the raw-allocator level,
+    here through the radix pool's own lifecycle."""
+    rng = np.random.default_rng(0)
+    alloc = BlockAllocator(NB, BS, MB, B)
+    pool = PrefixPool(alloc)
+    common = rng.integers(0, 3, MB * BS)      # shared head => real hits
+    rows = {}                                 # row -> (tokens, n_tokens)
+    for _ in range(300):
+        op = rng.choice(["admit", "admit", "complete", "evict", "pressure"])
+        if op == "admit":
+            empty = [b for b in range(B) if b not in rows]
+            if not empty:
+                continue
+            b = int(rng.choice(empty))
+            k = int(rng.integers(0, MB * BS // 2))
+            L = int(rng.integers(2, MB * BS))
+            toks = np.concatenate(
+                [common[:k], rng.integers(0, 3, max(L - k, 0))])[:L]
+            L = len(toks)
+            cap = min((L - 1) // BS, MB)
+            hit = pool.lookup(toks, cap) if cap > 0 else []
+            if hit:
+                alloc.attach(b, hit)
+            if alloc.ensure(b, L):
+                rows[b] = (toks, L)
+            else:
+                alloc.free_row(b)
+        elif op == "complete" and rows:
+            b = int(rng.choice(list(rows)))
+            toks, L = rows.pop(b)
+            F = min((L - 1) // BS, MB)
+            if F > 0 and rng.random() < 0.8:
+                pool.insert(toks[:F * BS],
+                            [int(x) for x in alloc.table[b, :F]])
+            alloc.free_row(b)
+        elif op == "evict":
+            pool.reclaim(int(rng.integers(1, 4)))
+        elif op == "pressure":
+            alloc.seize(int(rng.integers(1, 6)))
+            alloc.release_seized()
+        counts = alloc.audit()
+        assert counts["cached"] == pool.num_nodes
+    for b in list(rows):
+        alloc.free_row(b)
+    pool.flush()
+    assert pool.num_nodes == 0
+    assert alloc.audit() == {"free": NB - 1, "live": 0,
+                             "cached": 0, "seized": 0}
+    assert pool.hits > 0 and pool.evicted_blocks > 0   # the driver actually
+                                                       # exercised both paths
+
+
+def test_pool_reclaim_spares_attached_blocks_and_respects_lru():
+    alloc = BlockAllocator(NB, BS, MB, B)
+    pool = PrefixPool(alloc)
+    t_a = np.arange(8)
+    t_b = np.concatenate([np.arange(4), np.arange(10, 14)])  # shares block 0
+    assert alloc.ensure(0, 8)
+    pool.insert(t_a, [int(x) for x in alloc.table[0, :2]])
+    # a second row attaches the full chain: both blocks gain a table ref
+    chain = pool.lookup(t_a, 2)
+    assert len(chain) == 2
+    alloc.attach(1, chain)
+    assert pool.lookup(t_b, 2) == chain[:1]   # diverges after block 0
+    # nothing is evictable while rows hold references
+    assert pool.reclaim(4) == 0 and pool.num_nodes == 2
+    alloc.free_row(0)
+    alloc.free_row(1)
+    # leaf first: one block frees the leaf, the root block only after
+    assert pool.reclaim(1) == 1 and pool.num_nodes == 1
+    assert pool.flush() == 1
+    assert alloc.audit() == {"free": NB - 1, "live": 0,
+                             "cached": 0, "seized": 0}
+
+
+# ------------------------------------------------------ byte identity: chunks
+RAGGED = [(5, 8), (9, 12), (6, 4), (13, 10), (7, 6), (4, 9), (11, 5)]
+
+
+def _serve(mt, md, pt, pd, cfg, reqs, **scfg_kw):
+    scfg = SchedulerConfig(**{
+        "max_batch": 3, "block_size": 4, "num_blocks": 64,
+        "max_blocks_per_row": 12, "gamma_max": 6,
+        "prefill_buckets": (8, 16), **scfg_kw})
+    srv = PagedSpecServer(mt, md, pt, pd, scfg,
+                          cost_coefficient=scfg_kw.get("cost_coefficient"))
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run()
+    assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
+    return srv, done
+
+
+@pytest.mark.parametrize("chunk", [4, 16])
+def test_chunked_prefill_matches_all_at_once(chunk):
+    """Chunked interleaved prefill vs the legacy bucketed path: identical
+    committed tokens for every request (speculative rounds)."""
+    mt, md, pt, pd, cfg = _pair()
+    rng = np.random.default_rng(0)
+    reqs = [ServeRequest(i, rng.integers(0, cfg.vocab_size, P), new)
+            for i, (P, new) in enumerate(RAGGED)]
+    srv, done = _serve(mt, md, pt, pd, cfg, reqs, prefill_chunk=chunk)
+    assert srv.metrics.n_spec_rounds > 0
+    _assert_matches_ar(mt, pt, done)
+    _assert_pool_whole(srv)
+    s = srv.metrics.summary()
+    assert s["prefill_tokens"] == sum(p - 1 for p, _ in RAGGED)
+    assert s["chunks_per_prefill"] >= 1.0
+
+
+def test_chunked_prefill_matches_all_at_once_ar_rounds():
+    """Same identity under pure AR rounds (cost model vetoes speculation)."""
+    mt, md, pt, pd, cfg = _pair()
+    rng = np.random.default_rng(1)
+    reqs = [ServeRequest(i, rng.integers(0, cfg.vocab_size, P), new)
+            for i, (P, new) in enumerate([(5, 6), (9, 4), (7, 8), (12, 5)])]
+    srv, done = _serve(mt, md, pt, pd, cfg, reqs, prefill_chunk=4,
+                       cost_coefficient=1.5)
+    assert srv.gamma == 0
+    _assert_matches_ar(mt, pt, done)
+    _assert_pool_whole(srv)
+
+
+# ------------------------------------------- byte identity: shared prefixes
+def test_shared_prefix_hits_and_stays_byte_identical():
+    """>= 4 clients sharing a system prompt: later admissions attach cached
+    blocks (nonzero hit-rate), outputs stay exactly each request's own
+    greedy AR continuation, and the pool returns whole."""
+    mt, md, pt, pd, cfg = _pair()
+    rng = np.random.default_rng(2)
+    system = rng.integers(0, cfg.vocab_size, 12)       # 3 full blocks
+    reqs = [ServeRequest(i, np.concatenate(
+                [system, rng.integers(0, cfg.vocab_size, 1 + (i % 4))]),
+                4 + (i % 5))
+            for i in range(6)]
+    srv, done = _serve(mt, md, pt, pd, cfg, reqs, max_batch=2,
+                       prefix_cache=True, prefill_chunk=4)
+    s = srv.metrics.summary()
+    assert s["prefix_hit_tokens"] > 0
+    assert s["prefix_hit_rate"] > 0
+    assert srv.prefix_pool.hits > 0
+    _assert_matches_ar(mt, pt, done)
+    _assert_pool_whole(srv)
+
+
+def test_shared_prefix_identity_under_ar_rounds():
+    mt, md, pt, pd, cfg = _pair()
+    rng = np.random.default_rng(3)
+    system = rng.integers(0, cfg.vocab_size, 9)        # 2 full blocks
+    reqs = [ServeRequest(i, np.concatenate(
+                [system, rng.integers(0, cfg.vocab_size, 2 + i)]), 5)
+            for i in range(4)]
+    srv, done = _serve(mt, md, pt, pd, cfg, reqs, max_batch=2,
+                       prefix_cache=True, cost_coefficient=1.5)
+    assert srv.gamma == 0
+    assert srv.metrics.summary()["prefix_hit_tokens"] > 0
+    _assert_matches_ar(mt, pt, done)
+    _assert_pool_whole(srv)
+
+
+def test_prefix_cache_under_pool_pressure_evicts_and_survives():
+    """A pool too small to hold everything: eviction (the allocator's
+    reclaimer hook) must fire and outputs must stay exact."""
+    mt, md, pt, pd, cfg = _pair()
+    rng = np.random.default_rng(4)
+    system = rng.integers(0, cfg.vocab_size, 8)
+    reqs = [ServeRequest(i, np.concatenate(
+                [system, rng.integers(0, cfg.vocab_size, 3 + i)]), 6)
+            for i in range(5)]
+    srv, done = _serve(mt, md, pt, pd, cfg, reqs, max_batch=2,
+                       num_blocks=24, max_blocks_per_row=8,
+                       prefix_cache=True, prefill_chunk=4)
+    _assert_matches_ar(mt, pt, done)
+    _assert_pool_whole(srv)
+
+
+# ------------------------------------------------------------- plan plumbing
+def test_planner_stamps_chunked_prefill_and_prefix_cache():
+    from repro.api import DeploymentSpec, Planner
+    from repro.api.plan import ExecutionPlan
+    spec = DeploymentSpec(batch_size=4, prompt_lens=(5, 40),
+                          max_new=(4, 12), streaming=True,
+                          shared_prefix_len=16, cost_coefficient=0.2)
+    plan = Planner(spec).plan()
+    assert plan.cache.kind == "paged"
+    assert plan.cache.prefix_cache and plan.cache.prefill_chunk is not None
+    assert any("chunked prefill" in r for r in plan.rationale)
+    assert any("prefix cache" in r for r in plan.rationale)
+    restored = ExecutionPlan.from_json(plan.to_json())
+    assert restored == plan
+    # chunked-prefill knobs are paged-only
+    import dataclasses
+    with pytest.raises(ValueError, match="paged"):
+        dataclasses.replace(plan, batching="single",
+                            cache=dataclasses.replace(plan.cache, kind="ring"))
+
+
+def test_overcommit_planner_chunks_instead_of_extending_buckets():
+    from repro.api import DeploymentSpec, Planner
+    spec = DeploymentSpec(batch_size=4, prompt_lens=(5, 11),
+                          max_new=(4, 12), streaming=True,
+                          max_pool_blocks=12, cost_coefficient=0.2)
+    plan = Planner(spec).plan()
+    assert plan.cache.overcommit > 1.0
+    assert plan.cache.prefill_chunk is not None
+    # buckets cover the PROMPTS only — resume prefixes ride the chunk loop
+    assert max(plan.cache.prefill_buckets) < 11 + 12 - 1
+
+
+def test_scheduler_validate_relaxed_when_chunked():
+    # resume prefix can reach 8 + 12 - 1 = 19 tokens, past the largest
+    # bucket: legacy overcommit rejects at submit (preemption could strand
+    # the request un-resumable); the chunked path has no bucket bound
+    from repro.serving.scheduler import Scheduler
+    kw = dict(max_batch=2, block_size=4, num_blocks=32,
+              max_blocks_per_row=8, gamma_max=4,
+              prefill_buckets=(8,), overcommit=2.0)
+    req = ServeRequest(0, np.arange(8), 12)
+    legacy = Scheduler(SchedulerConfig(**kw), BlockAllocator(32, 4, 8, 2))
+    with pytest.raises(ValueError, match="overcommit"):
+        legacy.validate(req)
+    chunked = Scheduler(SchedulerConfig(**kw, prefill_chunk=4),
+                        BlockAllocator(32, 4, 8, 2))
+    chunked.validate(req)
+    # admission charges one chunk + the progress floor, not the worst case
+    assert chunked.admit_tokens(req) == min(8, 4) + 4 + 1 + 4

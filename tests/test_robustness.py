@@ -58,8 +58,10 @@ def _overcommit_cfg(**kw):
 def _assert_pool_whole(srv):
     """The zero-leak acceptance invariant, via the allocator's own census."""
     srv.alloc.release_seized()
+    if srv.prefix_pool is not None:
+        srv.prefix_pool.flush()
     assert srv.alloc.audit() == {
-        "free": srv.scfg.num_blocks - 1, "live": 0, "seized": 0}
+        "free": srv.scfg.num_blocks - 1, "live": 0, "cached": 0, "seized": 0}
 
 
 def _assert_matches_ar(mt, pt, done):
